@@ -1,0 +1,47 @@
+"""Structured-JL gradient compression: wire bytes, reconstruction error,
+error-feedback effect (the distributed-optimization claim)."""
+from __future__ import annotations
+
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import compression as C
+
+
+def run() -> List[str]:
+    rows = []
+    n = 1 << 16
+    g = {"w": jax.random.normal(jax.random.PRNGKey(0), (n,))}
+    for ratio in [2, 4, 8, 16]:
+        cc = C.CompressionConfig(chunk=4096, ratio=ratio, min_size=1)
+        raw, comp = C.wire_bytes(g, cc)
+        sk = C.compress_tree(g, cc)
+        rec = C.decompress_tree(sk, g, cc)
+        rel = float(jnp.linalg.norm(rec["w"] - g["w"])
+                    / jnp.linalg.norm(g["w"]))
+        rows.append(f"compression/ratio{ratio},0.0,"
+                    f"wire_reduction={raw/comp:.1f}x;one_shot_rel={rel:.3f}")
+    # error feedback over steps: residual of accumulated signal
+    cc = C.CompressionConfig(chunk=4096, ratio=8, min_size=1)
+    err = C.init_error(g)
+    applied = jnp.zeros(n)
+    for step in range(10):
+        cct = C.CompressionConfig(chunk=4096, ratio=8, seed=step, min_size=1)
+        _, rec, err = C.roundtrip_with_feedback(g, err, cct)
+        applied = applied + rec["w"]
+    drift = float(jnp.linalg.norm(applied + err["w"] - 10 * g["w"])
+                  / jnp.linalg.norm(10 * g["w"]))
+    rows.append(f"compression/error_feedback_10steps,0.0,"
+                f"accumulated_drift={drift:.2e}")
+    return rows
+
+
+def main():
+    for row in run():
+        print(row)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""Paper speed/space claim: structured matvec time & storage vs dense.
+
+Measures wall time of the jit'd fast paths on this host (CPU) at sizes
+where the asymptotics show, plus the analytic FLOPs/storage model used by
+the roofline (the TPU numbers come from the dry-run, not wall time here).
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import structured as S
+from repro.core import transforms as T
+
+SIZES = [(1024, 1024), (4096, 4096)]
+BATCH = 32
+KINDS = ["unstructured", "circulant", "toeplitz"]
+
+
+def _time(fn, *args, reps=5) -> float:
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run() -> List[str]:
+    rows = []
+    for m, n in SIZES:
+        x = jax.random.normal(jax.random.PRNGKey(0), (BATCH, n))
+        for kind in KINDS:
+            params = S.init(jax.random.PRNGKey(1), kind, m, n)
+            fast = jax.jit(lambda p, xx: S.matvec(kind, p, xx, m))
+            us = _time(fast, params, x)
+            rows.append(
+                f"speed/matvec/{kind}/{m}x{n},{us:.1f},"
+                f"storage_floats={S.storage_floats(kind, m, n)}")
+        # FWHT vs dense hadamard matmul
+        xf = jax.random.normal(jax.random.PRNGKey(2), (BATCH, n))
+        f1 = jax.jit(T.fwht)
+        us1 = _time(f1, xf)
+        h = T.hadamard(n)
+        f2 = jax.jit(lambda a: a @ h.T)
+        us2 = _time(f2, xf)
+        rows.append(f"speed/fwht/butterfly/{n},{us1:.1f},dense_us={us2:.1f}")
+    return rows
+
+
+def main():
+    for row in run():
+        print(row)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""SRF attention (paper technique in the framework): approximation quality
+vs feature count / structure class, and serving-cache bytes vs context
+length (the space-complexity table)."""
+from __future__ import annotations
+
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import srf_attention as A
+from repro.configs import registry
+from repro.models import transformer as T
+
+
+def run() -> List[str]:
+    rows = []
+    b, h, l, d = 2, 2, 128, 64
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (b, h, l, d)) * 0.5
+    k = jax.random.normal(ks[1], (b, h, l, d)) * 0.5
+    v = jax.random.normal(ks[2], (b, h, l, d))
+    ref = A.reference_softmax(q, k, v, causal=True)
+    for kind in ["circulant", "toeplitz", "ldr", "unstructured"]:
+        for m in [64, 256, 1024]:
+            cfg = A.SRFConfig(kind=kind, n_features=m, head_dim=d, chunk=32)
+            params = A.init(jax.random.PRNGKey(1), cfg, h)
+            pq = A.feature_map(cfg, params, q, True)
+            pk = A.feature_map(cfg, params, k, False)
+            out = A.attention_causal(cfg, pq, pk, v)
+            corr = float(jnp.corrcoef(out.ravel(), ref.ravel())[0, 1])
+            mae = float(jnp.abs(out - ref).mean())
+            rows.append(f"srf_quality/{kind}/m{m},0.0,"
+                        f"corr={corr:.4f};mae={mae:.4f}")
+
+    # serving cache bytes: KV vs SRF state across context lengths
+    def cache_bytes(cfg, max_len):
+        c = jax.eval_shape(lambda: T.init_serve_cache(cfg, 1, max_len))
+        return sum(int(np.prod(s.shape)) * s.dtype.itemsize
+                   for s in jax.tree.leaves(c))
+    full = registry.reduced("qwen3-4b")
+    srf = registry.reduced("qwen3-4b", attn_impl="srf")
+    for L in [1024, 32768, 524288]:
+        rows.append(
+            f"srf_cache/L{L},0.0,kv_bytes={cache_bytes(full, L)};"
+            f"srf_bytes={cache_bytes(srf, L)}")
+    return rows
+
+
+def main():
+    for row in run():
+        print(row)
+
+
+if __name__ == "__main__":
+    main()

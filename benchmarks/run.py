@@ -1,0 +1,42 @@
+"""Benchmark harness — one module per paper table/claim. Prints
+``name,us_per_call,derived`` CSV rows (spec format).
+
+    PYTHONPATH=src python -m benchmarks.run [--only coherence,speed]
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+SUITES = ["coherence", "speed", "compression", "srf_attention",
+          "kernel_quality"]
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma list of suites; default all")
+    ap.add_argument("--roofline-in", default=None,
+                    help="dryrun jsonl to append roofline rows")
+    args = ap.parse_args(argv)
+    picked = args.only.split(",") if args.only else SUITES
+
+    print("name,us_per_call,derived")
+    for suite in picked:
+        mod = __import__(f"benchmarks.bench_{suite}", fromlist=["run"])
+        t0 = time.time()
+        for row in mod.run():
+            print(row, flush=True)
+        print(f"suite/{suite}/total,{(time.time()-t0)*1e6:.0f},done",
+              flush=True)
+    if args.roofline_in and os.path.exists(args.roofline_in):
+        from benchmarks import roofline
+        for row in roofline.run(args.roofline_in):
+            print(row)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,7 @@
+"""Architecture configs (one file per assigned arch) + registry + shapes."""
+from .base import ModelConfig, SRFAttnConfig
+from . import registry, shapes
+from .registry import ARCHS, get, reduced
+
+__all__ = ["ModelConfig", "SRFAttnConfig", "registry", "shapes", "ARCHS",
+           "get", "reduced"]

@@ -1,0 +1,9 @@
+"""Core P-model library: the paper's contribution as composable JAX modules."""
+from . import coherence, estimators, features, pmodel, srf_attention, structured, transforms
+from .pmodel import PModelSpec
+from .srf_attention import SRFConfig
+
+__all__ = [
+    "coherence", "estimators", "features", "pmodel", "srf_attention",
+    "structured", "transforms", "PModelSpec", "SRFConfig",
+]

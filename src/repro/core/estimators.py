@@ -1,0 +1,114 @@
+"""Closed-form kernels Lambda_f and their structured estimators (paper Sec 2.1).
+
+Closed forms (k=2, beta=product, Psi=mean, r ~ N(0, I_n)):
+
+  identity   E[<r,v1><r,v2>]            = <v1, v2>               (JL / ex. 1)
+  heaviside  E[1{y1>=0} 1{y2>=0}]       = (pi - theta) / (2 pi)  (ex. 2*)
+  sign       E[sgn(y1) sgn(y2)]         = 1 - 2 theta / pi
+  relu       E[relu(y1) relu(y2)]       = |v1||v2| (sin t + (pi-t) cos t)/(2 pi)
+                                          (arc-cosine b=1, Cho & Saul)
+  trig       E[cos((y1-y2)/s)]          = exp(-||v1-v2||^2/(2 s^2))  (Gaussian)
+  softmax    E[phi+(v1) phi+(v2)]       = exp(<v1, v2>)
+
+(*) The paper states theta/(2pi) for the angular example; the product-form
+expectation is (pi-theta)/(2pi) — theta/(2pi) is half the Hamming/hashing
+distance E[(h1-h2)^2]/2. Both are exposed; tests pin both numerically.
+"""
+from __future__ import annotations
+
+import math
+from typing import Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+from . import features, pmodel
+from .pmodel import PModelSpec
+
+
+def angle(v1: jax.Array, v2: jax.Array) -> jax.Array:
+    c = jnp.sum(v1 * v2, -1) / (
+        jnp.linalg.norm(v1, axis=-1) * jnp.linalg.norm(v2, axis=-1))
+    return jnp.arccos(jnp.clip(c, -1.0, 1.0))
+
+
+# --- exact closed forms -------------------------------------------------------
+
+def k_inner(v1, v2):
+    return jnp.sum(v1 * v2, -1)
+
+
+def k_angular_product(v1, v2):
+    """E[h(y1) h(y2)], h = heaviside:  (pi - theta)/(2 pi)."""
+    return (math.pi - angle(v1, v2)) / (2 * math.pi)
+
+
+def k_angular_paper(v1, v2):
+    """theta/(2 pi) — the quantity the paper's ex. 2 names Lambda_f."""
+    return angle(v1, v2) / (2 * math.pi)
+
+
+def k_sign(v1, v2):
+    return 1.0 - 2.0 * angle(v1, v2) / math.pi
+
+
+def k_arccos1(v1, v2):
+    """Arc-cosine kernel b=1 (Cho & Saul '09): |v1||v2| J1(theta)/(2 pi),
+    J1(t) = sin t + (pi - t) cos t."""
+    t = angle(v1, v2)
+    n1 = jnp.linalg.norm(v1, axis=-1)
+    n2 = jnp.linalg.norm(v2, axis=-1)
+    return n1 * n2 * (jnp.sin(t) + (math.pi - t) * jnp.cos(t)) / (2 * math.pi)
+
+
+def k_gaussian(v1, v2, sigma: float = 1.0):
+    d2 = jnp.sum((v1 - v2) ** 2, -1)
+    return jnp.exp(-d2 / (2.0 * sigma ** 2))
+
+
+def k_softmax(v1, v2):
+    return jnp.exp(jnp.sum(v1 * v2, -1))
+
+
+EXACT: Dict[str, Callable] = {
+    "identity": k_inner,
+    "heaviside": k_angular_product,
+    "sign": k_sign,
+    "relu": k_arccos1,
+    "trig": k_gaussian,
+    "softmax": k_softmax,
+}
+
+
+# --- structured estimators ------------------------------------------------------
+
+def estimate(spec: PModelSpec, params, fname: str, v1: jax.Array, v2: jax.Array,
+             sigma: float = 1.0) -> jax.Array:
+    """Lambda_f^struct(v1, v2) = <phi(v1), phi(v2)>  (eq. 13)."""
+    if fname == "trig":
+        p1 = features.phi_trig(spec, params, v1, sigma)
+        p2 = features.phi_trig(spec, params, v2, sigma)
+    elif fname == "softmax":
+        p1 = features.phi_softmax_pos(spec, params, v1, stabilize=False)
+        p2 = features.phi_softmax_pos(spec, params, v2, stabilize=False)
+    else:
+        p1 = features.phi_scalar(spec, params, v1, fname)
+        p2 = features.phi_scalar(spec, params, v2, fname)
+    return jnp.sum(p1 * p2, -1)
+
+
+def exact(fname: str, v1, v2, sigma: float = 1.0):
+    if fname == "trig":
+        return k_gaussian(v1, v2, sigma)
+    return EXACT[fname](v1, v2)
+
+
+def mc_error(rng: jax.Array, spec: PModelSpec, fname: str, v1, v2,
+             n_trials: int = 32, sigma: float = 1.0):
+    """Mean absolute estimation error over fresh P-model draws (benchmark)."""
+    def one(k):
+        params = pmodel.init(k, spec)
+        return jnp.abs(estimate(spec, params, fname, v1, v2, sigma)
+                       - exact(fname, v1, v2, sigma))
+    errs = jax.vmap(one)(jax.random.split(rng, n_trials))
+    return errs.mean(), errs.std()

@@ -1,0 +1,97 @@
+"""Pointwise nonlinearities f and the feature maps phi of the paper.
+
+The estimator (eq. 13, k=2, beta=product, Psi=mean) is
+    Lambda_f(v1, v2)  ~=  < phi(v1), phi(v2) >
+with  phi(v) = f(A D1 H D0 v) / sqrt(m)   (f applied pointwise).
+
+Each feature map returns features scaled so the dot product is the
+unbiased estimator of the corresponding closed-form kernel
+(core/estimators.py has the closed forms).
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+from . import pmodel
+from .pmodel import PModelSpec
+
+
+# --- pointwise f's of the paper ------------------------------------------------
+
+def f_identity(y: jax.Array) -> jax.Array:
+    return y
+
+
+def f_heaviside(y: jax.Array) -> jax.Array:
+    """f(x) = 1{x >= 0}  (angular kernel / arc-cosine b=0; also the hashing map)."""
+    return (y >= 0).astype(y.dtype)
+
+
+def f_sign(y: jax.Array) -> jax.Array:
+    """+/-1 variant of the angular map: E[s1 s2] = 1 - 2 theta / pi."""
+    return jnp.sign(y)
+
+
+def f_relu(y: jax.Array) -> jax.Array:
+    """arc-cosine b=1 (linear rectifier)."""
+    return jax.nn.relu(y)
+
+
+F_TABLE: Dict[str, Callable] = {
+    "identity": f_identity,
+    "heaviside": f_heaviside,
+    "sign": f_sign,
+    "relu": f_relu,
+}
+
+
+# --- feature maps phi (projection + f + scaling) -------------------------------
+
+def phi_scalar(spec: PModelSpec, params, x: jax.Array, f: str | Callable) -> jax.Array:
+    """phi(x) = f(proj(x)) / sqrt(m)  for scalar f from F_TABLE."""
+    fn = F_TABLE[f] if isinstance(f, str) else f
+    y = pmodel.project(spec, params, x)
+    return fn(y) / jnp.sqrt(jnp.asarray(spec.m, y.dtype))
+
+
+def phi_trig(spec: PModelSpec, params, x: jax.Array, sigma: float = 1.0) -> jax.Array:
+    """Gaussian-kernel features: phi = [cos(y/s), sin(y/s)] / sqrt(m).
+
+    <phi(v1), phi(v2)> -> E[cos((y1-y2)/s)] = exp(-||v1-v2||^2 / (2 s^2)).
+    Output dim = 2m.
+    """
+    y = pmodel.project(spec, params, x) / sigma
+    s = jnp.sqrt(jnp.asarray(spec.m, y.dtype))
+    return jnp.concatenate([jnp.cos(y), jnp.sin(y)], axis=-1) / s
+
+
+def phi_softmax_pos(spec: PModelSpec, params, x: jax.Array,
+                    scale: float = 1.0, stabilize: bool = True) -> jax.Array:
+    """Positive softmax-kernel features (FAVOR+ form; f = exp).
+
+    phi(x) = exp(y - ||x||^2/2 - c) / sqrt(m),  y = proj(x / sqrt(scale))...
+    Precisely: with q' = x * scale,  <phi(q'),phi(k')> ~ exp(<q',k'>) up to
+    the global constant e^{-2c} which cancels in attention normalization.
+    """
+    x = x * scale
+    y = pmodel.project(spec, params, x)
+    sq = 0.5 * jnp.sum(x * x, axis=-1, keepdims=True)
+    z = y - sq
+    if stabilize:
+        z = z - jax.lax.stop_gradient(jnp.max(z, axis=-1, keepdims=True))
+    return jnp.exp(z) / jnp.sqrt(jnp.asarray(spec.m, y.dtype))
+
+
+def phi_softmax_trig(spec: PModelSpec, params, x: jax.Array,
+                     scale: float = 1.0) -> jax.Array:
+    """Trigonometric softmax features (paper's sin/cos comment, Sec 2.1 ex.3):
+    exp(<q,k>) = e^{(|q|^2+|k|^2)/2} E[cos(y_q - y_k)]. Unbiased but signed."""
+    x = x * scale
+    y = pmodel.project(spec, params, x)
+    sq = 0.5 * jnp.sum(x * x, axis=-1, keepdims=True)
+    s = jnp.sqrt(jnp.asarray(spec.m, y.dtype))
+    amp = jnp.exp(sq)
+    return jnp.concatenate([jnp.cos(y), jnp.sin(y)], axis=-1) * amp / s

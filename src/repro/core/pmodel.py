@@ -1,0 +1,83 @@
+"""The P-model: budget of randomness + structured projection + HD preconditioning.
+
+This is the paper's core object (Sec 2.2-2.3). A ``PModel`` bundles:
+  * a structured matrix kind and its generator params (``structured.py``)
+  * the Step-1 randomized Hadamard preconditioner  D1 H D0
+  * the projection  x  ->  A . D1 H D0 . x        (the y_{i,j} of eq. 1)
+
+All state lives in a flat params dict (a pytree), so PModels embed directly
+into model parameter trees and shard like any other weight — except they
+are O(n) floats instead of O(mn), which is the paper's space claim.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field, replace
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import structured, transforms
+
+
+@dataclass(frozen=True)
+class PModelSpec:
+    kind: str = "circulant"       # one of structured.KINDS
+    m: int = 128                  # output (embedding) dimension
+    n: int = 128                  # input dimension (pow2 if use_hd)
+    r: int = 1                    # displacement rank (ldr only)
+    use_hd: bool = True           # paper Step 1 preconditioner
+    ldr_nnz: int = 4
+
+    def __post_init__(self):
+        if self.kind not in structured.KINDS:
+            raise ValueError(f"kind must be one of {structured.KINDS}")
+        if self.use_hd and not transforms.is_pow2(self.n):
+            raise ValueError(f"use_hd requires power-of-two n, got {self.n}")
+
+    @property
+    def budget(self) -> int:
+        """t — the number of Gaussians recycled into the m x n projection."""
+        return structured.budget(self.kind, self.m, self.n, self.r)
+
+    @property
+    def storage(self) -> int:
+        base = structured.storage_floats(self.kind, self.m, self.n, self.r)
+        return base + (2 * self.n if self.use_hd else 0)
+
+
+def init(rng: jax.Array, spec: PModelSpec, dtype=jnp.float32) -> Dict[str, jax.Array]:
+    kg, k0, k1 = jax.random.split(rng, 3)
+    params = structured.init(kg, spec.kind, spec.m, spec.n, spec.r,
+                             spec.ldr_nnz, dtype)
+    if spec.use_hd:
+        params["d0"] = transforms.sample_signs(k0, spec.n, dtype)
+        params["d1"] = transforms.sample_signs(k1, spec.n, dtype)
+    return params
+
+
+def project(spec: PModelSpec, params: Dict[str, jax.Array], x: jax.Array,
+            use_kron: bool = False) -> jax.Array:
+    """(..., n) -> (..., m):  A . D1 H D0 . x  (fast FFT/FWHT path)."""
+    if x.shape[-1] != spec.n:
+        raise ValueError(f"expected last dim {spec.n}, got {x.shape}")
+    if spec.use_hd:
+        x = transforms.hd_preprocess(x, params["d0"], params["d1"], use_kron)
+    return structured.matvec(spec.kind, params, x, spec.m)
+
+
+def materialize(spec: PModelSpec, params: Dict[str, jax.Array]) -> jax.Array:
+    """Dense (m, n) matrix of the *whole* pipeline A . D1 H D0 (oracle)."""
+    a = structured.materialize(spec.kind, params, spec.m, spec.n)
+    if spec.use_hd:
+        h = transforms.hadamard(spec.n, a.dtype)
+        a = (a * params["d1"][None, :]) @ h * params["d0"][None, :]
+    return a
+
+
+def row_gaussianity_moments(spec: PModelSpec, params: Dict[str, jax.Array]):
+    """Diagnostic: per-row mean/var of A (each row must be ~N(0, I) by the
+    normalization property, Def. 1)."""
+    a = structured.materialize(spec.kind, params, spec.m, spec.n)
+    return a.mean(axis=1), a.var(axis=1)

@@ -1,0 +1,162 @@
+"""Structured random-feature (SRF) attention — the paper's mechanism as a
+first-class attention layer.
+
+softmax(q k^T / sqrt(d)) V  is approximated by linear attention over the
+paper's nonlinear embedding:   phi(q) [ phi(k)^T V ] / phi(q) [ phi(k)^T 1 ]
+with phi(x) = f(A D1 H D0 x)/sqrt(m) and A a structured P-model matrix
+(circulant / toeplitz / ldr / unstructured — the budget-of-randomness knob).
+
+Complexities (L = seq, d = head dim, m = features):
+  full softmax:  O(L^2 d)  time,  O(L) KV cache per head
+  SRF:           O(L m d)  time,  O(m d) STATE per head (no KV cache)
+
+The O(m d) state is the paper's space-complexity story applied to serving,
+and is what makes the 524k-token decode cells feasible.
+
+Shapes: q,k: (B, H, L, d)   v: (B, H, L, dv)   phi: (B, H, L, m).
+GQA is handled by the caller (q-heads grouped onto kv-heads before entry).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import features, pmodel
+from .pmodel import PModelSpec
+
+
+@dataclass(frozen=True)
+class SRFConfig:
+    kind: str = "circulant"     # structured class for the projection
+    n_features: int = 256       # m
+    head_dim: int = 128         # n (power of two -> HD preconditioner valid)
+    feature: str = "softmax_pos"  # softmax_pos | relu | trig
+    use_hd: bool = True
+    r: int = 1                  # displacement rank for ldr
+    chunk: int = 128            # causal chunk length
+
+    @property
+    def spec(self) -> PModelSpec:
+        return PModelSpec(kind=self.kind, m=self.n_features, n=self.head_dim,
+                          r=self.r, use_hd=self.use_hd)
+
+    @property
+    def feat_dim(self) -> int:
+        return 2 * self.n_features if self.feature == "trig" else self.n_features
+
+
+def init(rng: jax.Array, cfg: SRFConfig, n_kv_heads: int,
+         dtype=jnp.float32) -> Dict[str, jax.Array]:
+    """Per-kv-head independent P-models (leading axis = head)."""
+    keys = jax.random.split(rng, n_kv_heads)
+    return jax.vmap(lambda k: pmodel.init(k, cfg.spec, dtype))(keys)
+
+
+def feature_map(cfg: SRFConfig, params, x: jax.Array, is_query: bool) -> jax.Array:
+    """(B, H, L, d) -> (B, H, L, feat_dim). Softmax-kernel scaling d^-1/4 is
+    folded in so phi(q).phi(k) ~ exp(q.k/sqrt(d)) (up to a global constant
+    that cancels in the normalizer)."""
+    scale = cfg.head_dim ** -0.25
+
+    def per_head(p, xh):  # xh: (B, L, d)
+        if cfg.feature == "softmax_pos":
+            return features.phi_softmax_pos(cfg.spec, p, xh, scale=scale,
+                                            stabilize=is_query)
+        if cfg.feature == "trig":
+            return features.phi_trig(cfg.spec, p, xh * scale)
+        if cfg.feature == "relu":
+            y = pmodel.project(cfg.spec, p, xh * scale)
+            return (jax.nn.relu(y) + 1e-6) / math.sqrt(cfg.n_features)
+        raise ValueError(cfg.feature)
+
+    return jax.vmap(per_head, in_axes=(0, 1), out_axes=1)(params, x)
+
+
+def attention_noncausal(phi_q: jax.Array, phi_k: jax.Array, v: jax.Array,
+                        eps: float = 1e-6) -> jax.Array:
+    """Encoder (bidirectional) SRF attention."""
+    kv = jnp.einsum("bhlm,bhld->bhmd", phi_k, v)
+    z = jnp.sum(phi_k, axis=-2)                          # (B,H,m)
+    num = jnp.einsum("bhlm,bhmd->bhld", phi_q, kv)
+    den = jnp.einsum("bhlm,bhm->bhl", phi_q, z)
+    return num / (den[..., None] + eps)
+
+
+def attention_causal(cfg: SRFConfig, phi_q: jax.Array, phi_k: jax.Array,
+                     v: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """Causal SRF attention via chunked prefix-state scan.
+
+    O(L m (d + C)) with chunk C; state carried between chunks is the
+    paper's O(m d) object.
+    """
+    b, h, l, m = phi_q.shape
+    dv = v.shape[-1]
+    c = min(cfg.chunk, l)
+    if l % c:                      # zero-pad to a chunk multiple (zero phi_k
+        pad = c - l % c            # rows are inert; padded outputs sliced off)
+        phi_q, phi_k, v = (jnp.pad(t, ((0, 0), (0, 0), (0, pad), (0, 0)))
+                           for t in (phi_q, phi_k, v))
+        return attention_causal(cfg, phi_q, phi_k, v, eps)[..., :l, :]
+    nc = l // c
+
+    pq = phi_q.reshape(b, h, nc, c, m).transpose(2, 0, 1, 3, 4)
+    pk = phi_k.reshape(b, h, nc, c, m).transpose(2, 0, 1, 3, 4)
+    vv = v.reshape(b, h, nc, c, dv).transpose(2, 0, 1, 3, 4)
+    tri = jnp.tril(jnp.ones((c, c), phi_q.dtype))
+
+    def step(carry, inp):
+        s, z = carry                       # (B,H,m,dv), (B,H,m)
+        q_c, k_c, v_c = inp
+        attn = jnp.einsum("bhim,bhjm->bhij", q_c, k_c) * tri
+        num = jnp.einsum("bhij,bhjd->bhid", attn, v_c) \
+            + jnp.einsum("bhim,bhmd->bhid", q_c, s)
+        den = jnp.einsum("bhij->bhi", attn) \
+            + jnp.einsum("bhim,bhm->bhi", q_c, z)
+        out = num / (den[..., None] + eps)
+        s = s + jnp.einsum("bhjm,bhjd->bhmd", k_c, v_c)
+        z = z + jnp.sum(k_c, axis=-2)
+        return (s, z), out
+
+    s0 = jnp.zeros((b, h, m, dv), phi_q.dtype)
+    z0 = jnp.zeros((b, h, m), phi_q.dtype)
+    (_, _), outs = jax.lax.scan(step, (s0, z0), (pq, pk, vv))
+    return outs.transpose(1, 2, 0, 3, 4).reshape(b, h, l, dv)
+
+
+def prefill_state(phi_k: jax.Array, v: jax.Array
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """Build the decode state from a processed prompt: S = phi_k^T v, z."""
+    s = jnp.einsum("bhlm,bhld->bhmd", phi_k, v)
+    z = jnp.sum(phi_k, axis=-2)
+    return s, z
+
+
+def decode_step(state: Tuple[jax.Array, jax.Array], phi_q: jax.Array,
+                phi_k: jax.Array, v_new: jax.Array, eps: float = 1e-6
+                ) -> Tuple[Tuple[jax.Array, jax.Array], jax.Array]:
+    """One-token decode. phi_q/phi_k: (B,H,1,m), v_new: (B,H,1,dv).
+
+    State update BEFORE readout (the new token attends to itself)."""
+    s, z = state
+    s = s + jnp.einsum("bhlm,bhld->bhmd", phi_k, v_new)
+    z = z + jnp.sum(phi_k, axis=-2)
+    num = jnp.einsum("bhlm,bhmd->bhld", phi_q, s)
+    den = jnp.einsum("bhlm,bhm->bhl", phi_q, z)
+    return (s, z), num / (den[..., None] + eps)
+
+
+def reference_softmax(q: jax.Array, k: jax.Array, v: jax.Array,
+                      causal: bool = True) -> jax.Array:
+    """Exact softmax attention (oracle for SRF quality tests)."""
+    d = q.shape[-1]
+    logits = jnp.einsum("bhid,bhjd->bhij", q, k) / math.sqrt(d)
+    if causal:
+        l = q.shape[-2]
+        mask = jnp.tril(jnp.ones((l, l), bool))
+        logits = jnp.where(mask, logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhij,bhjd->bhid", w, v)

@@ -1,0 +1,301 @@
+"""Structured Gaussian matrices of the paper's P-model (Sec 2.2).
+
+Every structured class here is a concrete P-model: a budget of randomness
+``g`` (t i.i.d. N(0,1) values, t << m*n) plus an implicit sequence of
+matrices P_i with ``a^i = g . P_i`` as the i-th row of the projection.
+
+Supported kinds
+---------------
+``unstructured``     t = m*n     the fully random baseline (P_i = selector)
+``circulant``        t = n       rows are right-shifts of g           (paper eq. 7)
+``skew_circulant``   t = n       wrap-around entries negated
+``toeplitz``         t = n+m-1   constant diagonals                   (paper eq. 9)
+``hankel``           t = n+m-1   constant anti-diagonals
+``ldr``              t = r*n     sum_{i<=r} Z_1(g^i) Z_{-1}(h^i)      (paper eq. 11)
+
+Two execution paths are provided and cross-tested:
+
+* ``matvec``       — fast path. O(n log n) via (real) FFT; this is the
+                     paper's CPU/GPU algorithm and the jnp reference.
+* ``materialize``  — O(mn) dense matrix, used as the oracle in tests and
+                     by the Pallas implicit-tile kernels (kernels/circulant.py)
+                     which regenerate tiles from g on the fly in VMEM.
+
+All functions operate on the LAST axis of ``x`` and support arbitrary
+leading batch axes. For m > n, circulant / skew_circulant / ldr matrices
+are BLOCK-STACKED: ceil(m/n) independent structured blocks share one
+input dimension (the multi-block construction of the paper's companion
+[12], Choromanski & Sindhwani '16); toeplitz/hankel support any m natively
+(t = n + m - 1).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from functools import partial
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+KINDS = ("unstructured", "circulant", "skew_circulant", "toeplitz", "hankel", "ldr")
+
+
+def n_blocks(kind: str, m: int, n: int) -> int:
+    """Independent structured blocks stacked to reach m rows."""
+    if kind in ("circulant", "skew_circulant", "ldr"):
+        return -(-m // n)  # ceil
+    return 1
+
+
+def budget(kind: str, m: int, n: int, r: int = 1) -> int:
+    """Number t of i.i.d. Gaussians consumed ('budget of randomness')."""
+    b = n_blocks(kind, m, n)
+    if kind == "unstructured":
+        return m * n
+    if kind in ("circulant", "skew_circulant"):
+        return b * n
+    if kind in ("toeplitz", "hankel"):
+        return n + m - 1
+    if kind == "ldr":
+        return b * r * n
+    raise ValueError(f"unknown structured kind: {kind}")
+
+
+def init(rng: jax.Array, kind: str, m: int, n: int, r: int = 1,
+         ldr_nnz: int = 4, dtype=jnp.float32) -> Dict[str, jax.Array]:
+    """Sample the generator parameters for one structured matrix.
+
+    For ``ldr`` also samples the paper's sparse +/-1/sqrt(a r) h-vectors
+    (a = ldr_nnz nonzeros per column, Sec 2.2 item 4).
+
+    circulant/skew/ldr generators carry a leading block axis (b, ...);
+    b = ceil(m/n) (b = 1 when m <= n).
+    """
+    b = n_blocks(kind, m, n)
+    if kind == "unstructured":
+        g = jax.random.normal(rng, (m, n), dtype)
+        return {"g": g}
+    if kind in ("circulant", "skew_circulant"):
+        return {"g": jax.random.normal(rng, (b, n), dtype)}
+    if kind in ("toeplitz", "hankel"):
+        return {"g": jax.random.normal(rng, (n + m - 1,), dtype)}
+    if kind == "ldr":
+        kg, kh_idx, kh_sign = jax.random.split(rng, 3)
+        g = jax.random.normal(kg, (b, r, n), dtype)
+        # h^i: ldr_nnz random nonzero dims, values +/- 1/sqrt(ldr_nnz * r)
+        idx = jax.random.randint(kh_idx, (b, r, ldr_nnz), 0, n)
+        sign = jax.random.rademacher(kh_sign, (b, r, ldr_nnz), dtype)
+        h = jnp.zeros((b, r, n), dtype)
+        val = sign / jnp.asarray(math.sqrt(ldr_nnz * r), dtype)
+        bi = jnp.arange(b)[:, None, None]
+        ri = jnp.arange(r)[None, :, None]
+        h = h.at[bi, ri, idx].set(val)
+        return {"g": g, "h": h}
+    raise ValueError(f"unknown structured kind: {kind}")
+
+
+# ---------------------------------------------------------------------------
+# Dense materialization (oracle path)
+# ---------------------------------------------------------------------------
+
+def _circulant_dense(g: jax.Array, m: int) -> jax.Array:
+    """A[i, j] = g[(j - i) mod n]  (row i is g right-shifted by i; eq. 7)."""
+    n = g.shape[-1]
+    i = jnp.arange(m)[:, None]
+    j = jnp.arange(n)[None, :]
+    return g[(j - i) % n]
+
+
+def _skew_circulant_dense(g: jax.Array, m: int) -> jax.Array:
+    """Like circulant but wrapped entries (j < i) are negated."""
+    n = g.shape[-1]
+    i = jnp.arange(m)[:, None]
+    j = jnp.arange(n)[None, :]
+    sign = jnp.where(j - i < 0, -1.0, 1.0).astype(g.dtype)
+    return sign * g[(j - i) % n]
+
+
+def _toeplitz_dense(g: jax.Array, m: int, n: int) -> jax.Array:
+    """Constant diagonals (eq. 9): A[i, j] = g[j - i]  with
+    g indexed as: first row g[0..n-1], first column g[0], g[n], g[n+1], ...
+    i.e. diagonal offset d = j - i maps to g[d] for d >= 0 and g[n - 1 - d]
+    for d < 0 (so index n-1+|d| = n-1-d)."""
+    i = jnp.arange(m)[:, None]
+    j = jnp.arange(n)[None, :]
+    d = j - i
+    idx = jnp.where(d >= 0, d, n - 1 - d)
+    return g[idx]
+
+
+def _hankel_dense(g: jax.Array, m: int, n: int) -> jax.Array:
+    """Constant anti-diagonals: A[i, j] = g[i + j]."""
+    i = jnp.arange(m)[:, None]
+    j = jnp.arange(n)[None, :]
+    return g[i + j]
+
+
+def _ldr_dense(g: jax.Array, h: jax.Array, m: int, n: int) -> jax.Array:
+    """sum_i Z_1(g^i) Z_{-1}(h^i)  (eq. 11).
+
+    Z_1(v): circulant with first COLUMN v (shift-down with wrap, f=+1);
+    Z_{-1}(v): skew version (wrapped entries negated).
+    """
+    i = jnp.arange(n)[:, None]
+    j = jnp.arange(n)[None, :]
+    # Z_f(v)[i, j] = v[(i - j) mod n] * (f if i - j < 0 else 1)
+    z1 = g[..., (i - j) % n]                                   # (r, n, n)
+    sgn = jnp.where(i - j < 0, -1.0, 1.0).astype(h.dtype)
+    zm1 = sgn * h[..., (i - j) % n]                            # (r, n, n)
+    a = jnp.einsum("rik,rkj->ij", z1, zm1)
+    return a[:m]
+
+
+def materialize(kind: str, params: Dict[str, jax.Array], m: int, n: int) -> jax.Array:
+    """Dense (m, n) matrix A of the P-model — oracle for all fast paths."""
+    g = params["g"]
+    if kind == "unstructured":
+        return g
+    if kind == "circulant":
+        blocks = jax.vmap(lambda gb: _circulant_dense(gb, n))(g)
+        return blocks.reshape(-1, n)[:m]
+    if kind == "skew_circulant":
+        blocks = jax.vmap(lambda gb: _skew_circulant_dense(gb, n))(g)
+        return blocks.reshape(-1, n)[:m]
+    if kind == "toeplitz":
+        return _toeplitz_dense(g, m, n)
+    if kind == "hankel":
+        return _hankel_dense(g, m, n)
+    if kind == "ldr":
+        blocks = jax.vmap(lambda gb, hb: _ldr_dense(gb, hb, n, n))(g, params["h"])
+        return blocks.reshape(-1, n)[:m]
+    raise ValueError(f"unknown structured kind: {kind}")
+
+
+# ---------------------------------------------------------------------------
+# Fast FFT path (the paper's O(n log n) algorithm; jnp reference on TPU/CPU)
+# ---------------------------------------------------------------------------
+
+def _f32(x: jax.Array) -> jax.Array:
+    """FFT kernels need fp32; bf16 inputs are upcast for the transform."""
+    return x.astype(jnp.float32) if x.dtype in (jnp.bfloat16, jnp.float16) \
+        else x
+
+
+def _circ_corr(x: jax.Array, g: jax.Array) -> jax.Array:
+    """y[i] = sum_j x[..., j] g[(j - i) mod n]  via real FFT."""
+    n = x.shape[-1]
+    fx = jnp.fft.rfft(_f32(x), n=n)
+    fg = jnp.fft.rfft(_f32(g), n=n)
+    y = jnp.fft.irfft(fx * jnp.conj(fg), n=n)
+    return y.astype(x.dtype)
+
+
+def _circ_conv(x: jax.Array, v: jax.Array) -> jax.Array:
+    """y[i] = sum_j v[(i - j) mod n] x[..., j]  = (v * x) circular convolution."""
+    n = x.shape[-1]
+    fx = jnp.fft.rfft(_f32(x), n=n)
+    fv = jnp.fft.rfft(_f32(v), n=n)
+    y = jnp.fft.irfft(fx * fv, n=n)
+    return y.astype(x.dtype)
+
+
+def _skew_modulation(n: int, dtype=jnp.complex64) -> jax.Array:
+    """d[j] = exp(i pi j / n): diagonal similarity turning skew-circulant
+    into circulant: S(v) = conj(D) C'(...) D."""
+    j = jnp.arange(n)
+    return jnp.exp(1j * jnp.pi * j / n).astype(dtype)
+
+
+def _skew_circ_matvec(x: jax.Array, g: jax.Array, m: int) -> jax.Array:
+    """Rows of the skew-circulant A[i,j] = sgn(j-i) g[(j-i) mod n], first m.
+
+    Uses the modulation identity: with d_j = e^{i pi j / n},
+    A = conj(D) B D where B is the plain circulant of (g_j d_j).
+    """
+    n = x.shape[-1]
+    d = _skew_modulation(n)
+    gx = _f32(x).astype(jnp.complex64) * d
+    gg = _f32(g).astype(jnp.complex64) * d
+    fy = jnp.fft.fft(gx, n=n) * jnp.conj(jnp.fft.fft(gg, n=n))
+    y = jnp.fft.ifft(fy, n=n) * jnp.conj(d)
+    return y.real[..., :m].astype(x.dtype)
+
+
+def _toeplitz_matvec(x: jax.Array, g: jax.Array, m: int, n: int) -> jax.Array:
+    """Toeplitz matvec by embedding into a circulant of size p = n + m.
+
+    A[i, j] = gen(j - i) with gen(d) = g[d] (d>=0), g[n-1-d] (d<0).
+    Build c of length p with c[k] = gen(k) for k in [0, n-1] and
+    c[p - k] = gen(-k) for k in [1, m-1]; then y = first m of circ-corr.
+    """
+    p = n + m
+    c = jnp.zeros((p,), g.dtype)
+    c = c.at[:n].set(g[:n])                       # diagonals d = 0..n-1
+    if m > 1:
+        k = jnp.arange(1, m)
+        c = c.at[p - k].set(g[n - 1 + k])         # d = -k -> g[n-1+k]
+    xp = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, p - n)])
+    y = _circ_corr(xp, c)
+    return y[..., :m]
+
+
+def matvec(kind: str, params: Dict[str, jax.Array], x: jax.Array, m: int) -> jax.Array:
+    """Fast structured matvec: (..., n) -> (..., m). FFT path (paper's alg)."""
+    g = params["g"]
+    n = x.shape[-1]
+    if kind == "unstructured":
+        return jnp.einsum("...n,mn->...m", x, g)
+    if kind == "circulant":
+        y = jax.vmap(lambda gb: _circ_corr(x, gb), out_axes=-2)(g)
+        return y.reshape(*x.shape[:-1], -1)[..., :m]
+    if kind == "skew_circulant":
+        y = jax.vmap(lambda gb: _skew_circ_matvec(x, gb, n), out_axes=-2)(g)
+        return y.reshape(*x.shape[:-1], -1)[..., :m]
+    if kind == "toeplitz":
+        return _toeplitz_matvec(x, g, m, n)
+    if kind == "hankel":
+        # A[i, j] = g[i + j] = Toeplitz with reversed input:
+        # sum_j g[i + j] x[j] = sum_j' gen_T(j' - i) x[n-1-j'] with g reused:
+        # simply correlate reversed x against the same generator laid out as
+        # T[i, j] = g[i + (n - 1 - j)]: a Toeplitz in -j. Use flip(x).
+        gt = g  # length n + m - 1; T[i,j'] = g[i + n - 1 - j'] -> gen(d)=g[n-1-d]
+        # Map to our toeplitz layout: gen_T(d) = g[n - 1 - d], d in [-(m-1), n-1]
+        row = gt[n - 1::-1]                # d = 0..n-1  -> g[n-1-d]
+        col = gt[n:]                       # d = -1..-(m-1) -> g[n-1+k]
+        g2 = jnp.concatenate([row, col])
+        return _toeplitz_matvec(jnp.flip(x, -1), g2, m, n)
+    if kind == "ldr":
+        h = params["h"]
+        # y = sum_r Z_1(g^r) (Z_{-1}(h^r) x); Z_f(v)[i,j] = sgn v[(i-j) mod n]
+        def one(gr, hr):
+            # Z_{-1}(h) x : skew 'convolution' — rows indexed by (i - j)
+            d = _skew_modulation(n)
+            hx = jnp.fft.fft(_f32(x).astype(jnp.complex64) * d, n=n)
+            hh = jnp.fft.fft(_f32(hr).astype(jnp.complex64) * d, n=n)
+            u = (jnp.fft.ifft(hx * hh, n=n) * jnp.conj(d)).real.astype(x.dtype)
+            return _circ_conv(u, gr)
+        def block(gb, hb):
+            return jax.vmap(one, in_axes=(0, 0), out_axes=0)(gb, hb).sum(0)
+        y = jax.vmap(block, in_axes=(0, 0), out_axes=-2)(g, h)
+        return y.reshape(*x.shape[:-1], -1)[..., :m]
+    raise ValueError(f"unknown structured kind: {kind}")
+
+
+def storage_floats(kind: str, m: int, n: int, r: int = 1) -> int:
+    """Floats stored for the projection (paper's space-complexity claim)."""
+    return budget(kind, m, n, r) + (r * n if kind == "ldr" else 0)
+
+
+def flops_fast(kind: str, m: int, n: int, r: int = 1) -> float:
+    """~FLOPs of the fast matvec path (per input vector)."""
+    if kind == "unstructured":
+        return 2.0 * m * n
+    if kind in ("circulant", "skew_circulant"):
+        return 5.0 * n * math.log2(max(n, 2)) * 3  # 3 FFTs
+    if kind in ("toeplitz", "hankel"):
+        p = n + m
+        return 5.0 * p * math.log2(max(p, 2)) * 3
+    if kind == "ldr":
+        return r * 2 * 5.0 * n * math.log2(max(n, 2)) * 3
+    raise ValueError(kind)

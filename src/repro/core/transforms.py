@@ -1,0 +1,113 @@
+"""Hadamard transforms and the paper's Step-1 preprocessing  D1 H D0.
+
+``H`` is the L2-normalized Sylvester-Hadamard matrix (n a power of two),
+``D0``/``D1`` independent random +/-1 diagonals (paper Sec 2.3 Step 1).
+
+Two FWHT realizations:
+* ``fwht``       — log2(n)-stage butterfly (pure jnp; the classic algorithm)
+* ``fwht_kron``  — 2-factor Kronecker form  H_n = H_a (x) H_b  computed as
+                   two dense matmuls  H_a . mat(x) . H_b. This is the
+                   TPU-native form (MXU-friendly); the Pallas kernel
+                   (kernels/fwht.py) implements exactly this decomposition.
+"""
+from __future__ import annotations
+
+import math
+from functools import lru_cache
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def is_pow2(n: int) -> bool:
+    return n > 0 and (n & (n - 1)) == 0
+
+
+def next_pow2(n: int) -> int:
+    return 1 << max(0, (n - 1).bit_length())
+
+
+@lru_cache(maxsize=32)
+def _hadamard_np(n: int) -> np.ndarray:
+    """Unnormalized Sylvester Hadamard matrix as a cached numpy array."""
+    assert is_pow2(n), f"Hadamard order must be a power of two, got {n}"
+    h = np.array([[1.0]], dtype=np.float32)
+    while h.shape[0] < n:
+        h = np.block([[h, h], [h, -h]])
+    return h
+
+
+def hadamard(n: int, dtype=jnp.float32, normalized: bool = True) -> jax.Array:
+    h = jnp.asarray(_hadamard_np(n), dtype)
+    return h / jnp.asarray(math.sqrt(n), dtype) if normalized else h
+
+
+def fwht(x: jax.Array, normalized: bool = True) -> jax.Array:
+    """Fast Walsh-Hadamard transform along the last axis (n = 2^k).
+
+    Classic in-place butterfly, expressed as log2(n) reshape/stack steps
+    (each step is a static jnp op; the python loop unrolls at trace time).
+    """
+    n = x.shape[-1]
+    assert is_pow2(n), f"fwht needs power-of-two length, got {n}"
+    lead = x.shape[:-1]
+    h = 1
+    while h < n:
+        x = x.reshape(*lead, n // (2 * h), 2, h)
+        a = x[..., 0, :]
+        b = x[..., 1, :]
+        x = jnp.stack([a + b, a - b], axis=-2)
+        h *= 2
+    x = x.reshape(*lead, n)
+    if normalized:
+        x = x * jnp.asarray(1.0 / math.sqrt(n), x.dtype)
+    return x
+
+
+def kron_factors(n: int) -> Tuple[int, int]:
+    """Balanced split n = a * b with both powers of two (a >= b)."""
+    assert is_pow2(n)
+    k = n.bit_length() - 1
+    ka = (k + 1) // 2
+    return 1 << ka, 1 << (k - ka)
+
+
+def fwht_kron(x: jax.Array, normalized: bool = True) -> jax.Array:
+    """MXU-form FWHT:  H_n x = vec( H_a . mat(x) . H_b )  with n = a*b.
+
+    mat(x) is the row-major (a, b) reshape. Matches ``fwht`` exactly
+    (same Sylvester ordering) because H_{2^{p+q}} = H_{2^p} (x) H_{2^q}.
+    """
+    n = x.shape[-1]
+    a, b = kron_factors(n)
+    lead = x.shape[:-1]
+    ha = hadamard(a, x.dtype, normalized=False)
+    hb = hadamard(b, x.dtype, normalized=False)
+    xm = x.reshape(*lead, a, b)
+    y = jnp.einsum("pa,...ab,bq->...pq", ha, xm, hb)
+    y = y.reshape(*lead, n)
+    if normalized:
+        y = y * jnp.asarray(1.0 / math.sqrt(n), x.dtype)
+    return y
+
+
+def sample_signs(rng: jax.Array, n: int, dtype=jnp.float32) -> jax.Array:
+    return jax.random.rademacher(rng, (n,), dtype)
+
+
+def hd_preprocess(x: jax.Array, d0: jax.Array, d1: jax.Array,
+                  use_kron: bool = False) -> jax.Array:
+    """Paper Step 1:  x -> D1 . H . D0 . x  (normalized H; isometry)."""
+    f = fwht_kron if use_kron else fwht
+    return d1 * f(d0 * x)
+
+
+def pad_pow2(x: jax.Array) -> jax.Array:
+    """Zero-pad the last axis to the next power of two (for HD preproc)."""
+    n = x.shape[-1]
+    p = next_pow2(n)
+    if p == n:
+        return x
+    return jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, p - n)])

@@ -1,0 +1,50 @@
+"""Explicit cross-pod collectives: compressed gradient all-reduce.
+
+Under plain pjit the cross-pod gradient mean is an XLA-inserted all-reduce
+over the full gradient bytes — the dominant DCN cost at multi-pod scale.
+``compressed_pod_mean`` replaces it with the paper's structured sketch:
+
+    shard_map over 'pod' (data/model stay auto-partitioned):
+        y   = sketch(grad + err)        m/n of the bytes
+        y'  = pmean(y, 'pod')           the ONLY cross-pod traffic
+        g'  = unsketch(y')              unbiased; err absorbs the residual
+
+Wire bytes drop by cc.ratio; the sketch projection itself is O(n log n)
+FFT (or the Pallas implicit-tile kernel on TPU).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.optim import compression as C
+
+
+def pod_mean_plain(grads, mesh):
+    """Baseline: uncompressed cross-pod mean via shard_map (for A/B)."""
+    auto = frozenset(a for a in mesh.axis_names if a != "pod")
+
+    def f(g):
+        return jax.tree.map(lambda x: jax.lax.pmean(x, "pod"), g)
+    return jax.shard_map(f, mesh=mesh, in_specs=P(), out_specs=P(),
+                         axis_names={"pod"})(grads)
+
+
+def compressed_pod_mean(grads, err, mesh, cc: C.CompressionConfig,
+                        step: int = 0) -> Tuple[Dict, Dict]:
+    """-> (mean_grads_reconstructed, new_error). Requires a 'pod' axis.
+    ``step`` (traced ok) rotates the sketch so the null space is re-drawn
+    every step (error feedback then covers all directions over time)."""
+    def f(g, e):
+        sk, recon, new_err = C.roundtrip_with_feedback(g, e, cc, step)
+        sk_mean = jax.tree.map(lambda y: jax.lax.pmean(y, "pod"), sk)
+        g_mean = C.decompress_tree(sk_mean, g, cc, step)
+        g_mean = jax.tree.map(lambda a, b: a.astype(b.dtype), g_mean, g)
+        return g_mean, new_err
+
+    return jax.shard_map(f, mesh=mesh, in_specs=(P(), P()),
+                         out_specs=(P(), P()), axis_names={"pod"})(grads, err)

@@ -1,0 +1,245 @@
+"""Logical sharding rules: param/optimizer/batch/cache PartitionSpecs.
+
+Axis roles (launch/mesh.py):
+    pod    slow-link (DCN) data parallelism — compressed collectives
+    data   ICI data parallelism + ZeRO-1 shards + long-context seq sharding
+    model  tensor parallelism (heads / ff / vocab / experts)
+
+Rules are path+shape based and DEGRADE to replication whenever a dim does
+not divide the axis (e.g. hymba's 25 heads or qwen2-vl's 12 heads under
+TP=16) — the framework never refuses an arch for divisibility.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def axis_size(mesh: Mesh, name: str) -> int:
+    return dict(zip(mesh.axis_names, mesh.devices.shape)).get(name, 1)
+
+
+def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _fits(shape, dim: int, mesh: Mesh, names) -> bool:
+    if dim >= len(shape):
+        return False
+    total = 1
+    for n in (names if isinstance(names, tuple) else (names,)):
+        total *= axis_size(mesh, n)
+    return shape[dim] % total == 0 and shape[dim] >= total
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+
+
+# --- parameter rules --------------------------------------------------------
+
+# (regex on path, spec builder on the TRAILING dims). Stacked layer params
+# (segments/* , encoder/*) get a leading None prepended automatically.
+def _trailing_rule(path: str, shape, mesh: Mesh) -> P:
+    mdl = "model"
+
+    def col(dim_in=0, dim_out=1):           # column parallel (d, out)
+        return _mk(shape, {dim_out: mdl}, mesh)
+
+    def row(dim_in=0, dim_out=1):           # row parallel (in, d)
+        return _mk(shape, {dim_in: mdl}, mesh)
+
+    if re.search(r"embed/tok$", path):
+        return _mk(shape, {0: mdl}, mesh)                    # (V, d)
+    if re.search(r"(^|/)head$", path):
+        return _mk(shape, {1: mdl}, mesh)                    # (d, V)
+    if re.search(r"moe/router$", path):
+        return P(*([None] * len(shape)))                     # tiny, replicated
+    if re.search(r"moe/(wi|wg)$", path):
+        return _mk(shape, {0: mdl}, mesh)                    # (E, d, ffe) EP
+    if re.search(r"moe/wo$", path):
+        return _mk(shape, {0: mdl}, mesh)                    # (E, ffe, d) EP
+    if re.search(r"(mlp|shared)/(wi|wg)$", path):
+        return col()                                         # (d, ff)
+    if re.search(r"(mlp|shared)/wo$", path):
+        return row()                                         # (ff, d)
+    if re.search(r"(attn|cross)/(wq|wuk|wuv)$", path):
+        return col()
+    if re.search(r"(attn|cross)/(wk|wv)$", path):
+        return col()
+    if re.search(r"(attn|cross)/wo$", path):
+        return row()
+    if re.search(r"attn/(wdkv|wkpe)$", path):
+        return P(*([None] * len(shape)))                     # small latents
+    if re.search(r"ssm/(wz|wx)$", path):
+        return col()
+    if re.search(r"ssm/(wbc|wdt)$", path):
+        return P(*([None] * len(shape)))
+    if re.search(r"ssm/conv_x$", path):
+        return _mk(shape, {1: mdl}, mesh)                    # (k, di)
+    if re.search(r"ssm/out_proj$", path):
+        return row()
+    if re.search(r"srf/", path):
+        return P(*([None] * len(shape)))                     # O(n) generators
+    if re.search(r"frontend/adapter$", path):
+        return col()
+    return P(*([None] * len(shape)))                         # norms, biases
+
+
+def _mk(shape, placements: Dict[int, str], mesh: Mesh) -> P:
+    out = [None] * len(shape)
+    for dim, name in placements.items():
+        if _fits(shape, dim, mesh, name):
+            out[dim] = name
+    return P(*out)
+
+
+_STACKED = re.compile(r"^(segments/\d+|encoder)/")
+
+
+def param_specs(params, mesh: Mesh) -> Dict:
+    def f(path, x):
+        ps = _path_str(path)
+        shape = x.shape
+        if _STACKED.match(ps):
+            inner = _trailing_rule(ps, shape[1:], mesh)
+            return P(None, *inner)
+        return _trailing_rule(ps, shape, mesh)
+    return jax.tree_util.tree_map_with_path(f, params)
+
+
+def zero1_specs(params, pspecs, mesh: Mesh) -> Dict:
+    """Optimizer-moment specs: param spec + shard the first free dim over
+    'data' (ZeRO-1). Falls back to the param spec if nothing divides."""
+    data = axis_size(mesh, "data")
+
+    def f(x, spec):
+        if data <= 1:
+            return spec
+        entries = list(spec) + [None] * (x.ndim - len(spec))
+        for dim in range(x.ndim):
+            if entries[dim] is None and x.shape[dim] % data == 0 \
+                    and x.shape[dim] >= 4 * data:
+                entries[dim] = "data"
+                return P(*entries)
+        return spec
+    return jax.tree.map(f, params, pspecs)
+
+
+def opt_state_specs(opt_state, params, pspecs, mesh: Mesh) -> Dict:
+    z = zero1_specs(params, pspecs, mesh)
+    return {"mu": z, "nu": z, "count": P()}
+
+
+# --- batch / cache / activation rules ----------------------------------------
+
+def batch_specs_tree(batch_specs, mesh: Mesh) -> Dict:
+    """Shard dim0 (global batch) over the dp axes when it divides."""
+    dp = dp_axes(mesh)
+
+    def f(s):
+        if _fits(s.shape, 0, mesh, dp) and len(s.shape) >= 1:
+            return P(dp, *([None] * (len(s.shape) - 1)))
+        return P(*([None] * len(s.shape)))
+
+    def g(path, s):
+        ps = _path_str(path)
+        if ps.endswith("pos3"):        # (3, B, L): batch is dim1
+            if _fits(s.shape, 1, mesh, dp):
+                return P(None, dp, None)
+            return P(None, None, None)
+        return f(s)
+    return jax.tree_util.tree_map_with_path(g, batch_specs)
+
+
+def cache_specs_tree(cache_specs, cfg, mesh: Mesh) -> Dict:
+    """Decode caches: batch over dp; long axes (S for kv/mla, feature m for
+    srf) over 'model' when they divide."""
+    dp = dp_axes(mesh)
+
+    def f(path, s):
+        ps = _path_str(path)
+        shape = s.shape
+        stacked = 1 if ps.startswith("segments/") else 0   # leading layer dim
+        ent = [None] * len(shape)
+        if ps.endswith(("k", "v", "k_scale", "v_scale")) and \
+                len(shape) - stacked == 4:
+            # (L?, B, Hkv, S, hd|1): batch over dp, S over model
+            if _fits(shape, stacked + 0, mesh, dp):
+                ent[stacked + 0] = dp
+            if _fits(shape, stacked + 2, mesh, "model"):
+                ent[stacked + 2] = "model"
+        elif ps.endswith(("s", "z")) and len(shape) - stacked >= 3:
+            # SRF state (L?, B, H, m[, dv]): batch over dp, heads over model
+            if _fits(shape, stacked + 0, mesh, dp):
+                ent[stacked + 0] = dp
+            if _fits(shape, stacked + 1, mesh, "model"):
+                ent[stacked + 1] = "model"
+        elif ps.endswith(("c", "kpe")) and len(shape) - stacked == 3:
+            # MLA latent cache (L?, B, S, dim): batch over dp, S over model
+            if _fits(shape, stacked + 0, mesh, dp):
+                ent[stacked + 0] = dp
+            if _fits(shape, stacked + 1, mesh, "model"):
+                ent[stacked + 1] = "model"
+        elif ps.endswith(("conv", "ssm")) and len(shape) - stacked >= 3:
+            if _fits(shape, stacked + 0, mesh, dp):
+                ent[stacked + 0] = dp
+            if ps.endswith("ssm") and _fits(shape, stacked + 1, mesh, "model"):
+                ent[stacked + 1] = "model"   # ssd heads
+        elif ps.endswith("memory"):
+            if _fits(shape, 0, mesh, dp):
+                ent[0] = dp
+        return P(*ent)
+    return jax.tree_util.tree_map_with_path(f, cache_specs)
+
+
+# --- activation constrainer (models/hooks.py) ---------------------------------
+
+def make_constrainer(mesh: Mesh, cfg=None):
+    dp = dp_axes(mesh)
+
+    def fn(x, role: str):
+        if role == "activation" and x.ndim >= 2:
+            if _fits(x.shape, 0, mesh, dp):
+                return jax.lax.with_sharding_constraint(
+                    x, NamedSharding(mesh, P(dp, *([None] * (x.ndim - 1)))))
+            return x
+        if role == "residual" and x.ndim == 3:
+            # Megatron sequence parallelism: (B, T, d) -> (dp, 'model', -)
+            ent = [None, None, None]
+            if _fits(x.shape, 0, mesh, dp):
+                ent[0] = dp
+            if _fits(x.shape, 1, mesh, "model"):
+                ent[1] = "model"
+            if ent[1] is None:
+                return fn(x, "activation")
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, P(*ent)))
+        if role == "logits" and x.ndim == 3:
+            ent = [None, None, None]
+            if _fits(x.shape, 0, mesh, dp):
+                ent[0] = dp
+            if _fits(x.shape, 2, mesh, "model"):
+                ent[2] = "model"
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, P(*ent)))
+        if role == "moe_buf" and x.ndim == 4:
+            # (B groups, E, C, d): groups on dp, experts on model (EP)
+            ent = [None, None, None, None]
+            if _fits(x.shape, 0, mesh, dp):
+                ent[0] = dp
+            if _fits(x.shape, 1, mesh, "model"):
+                ent[1] = "model"
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, P(*ent)))
+        return x
+    return fn
+
+
+def named(mesh: Mesh, tree_specs):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_specs,
+                        is_leaf=lambda s: isinstance(s, P))

@@ -1,0 +1,65 @@
+"""Elastic scaling: reshard a training state onto a grown/shrunk mesh.
+
+Checkpoints store logically-global arrays (per-host shard files on real
+fleets; single archive here), so elasticity is a *placement* change:
+rebuild the mesh with the surviving host count, recompute shardings from
+the same logical rules, and device_put. Data streams re-split by the new
+shard count (deterministic synth streams make this exact). The only
+constraint is divisibility, checked here with a fallback chain.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def viable_data_axis(n_devices: int, model: int) -> int:
+    if n_devices % model:
+        raise ValueError(f"{n_devices} devices not divisible by model={model}")
+    return n_devices // model
+
+
+def remesh(devices, model_parallel: int, axis_names=("data", "model")) -> Mesh:
+    """Build the largest (data, model) mesh from surviving devices."""
+    n = len(devices)
+    data = viable_data_axis(n, model_parallel)
+    arr = np.asarray(devices)[: data * model_parallel].reshape(
+        data, model_parallel)
+    return Mesh(arr, axis_names)
+
+
+def reshard_tree(tree, specs, mesh: Mesh):
+    """Place a (host-global) pytree onto ``mesh`` per the spec pytree,
+    degrading any axis that no longer divides to replication."""
+    def place(x, spec):
+        spec = _degrade(spec, x.shape, mesh)
+        return jax.device_put(x, NamedSharding(mesh, spec))
+    return jax.tree.map(place, tree, specs)
+
+
+def _degrade(spec: P, shape, mesh: Mesh) -> P:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    out = []
+    for dim, names in enumerate(tuple(spec) + (None,) * (len(shape) - len(spec))):
+        if names is None:
+            out.append(None)
+            continue
+        names_t = names if isinstance(names, tuple) else (names,)
+        total = 1
+        for nme in names_t:
+            total *= sizes.get(nme, 1)
+        out.append(names if shape[dim] % total == 0 else None)
+    return P(*out)
+
+
+def shrink_plan(old_hosts: int, failed: Tuple[int, ...], model: int
+                ) -> Dict[str, int]:
+    """Controller-side plan after host failures: new data-axis width and
+    the data-shard remapping (streams are functions of shard id)."""
+    alive = [h for h in range(old_hosts) if h not in failed]
+    new_data = len(alive)
+    return {"alive_hosts": len(alive), "new_data_axis": new_data,
+            "shard_of_host": {h: i for i, h in enumerate(alive)}}

@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+fwht        — Walsh-Hadamard transform in MXU (Kronecker) form
+circulant   — block-circulant projection, implicit tile generation, fused f
+srf_decode  — fused SRF decode-step state update + readout
+
+Each kernel has a pure-jnp oracle in ref.py; ops.py provides the public
+wrappers with CPU-interpret / jnp-fallback routing.
+"""
+from . import ops, ref
+from .ops import circulant_project, fwht, srf_decode
+
+__all__ = ["ops", "ref", "circulant_project", "fwht", "srf_decode"]

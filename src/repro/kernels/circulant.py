@@ -1,0 +1,116 @@
+"""Pallas TPU kernel: block-circulant projection with fused feature epilogue.
+
+The paper computes f(A x) with A an (m, n) structured matrix. On GPU/CPU the
+fast path is FFT (O(n log n)); on TPU we instead *regenerate* each circulant
+tile from the O(n) generator directly in VMEM and feed the MXU:
+
+    HBM traffic:  g (nb*n floats)  +  x tile  +  y tile      [O(n + B n)]
+    dense equiv:  W (m*n floats)   +  x tile  +  y tile      [O(m n + B n)]
+
+For m = 2n..8n (SRF attention feature expansion) this cuts projection
+weight traffic by m/nb·n = n, turning a memory-bound matvec into a
+compute-bound MXU op — the paper's space claim converted into arithmetic
+intensity (DESIGN.md Sec 2).
+
+Tile generation: A[i, j] = g[b(i), (j - i mod n) mod n]. Within a row tile
+the index matrix is a shifted iota; we gather from the doubled generator
+gg = [g, g] so every row is a contiguous window (monotone gather, no mod).
+
+The pointwise nonlinearity f runs as an epilogue while the tile is still
+in VMEM (identity | relu | heaviside | exp(y - sq) | cos_sin).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+EPILOGUES = ("identity", "relu", "heaviside", "exp", "cos_sin")
+
+
+def _epilogue(y, epilogue, sq):
+    if epilogue == "identity":
+        return y
+    if epilogue == "relu":
+        return jnp.maximum(y, 0.0)
+    if epilogue == "heaviside":
+        return (y >= 0).astype(y.dtype)
+    if epilogue == "exp":
+        return jnp.exp(y - sq)
+    raise ValueError(epilogue)
+
+
+def _circ_kernel(x_ref, gg_ref, sq_ref, o_ref, *, n: int, tm: int,
+                 epilogue: str):
+    """Grid (batch_tiles, row_tiles). Regenerate (TM, n) tile rows from gg."""
+    j = pl.program_id(1)
+    x = x_ref[...]                                   # (TB, n)
+    gg = gg_ref[...]                                 # (nb, 2n) doubled gens
+    row0 = j * tm
+    rows = row0 + jax.lax.broadcasted_iota(jnp.int32, (tm, n), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (tm, n), 1)
+    blk = rows // n
+    off = rows % n
+    # A[i, c] = g[blk, (c - off) mod n] = gg[blk, c - off + n]
+    idx = cols - off + n                             # in [1, 2n)
+    tile = gg[blk, idx]                              # (TM, n) gather in VMEM
+    y = jax.lax.dot_general(
+        x, tile, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)          # (TB, TM)
+    if epilogue == "cos_sin":
+        o_ref[..., 0, :] = jnp.cos(y).astype(o_ref.dtype)
+        o_ref[..., 1, :] = jnp.sin(y).astype(o_ref.dtype)
+    else:
+        sq = sq_ref[...][:, :1] if epilogue == "exp" else None  # (TB, 1)
+        o_ref[...] = _epilogue(y, epilogue, sq).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("m", "epilogue", "block_b",
+                                             "block_m", "interpret"))
+def circulant_project_pallas(g: jax.Array, x: jax.Array, m: int,
+                             epilogue: str = "identity",
+                             sq: Optional[jax.Array] = None,
+                             block_b: int = 256, block_m: int = 256,
+                             interpret: bool = True) -> jax.Array:
+    """g: (nb, n) generators; x: (B, n) -> (B, m) (or (B, 2m) for cos_sin).
+
+    Requires m % block_m == 0 or block_m >= m; n enters VMEM whole
+    (n <= ~4096 for f32 — callers with bigger n use the jnp path).
+    """
+    assert epilogue in EPILOGUES, epilogue
+    nb, n = g.shape
+    bsz = x.shape[0]
+    assert nb * n >= m, f"generators cover {nb*n} rows < m={m}"
+    tb = min(block_b, bsz)
+    tm = min(block_m, m)
+    assert m % tm == 0, f"m={m} must tile by block_m={tm}"
+    gg = jnp.concatenate([g, g], axis=-1)            # (nb, 2n)
+    if sq is None:
+        sq = jnp.zeros((bsz, 1), x.dtype)
+    sq = sq.reshape(bsz, 1)
+    grid = (pl.cdiv(bsz, tb), m // tm)
+    kernel = functools.partial(_circ_kernel, n=n, tm=tm, epilogue=epilogue)
+    if epilogue == "cos_sin":
+        out_shape = jax.ShapeDtypeStruct((bsz, 2, m), x.dtype)
+        out_specs = pl.BlockSpec((tb, 2, tm), lambda i, j: (i, 0, j))
+    else:
+        out_shape = jax.ShapeDtypeStruct((bsz, m), x.dtype)
+        out_specs = pl.BlockSpec((tb, tm), lambda i, j: (i, j))
+    y = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tb, n), lambda i, j: (i, 0)),
+            pl.BlockSpec((nb, 2 * n), lambda i, j: (0, 0)),
+            pl.BlockSpec((tb, 1), lambda i, j: (i, 0)),
+        ],
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(x, gg, sq)
+    if epilogue == "cos_sin":
+        y = jnp.concatenate([y[:, 0, :], y[:, 1, :]], axis=-1)
+    return y

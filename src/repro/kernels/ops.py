@@ -1,0 +1,64 @@
+"""Public jit'd wrappers for the Pallas kernels with automatic fallback.
+
+On TPU the Pallas path compiles natively; on CPU (this container) kernels
+run in ``interpret=True`` mode for correctness, and large shapes route to
+the pure-jnp reference (same semantics, faster than interpreting).
+
+``use_pallas``: None = auto (pallas-interpret for small, jnp for big on
+CPU; pallas-native on TPU), True/False = force.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import circulant as _circ
+from . import fwht as _fwht
+from . import ref as _ref
+from . import srf_decode as _dec
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _route(use_pallas: Optional[bool], work_elems: int,
+           interp_budget: int = 1 << 22) -> str:
+    """-> 'native' | 'interpret' | 'ref'."""
+    if use_pallas is False:
+        return "ref"
+    if _on_tpu():
+        return "native"
+    if use_pallas is True:
+        return "interpret"
+    return "interpret" if work_elems <= interp_budget else "ref"
+
+
+def fwht(x: jax.Array, normalized: bool = True,
+         use_pallas: Optional[bool] = None) -> jax.Array:
+    route = _route(use_pallas, x.size)
+    if route == "ref":
+        return _ref.fwht_ref(x, normalized)
+    return _fwht.fwht_pallas(x, normalized, interpret=(route == "interpret"))
+
+
+def circulant_project(g: jax.Array, x: jax.Array, m: int,
+                      epilogue: str = "identity",
+                      sq: Optional[jax.Array] = None,
+                      use_pallas: Optional[bool] = None) -> jax.Array:
+    route = _route(use_pallas, x.shape[0] * m)
+    if route == "ref":
+        return _ref.circulant_project_ref(g, x, m, epilogue, sq)
+    return _circ.circulant_project_pallas(
+        g, x, m, epilogue, sq, interpret=(route == "interpret"))
+
+
+def srf_decode(s, z, phi_q, phi_k, v, eps: float = 1e-6,
+               use_pallas: Optional[bool] = None):
+    route = _route(use_pallas, s.size)
+    if route == "ref":
+        return _ref.srf_decode_ref(s, z, phi_q, phi_k, v, eps)
+    return _dec.srf_decode_pallas(s, z, phi_q, phi_k, v, eps,
+                                  interpret=(route == "interpret"))

@@ -1,0 +1,65 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each ``*_ref`` is the semantic ground truth; kernel tests sweep shapes and
+dtypes and assert allclose against these.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import transforms
+
+
+def fwht_ref(x: jax.Array, normalized: bool = True) -> jax.Array:
+    """(B, n) -> (B, n) Walsh-Hadamard transform (Sylvester order)."""
+    return transforms.fwht(x, normalized=normalized)
+
+
+def circulant_project_ref(g: jax.Array, x: jax.Array, m: int,
+                          epilogue: str = "identity",
+                          sq: Optional[jax.Array] = None) -> jax.Array:
+    """Block-circulant projection with fused feature epilogue.
+
+    g: (nb, n) block generators; x: (B, n); out: (B, m) —
+    y[B, i] = sum_j x[B, j] g[b(i), (j - i') mod n],  i = b(i)*n + i'.
+    epilogues: identity | relu | heaviside | exp (exp(y - sq[B]) ) |
+               cos_sin (out dim 2m: [cos(y), sin(y)]).
+    """
+    nb, n = g.shape
+    i = jnp.arange(nb * n)
+    blk = i // n
+    off = i % n
+    j = jnp.arange(n)
+    a = g[blk[:, None], (j[None, :] - off[:, None]) % n][:m]   # (m, n)
+    y = x @ a.T
+    if epilogue == "identity":
+        return y
+    if epilogue == "relu":
+        return jax.nn.relu(y)
+    if epilogue == "heaviside":
+        return (y >= 0).astype(y.dtype)
+    if epilogue == "exp":
+        assert sq is not None
+        return jnp.exp(y - sq[:, None])
+    if epilogue == "cos_sin":
+        return jnp.concatenate([jnp.cos(y), jnp.sin(y)], axis=-1)
+    raise ValueError(epilogue)
+
+
+def srf_decode_ref(s: jax.Array, z: jax.Array, phi_q: jax.Array,
+                   phi_k: jax.Array, v: jax.Array, eps: float = 1e-6
+                   ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Fused SRF decode-step state update + readout.
+
+    s: (B, H, m, dv)  z: (B, H, m)  phi_q/phi_k: (B, H, m)  v: (B, H, dv)
+    returns (s', z', out) with out: (B, H, dv).
+    """
+    s2 = s + phi_k[..., :, None] * v[..., None, :]
+    z2 = z + phi_k
+    num = jnp.einsum("bhm,bhmd->bhd", phi_q, s2)
+    den = jnp.einsum("bhm,bhm->bh", phi_q, z2)
+    return s2, z2, num / (den[..., None] + eps)

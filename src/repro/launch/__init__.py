@@ -1,0 +1,1 @@
+"""Launch layer: meshes, step factories, dry-run, train/serve CLIs."""

@@ -1,0 +1,201 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax import/init: jax locks the device count on first use.
+# Set here (and only here) so tests/benches still see 1 real device.
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell and
+extract memory/cost/collective evidence for EXPERIMENTS.md.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch mistral-nemo-12b \
+        --shape train_4k [--multi-pod] [--attn srf] [--remat dots]
+    PYTHONPATH=src python -m repro.launch.dryrun --all --out dryrun.jsonl
+
+Per cell this proves: the sharding config is coherent (SPMD partitioning
+succeeds), the per-device footprint fits HBM (memory_analysis), and yields
+the roofline terms (trip-count-aware HLO walk; see hlo_analysis.py).
+"""
+import argparse
+import dataclasses
+import json
+import sys
+import time
+import traceback
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import registry, shapes as shp
+from repro.distributed import sharding as S
+from repro.launch import hlo_analysis as H
+from repro.launch import mesh as M
+from repro.launch import steps
+from repro.models import hooks
+from repro.models import transformer as T
+from repro.optim import adamw
+
+HBM_PER_CHIP = 16 * 1024 ** 3   # v5e
+
+
+def _mem_summary(compiled) -> Dict[str, float]:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        return {}
+    return {
+        "arg_bytes": float(ma.argument_size_in_bytes),
+        "out_bytes": float(ma.output_size_in_bytes),
+        "alias_bytes": float(ma.alias_size_in_bytes),
+        "temp_bytes": float(ma.temp_size_in_bytes),
+        "peak_bytes": float(ma.argument_size_in_bytes
+                            + ma.output_size_in_bytes
+                            - ma.alias_size_in_bytes
+                            + ma.temp_size_in_bytes),
+    }
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool = False,
+             use_reduced: bool = False, overrides: Optional[Dict] = None,
+             hlo_dir: Optional[str] = None) -> Dict:
+    t0 = time.time()
+    cfg, note = shp.cell_config(arch, shape, use_reduced, **(overrides or {}))
+    ss = shp.SHAPES[shape]
+    mesh = M.make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    hooks.set_constrainer(S.make_constrainer(mesh, cfg))
+    rec: Dict = {
+        "arch": arch, "shape": shape, "mesh": M.describe(mesh),
+        "chips": chips, "step": ss.step, "attn_impl": cfg.attn_impl,
+        "note": note, "params": cfg.param_count(),
+        "active_params": cfg.active_param_count(),
+    }
+    try:
+        params_sds = jax.eval_shape(lambda: T.init(jax.random.PRNGKey(0), cfg))
+        pspecs = S.param_specs(params_sds, mesh)
+        ins = shp.input_specs(cfg, shape)
+        with mesh:
+            if ss.step == "train":
+                opt_sds = jax.eval_shape(lambda: adamw.init(params_sds))
+                ospecs = S.opt_state_specs(opt_sds, params_sds, pspecs, mesh)
+                bspecs = S.batch_specs_tree(ins["batch"], mesh)
+                gshard = S.named(mesh, S.zero1_specs(params_sds, pspecs,
+                                                     mesh))
+                fn = steps.make_train_step(cfg, grad_shardings=gshard)
+                jitted = jax.jit(
+                    fn,
+                    in_shardings=(S.named(mesh, pspecs), S.named(mesh, ospecs),
+                                  None, S.named(mesh, bspecs)),
+                    out_shardings=(S.named(mesh, pspecs),
+                                   S.named(mesh, ospecs), None),
+                    donate_argnums=(0, 1))
+                lowered = jitted.lower(params_sds, opt_sds,
+                                       jax.ShapeDtypeStruct((), jnp.int32),
+                                       ins["batch"])
+            elif ss.step == "prefill":
+                cspecs = S.cache_specs_tree(ins["cache"], cfg, mesh)
+                bspecs = S.batch_specs_tree(ins["batch"], mesh)
+                fn = steps.make_prefill_step(cfg)
+                jitted = jax.jit(
+                    fn,
+                    in_shardings=(S.named(mesh, pspecs),
+                                  S.named(mesh, bspecs),
+                                  S.named(mesh, cspecs)),
+                    out_shardings=(None, S.named(mesh, cspecs)),
+                    donate_argnums=(2,))
+                lowered = jitted.lower(params_sds, ins["batch"], ins["cache"])
+            else:  # decode
+                cspecs = S.cache_specs_tree(ins["cache"], cfg, mesh)
+                tspec = S.batch_specs_tree({"t": ins["tokens"]}, mesh)["t"]
+                fn = steps.make_serve_step(cfg)
+                jitted = jax.jit(
+                    fn,
+                    in_shardings=(S.named(mesh, pspecs),
+                                  S.named(mesh, cspecs),
+                                  S.named(mesh, {"t": tspec})["t"]),
+                    out_shardings=(None, None, S.named(mesh, cspecs)),
+                    donate_argnums=(1,))
+                lowered = jitted.lower(params_sds, ins["cache"],
+                                       ins["tokens"])
+            t1 = time.time()
+            compiled = lowered.compile()
+            t2 = time.time()
+            rec.update(_mem_summary(compiled))
+            ca = compiled.cost_analysis() or {}
+            rec["xla_cost_flops_once"] = float(ca.get("flops", 0.0))
+            hlo = compiled.as_text()
+            if hlo_dir:
+                os.makedirs(hlo_dir, exist_ok=True)
+                tag = f"{arch}_{shape}_{'mp' if multi_pod else 'sp'}"
+                with open(os.path.join(hlo_dir, tag + ".hlo"), "w") as f:
+                    f.write(hlo)
+            an = H.analyze(hlo)
+            rec.update({f"hlo_{k.replace('/', '_')}": v for k, v in an.items()})
+            rec.update(H.roofline_terms(an))
+            rec["fits_hbm"] = bool(rec.get("peak_bytes", 0) < HBM_PER_CHIP)
+            rec["lower_s"] = round(t1 - t0, 2)
+            rec["compile_s"] = round(t2 - t1, 2)
+            rec["ok"] = True
+    except Exception as e:  # failures here are bugs in the system
+        rec["ok"] = False
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    finally:
+        hooks.reset()
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=registry.ARCHS + [None])
+    ap.add_argument("--shape", default=None,
+                    choices=list(shp.SHAPES) + [None])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true", help="all 40 cells")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--attn", default=None, choices=[None, "full", "srf"])
+    ap.add_argument("--remat", default=None,
+                    choices=[None, "none", "dots", "full"])
+    ap.add_argument("--srf-kind", default=None)
+    ap.add_argument("--srf-features", type=int, default=None)
+    ap.add_argument("--out", default=None, help="append-jsonl results path")
+    ap.add_argument("--hlo-dir", default=None, help="dump compiled HLO here")
+    args = ap.parse_args(argv)
+
+    overrides = {}
+    if args.attn:
+        overrides["attn_impl"] = args.attn
+    if args.remat:
+        overrides["remat"] = args.remat
+    if args.srf_kind or args.srf_features:
+        base = registry.get(args.arch or registry.ARCHS[0]).srf
+        overrides["srf"] = dataclasses.replace(
+            base, **({"kind": args.srf_kind} if args.srf_kind else {}),
+            **({"n_features": args.srf_features} if args.srf_features else {}))
+
+    cells = []
+    archs = [args.arch] if args.arch else registry.ARCHS
+    shapes_ = [args.shape] if args.shape else list(shp.SHAPES)
+    if not (args.all or args.arch or args.shape):
+        ap.error("pass --arch/--shape or --all")
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    for a in archs:
+        for s in shapes_:
+            for mp in meshes:
+                cells.append((a, s, mp))
+
+    ok = True
+    for a, s, mp in cells:
+        rec = run_cell(a, s, multi_pod=mp, use_reduced=args.reduced,
+                       overrides=overrides, hlo_dir=args.hlo_dir)
+        ok = ok and rec["ok"]
+        line = json.dumps(rec, default=float)
+        print(line, flush=True)
+        if args.out:
+            with open(args.out, "a") as f:
+                f.write(line + "\n")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

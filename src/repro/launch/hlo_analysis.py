@@ -1,0 +1,329 @@
+"""Post-SPMD HLO text analyzer: trip-count-aware FLOPs / HBM bytes /
+collective bytes.
+
+Why not ``compiled.cost_analysis()``: XLA's HloCostAnalysis visits every
+instruction ONCE — a ``lax.scan`` over 40 layers reports one layer of
+flops (verified empirically; see EXPERIMENTS.md §Dry-run). This module
+re-walks ``compiled.as_text()`` (per-device local shapes after SPMD
+partitioning), builds the computation call graph, reads while-loop trip
+counts from XLA's ``backend_config known_trip_count`` (fallback: the
+lax.scan condition constant), and scales costs by the product of
+enclosing trips.
+
+Cost model per instruction:
+  dot               2 * prod(output_shape) * prod(lhs contracting dims)
+  fusion            flops of dots inside + HBM bytes = sum(operand buffer
+                    sizes) + output size (fusion operands ARE its HBM reads)
+  dus/copy/...      operands + output bytes
+  collectives       per-device bytes = max(operands, output); all-reduce
+                    counted x2 (ring reduce-scatter + all-gather)
+
+Approximations (documented in EXPERIMENTS.md): elementwise flops ignored
+(dot-dominated), conditional branches all counted, unknown trips -> 1 and
+flagged in ``unknown_trips``.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(s: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(s):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _first_shape_dims(s: str) -> List[int]:
+    m = _SHAPE_RE.search(s)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+def _elems(s: str) -> int:
+    n = 1
+    for d in _first_shape_dims(s):
+        n *= d
+    return max(n, 1) if _SHAPE_RE.search(s) else 0
+
+
+@dataclass
+class Instr:
+    name: str
+    opcode: str
+    out_shape: str
+    operands: List[str]
+    raw: str
+    callees: List[str] = field(default_factory=list)
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: List[Instr] = field(default_factory=list)
+
+
+_HDR_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\((.*)\)\s*->.*\{\s*$")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*"
+    r"((?:\([^)]*\))?[\w\[\],\{\}\s]*?)\s*"
+    r"([\w\-]+)\((.*)$")
+_CALLEE_RE = re.compile(
+    r"(?:to_apply|body|condition|branch_computations|calls)="
+    r"\{?%?([\w\.\-,\s%]+?)\}?(?:,|$)")
+_NAME_RE = re.compile(r"%([\w\.\-]+)")
+_TRIP_RE = re.compile(r'known_trip_count[^0-9]*?(\d+)')
+_PARAM_RE = re.compile(r"%?([\w\.\-]+):\s*((?:\([^)]*\))|(?:[\w\[\],]+))")
+
+
+def parse_hlo(text: str):
+    comps: Dict[str, Computation] = {}
+    shapes: Dict[str, str] = {}
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        s = line.strip()
+        if not s:
+            continue
+        hm = _HDR_RE.match(s)
+        if hm and "=" not in s.split("(")[0]:
+            cur = Computation(hm.group(2))
+            comps[cur.name] = cur
+            for pm in _PARAM_RE.finditer(hm.group(3)):
+                shapes.setdefault(pm.group(1), pm.group(2))
+            continue
+        im = _INSTR_RE.match(line)
+        if im and cur is not None:
+            name, oshape, opcode, rest = im.groups()
+            args = rest.split(")")[0] if ")" in rest else rest
+            operands = _NAME_RE.findall(args)
+            callees = []
+            for cm in _CALLEE_RE.finditer(line):
+                for nm in cm.group(1).split(","):
+                    nm = nm.strip().lstrip("%")
+                    if nm:
+                        callees.append(nm)
+            ins = Instr(name, opcode, oshape.strip(), operands, line, callees)
+            cur.instrs.append(ins)
+            shapes[name] = oshape.strip()
+    return comps, shapes
+
+
+def _dot_flops(ins: Instr, shapes: Dict[str, str]) -> float:
+    out = _elems(ins.out_shape)
+    mc = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.raw)
+    if not mc or not ins.operands:
+        return 2.0 * out
+    lhs_shape = shapes.get(ins.operands[0], "")
+    dims = _first_shape_dims(lhs_shape)
+    k = 1
+    for ci in mc.group(1).split(","):
+        if ci and int(ci) < len(dims):
+            k *= dims[int(ci)]
+    return 2.0 * out * k
+
+
+_COLL_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+             "collective-permute")
+_SKIP_BYTES = ("parameter", "constant", "tuple", "get-tuple-element",
+               "bitcast", "after-all", "partition-id", "replica-id",
+               "while", "conditional", "call", "custom-call", "compare",
+               "add", "subtract", "multiply", "select", "broadcast", "iota",
+               "reshape", "convert")
+
+
+def _while_trip(ins: Instr, comps) -> Optional[int]:
+    m = _TRIP_RE.search(ins.raw)
+    if m:
+        return int(m.group(1))
+    mc = re.search(r"condition=%?([\w\.\-]+)", ins.raw)
+    if mc and mc.group(1) in comps:
+        best = None
+        for ci in comps[mc.group(1)].instrs:
+            mm = re.search(r"constant\((\d+)\)", ci.raw)
+            if mm:
+                v = int(mm.group(1))
+                best = v if best is None else max(best, v)
+        return best
+    return None
+
+
+def analyze(text: str) -> Dict[str, float]:
+    comps, shapes = parse_hlo(text)
+    if not comps:
+        return {"flops": 0.0, "bytes": 0.0, "collective_bytes": 0.0}
+    called = set()
+    for c in comps.values():
+        for i in c.instrs:
+            called.update(i.callees)
+    roots = [n for n in comps if n not in called]
+    entry = next((n for n in roots if "main" in n), roots[0] if roots else
+                 next(iter(comps)))
+
+    totals = defaultdict(float)
+    coll = defaultdict(float)
+
+    def _dus_update_bytes(cname: str, out_bytes: int) -> Optional[float]:
+        """If the fused computation is an in-place cache update (contains a
+        dynamic-update-slice producing the fusion's full output), the HBM
+        cost is ~2x the update slice, not 2x the buffer."""
+        if cname not in comps:
+            return None
+        for fi in comps[cname].instrs:
+            if fi.opcode == "dynamic-update-slice" and \
+                    _shape_bytes(fi.out_shape) == out_bytes and \
+                    len(fi.operands) >= 2:
+                upd = _shape_bytes(shapes.get(fi.operands[1], ""))
+                if 0 < upd < out_bytes:
+                    return 2.0 * upd
+        return None
+
+    def _sliced_param_bytes(cname: str) -> Dict[int, float]:
+        """Fusion params consumed ONLY via dynamic-slice read just the
+        slice, not the whole buffer (e.g. the per-layer weight slice of a
+        scan's stacked params — charging the full stack per iteration
+        overcounts weight traffic by n_layers). -> {param_index: bytes}."""
+        out: Dict[int, float] = {}
+        if cname not in comps:
+            return out
+        pname_to_idx: Dict[str, int] = {}
+        uses: Dict[str, List[Instr]] = {}
+        for fi in comps[cname].instrs:
+            if fi.opcode == "parameter":
+                m = re.search(r"parameter\((\d+)\)", fi.raw)
+                if m:
+                    pname_to_idx[fi.name] = int(m.group(1))
+            for o in fi.operands:
+                uses.setdefault(o, []).append(fi)
+        for pname, idx in pname_to_idx.items():
+            us = uses.get(pname, [])
+            if us and all(u.opcode == "dynamic-slice" for u in us):
+                out[idx] = sum(_shape_bytes(u.out_shape) for u in us)
+        return out
+
+    def op_bytes(ins: Instr) -> float:
+        # In-place slice updates touch only the slice, not the buffer.
+        if ins.opcode == "dynamic-update-slice" and len(ins.operands) >= 2:
+            return 2.0 * _shape_bytes(shapes.get(ins.operands[1], ""))
+        if ins.opcode == "dynamic-slice":
+            return 2.0 * _shape_bytes(ins.out_shape)
+        if ins.opcode == "fusion":
+            ob_out = _shape_bytes(ins.out_shape)
+            adj = None
+            sliced: Dict[int, float] = {}
+            for c in ins.callees:
+                a = _dus_update_bytes(c, ob_out)
+                adj = a if a is not None else adj
+                sliced.update(_sliced_param_bytes(c))
+            ob = 0.0
+            for i, o in enumerate(ins.operands):
+                ob += sliced.get(i, _shape_bytes(shapes.get(o, "")))
+            if adj is not None:
+                big = max((_shape_bytes(shapes.get(o, ""))
+                           for o in ins.operands), default=0)
+                return adj + (ob - big if ob > big else 0.0)
+            return ob + ob_out
+        ob = sum(_shape_bytes(shapes.get(o, "")) for o in ins.operands)
+        return ob + _shape_bytes(ins.out_shape)
+
+    def fusion_flops(cname: str) -> float:
+        f = 0.0
+        if cname in comps:
+            for fi in comps[cname].instrs:
+                if fi.opcode == "dot":
+                    f += _dot_flops(fi, shapes)
+                elif fi.opcode == "convolution":
+                    f += 2.0 * _elems(fi.out_shape)
+        return f
+
+    stack = set()
+
+    def walk(name: str, mult: float):
+        if name not in comps or name in stack:
+            return
+        stack.add(name)
+        for ins in comps[name].instrs:
+            op = ins.opcode
+            if op == "while":
+                trip = _while_trip(ins, comps)
+                if trip is None:
+                    trip = 1
+                    totals["unknown_trips"] += 1
+                mb = re.search(r"body=%?([\w\.\-]+)", ins.raw)
+                if mb:
+                    walk(mb.group(1), mult * trip)
+                continue
+            if op in ("conditional", "call"):
+                for c in ins.callees:
+                    walk(c, mult)
+                continue
+            if op == "dot":
+                totals["flops"] += mult * _dot_flops(ins, shapes)
+                totals["bytes"] += mult * op_bytes(ins)
+                continue
+            if op == "convolution":
+                totals["flops"] += mult * 2.0 * _elems(ins.out_shape)
+                totals["bytes"] += mult * op_bytes(ins)
+                continue
+            if op == "fusion":
+                for c in ins.callees:
+                    totals["flops"] += mult * fusion_flops(c)
+                totals["bytes"] += mult * op_bytes(ins)
+                continue
+            if op in _COLL_OPS:
+                b = max(sum(_shape_bytes(shapes.get(o, ""))
+                            for o in ins.operands),
+                        _shape_bytes(ins.out_shape))
+                factor = 2.0 if op == "all-reduce" else 1.0
+                coll[op] += mult * b * factor
+                totals["collective_bytes"] += mult * b * factor
+                totals["collective_count"] += mult
+                continue
+            if op not in _SKIP_BYTES:
+                totals["bytes"] += mult * op_bytes(ins)
+        stack.discard(name)
+
+    walk(entry, 1.0)
+    out = dict(totals)
+    for k, v in coll.items():
+        out[f"coll/{k}"] = v
+    out.setdefault("flops", 0.0)
+    out.setdefault("bytes", 0.0)
+    out.setdefault("collective_bytes", 0.0)
+    return out
+
+
+# --- roofline ----------------------------------------------------------------
+
+PEAK_FLOPS = 197e12        # bf16 / chip (v5e)
+HBM_BW = 819e9             # B/s / chip
+ICI_BW = 50e9              # B/s / link
+
+
+def roofline_terms(per_device: Dict[str, float]) -> Dict[str, float]:
+    """Inputs are PER-DEVICE (post-SPMD HLO) — terms are wall-seconds."""
+    t_comp = per_device["flops"] / PEAK_FLOPS
+    t_mem = per_device["bytes"] / HBM_BW
+    t_coll = per_device["collective_bytes"] / ICI_BW
+    dom = max(("compute", t_comp), ("memory", t_mem),
+              ("collective", t_coll), key=lambda kv: kv[1])
+    return {"t_compute": t_comp, "t_memory": t_mem, "t_collective": t_coll,
+            "t_roofline": dom[1], "bottleneck": dom[0]}

@@ -1,0 +1,73 @@
+"""Step-function factories shared by the trainer, the server and the
+multi-pod dry-run. Pure functions of (params, state, batch) — jit/sharding
+is applied by the caller.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as model
+from repro.optim import adamw, schedule
+
+
+@dataclass(frozen=True)
+class TrainHyper:
+    lr: float = 3e-4
+    warmup: int = 100
+    total_steps: int = 10000
+    adam: adamw.AdamWConfig = adamw.AdamWConfig()
+    aux_weight: float = 0.01
+
+
+def make_train_step(cfg, hyper: TrainHyper = TrainHyper(),
+                    grad_shardings=None):
+    """``grad_shardings``: optional NamedSharding tree = the ZeRO-1 moment
+    shardings. Constraining the bf16 grads to it BEFORE the optimizer's
+    f32 upcast makes XLA reduce-scatter bf16 gradients to the moment
+    shards instead of all-gathering f32 ones (2x collective bytes on the
+    MoE cells, measured — EXPERIMENTS.md §Perf-hillclimb A4)."""
+    def train_step(params, opt_state, step_idx, batch):
+        def loss(p):
+            return model.loss_fn(p, cfg, batch, hyper.aux_weight)
+        (l, metrics), grads = jax.value_and_grad(loss, has_aux=True)(params)
+        if grad_shardings is not None:
+            grads = jax.lax.with_sharding_constraint(grads, grad_shardings)
+        lr = schedule.warmup_cosine(step_idx, hyper.lr, hyper.warmup,
+                                    hyper.total_steps)
+        params, opt_state, stats = adamw.update(grads, opt_state, params,
+                                                lr, hyper.adam)
+        out = {"loss": l, "lr": lr, **metrics, **stats}
+        return params, opt_state, out
+    return train_step
+
+
+def make_grad_step(cfg, aux_weight: float = 0.01):
+    """Gradients only (used by the compressed-DP trainer, which applies the
+    optimizer after the explicit cross-pod reduction)."""
+    def grad_step(params, batch):
+        def loss(p):
+            return model.loss_fn(p, cfg, batch, aux_weight)
+        (l, metrics), grads = jax.value_and_grad(loss, has_aux=True)(params)
+        return grads, {"loss": l, **metrics}
+    return grad_step
+
+
+def make_prefill_step(cfg):
+    def prefill_step(params, batch, cache):
+        return model.prefill(params, cfg, batch, cache)
+    return prefill_step
+
+
+def make_serve_step(cfg, greedy: bool = True, temperature: float = 1.0):
+    """One decode step: (params, cache, tokens(B,1)) -> (next(B,1), cache)."""
+    def serve_step(params, cache, tokens):
+        logits, cache = model.decode_step(params, cfg, cache, tokens)
+        logits = logits[:, -1, : cfg.vocab]
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        return nxt, logits, cache
+    return serve_step

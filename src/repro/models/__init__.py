@@ -1,0 +1,5 @@
+"""Model zoo: one config-driven implementation covering all assigned archs."""
+from . import attention, frontends, hooks, layers, moe, ssm, transformer
+
+__all__ = ["attention", "frontends", "hooks", "layers", "moe", "ssm",
+           "transformer"]

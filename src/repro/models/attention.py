@@ -1,0 +1,414 @@
+"""Attention blocks: full softmax GQA, MLA (DeepSeek latent), and the
+paper's SRF attention, with train / prefill / decode entry points.
+
+Modes
+-----
+train    causal, no cache
+encoder  bidirectional, no cache
+prefill  causal, returns a decode cache
+decode   single new token against the cache
+
+Caches
+------
+full GQA : {"k","v": (B, Hkv, S, hd), "idx": ()}                O(S)
+MLA      : {"c": (B, S, kv_lora), "kpe": (B, S, rope), "idx"}   O(S), tiny/token
+SRF      : {"s": (B, Hq, m, hd), "z": (B, Hq, m), "idx"}        O(m) — seq-free
+           (the paper's space reduction: no KV cache at all)
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import srf_attention as srf
+from repro.core.srf_attention import SRFConfig
+from repro.core.transforms import is_pow2
+from . import layers
+
+
+def srf_cfg(cfg) -> SRFConfig:
+    dim = cfg.mla_qk_dim if cfg.is_mla else cfg.head_dim
+    return SRFConfig(kind=cfg.srf.kind, n_features=cfg.srf.n_features,
+                     head_dim=dim, feature=cfg.srf.feature, r=cfg.srf.r,
+                     use_hd=is_pow2(dim), chunk=cfg.srf.chunk)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def attn_init(rng, cfg, dtype) -> Dict:
+    keys = jax.random.split(rng, 12)
+    d = cfg.d_model
+    p: Dict = {}
+    if cfg.is_mla:
+        p["wq"] = layers.dense_init(keys[0], d, cfg.n_heads * cfg.mla_qk_dim, dtype)
+        p["wdkv"] = layers.dense_init(keys[1], d, cfg.mla_kv_lora, dtype)
+        p["wkpe"] = layers.dense_init(keys[2], d, cfg.mla_qk_rope, dtype)
+        p["wuk"] = layers.dense_init(keys[3], cfg.mla_kv_lora,
+                                     cfg.n_heads * cfg.mla_qk_nope, dtype)
+        p["wuv"] = layers.dense_init(keys[4], cfg.mla_kv_lora,
+                                     cfg.n_heads * cfg.mla_v_dim, dtype)
+        p["wo"] = layers.dense_init(keys[5], cfg.n_heads * cfg.mla_v_dim, d, dtype)
+    else:
+        p["wq"] = layers.dense_init(keys[0], d, cfg.q_dim, dtype)
+        p["wk"] = layers.dense_init(keys[1], d, cfg.kv_dim, dtype)
+        p["wv"] = layers.dense_init(keys[2], d, cfg.kv_dim, dtype)
+        p["wo"] = layers.dense_init(keys[3], cfg.q_dim, d, dtype)
+        if cfg.qkv_bias:
+            p["bq"] = jnp.zeros((cfg.q_dim,), dtype)
+            p["bk"] = jnp.zeros((cfg.kv_dim,), dtype)
+            p["bv"] = jnp.zeros((cfg.kv_dim,), dtype)
+    if cfg.qk_norm:
+        hd = cfg.mla_qk_dim if cfg.is_mla else cfg.head_dim
+        p["q_norm"] = jnp.ones((hd,), dtype)
+        p["k_norm"] = jnp.ones((hd,), dtype)
+    if cfg.attn_impl == "srf":
+        sc = srf_cfg(cfg)
+        n_pm = cfg.n_heads if cfg.is_mla else cfg.n_kv_heads
+        p["srf"] = srf.init(keys[6], sc, n_pm, dtype)
+    return p
+
+
+def cross_attn_init(rng, cfg, dtype) -> Dict:
+    keys = jax.random.split(rng, 4)
+    d = cfg.d_model
+    return {"wq": layers.dense_init(keys[0], d, cfg.q_dim, dtype),
+            "wk": layers.dense_init(keys[1], d, cfg.kv_dim, dtype),
+            "wv": layers.dense_init(keys[2], d, cfg.kv_dim, dtype),
+            "wo": layers.dense_init(keys[3], cfg.q_dim, d, dtype)}
+
+
+def init_cache(cfg, batch: int, max_len: int, dtype) -> Dict:
+    """Allocate the decode cache (shape depends on attn_impl)."""
+    if cfg.attn_impl == "srf":
+        sc = srf_cfg(cfg)
+        dv = cfg.mla_v_dim if cfg.is_mla else cfg.head_dim
+        return {"s": jnp.zeros((batch, cfg.n_heads, sc.feat_dim, dv), dtype),
+                "z": jnp.zeros((batch, cfg.n_heads, sc.feat_dim), dtype),
+                "idx": jnp.zeros((), jnp.int32)}
+    if cfg.is_mla:
+        return {"c": jnp.zeros((batch, max_len, cfg.mla_kv_lora), dtype),
+                "kpe": jnp.zeros((batch, max_len, cfg.mla_qk_rope), dtype),
+                "idx": jnp.zeros((), jnp.int32)}
+    if cfg.kv_cache_dtype == "int8":
+        shp = (batch, cfg.n_kv_heads, max_len, cfg.head_dim)
+        return {"k": jnp.zeros(shp, jnp.int8),
+                "v": jnp.zeros(shp, jnp.int8),
+                "k_scale": jnp.zeros(shp[:-1] + (1,), jnp.float32),
+                "v_scale": jnp.zeros(shp[:-1] + (1,), jnp.float32),
+                "idx": jnp.zeros((), jnp.int32)}
+    return {"k": jnp.zeros((batch, cfg.n_kv_heads, max_len, cfg.head_dim), dtype),
+            "v": jnp.zeros((batch, cfg.n_kv_heads, max_len, cfg.head_dim), dtype),
+            "idx": jnp.zeros((), jnp.int32)}
+
+
+def _quantize_kv(x: jax.Array):
+    """(B, H, L, hd) -> (int8 values, f32 per-token-per-head scales)."""
+    s = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True) / 127.0
+    s = jnp.maximum(s, 1e-8)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / s), -127, 127)
+    return q.astype(jnp.int8), s
+
+
+def _dequantize_kv(q: jax.Array, s: jax.Array, dtype) -> jax.Array:
+    return (q.astype(jnp.float32) * s).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# shared helpers
+# ---------------------------------------------------------------------------
+
+def _split_heads(x, n_heads, hd):
+    b, l, _ = x.shape
+    return x.reshape(b, l, n_heads, hd).transpose(0, 2, 1, 3)
+
+
+def _merge_heads(x):
+    b, h, l, hd = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, l, h * hd)
+
+
+ATTN_Q_CHUNK = 1024   # query-chunked attention block (memory: qc*S probs
+                      # instead of L*S; the chunk body is rematerialized)
+
+
+def _attn_block(qg, k, v, scale, mask):
+    """qg: (B,Hkv,G,qc,hd); mask: (qc,S) or (B,qc,S) or None -> (...,qc,dv).
+
+    Scores/softmax in f32 (stability); the probability matrix is cast back
+    to the input dtype for the PV contraction — under sequence sharding
+    that contraction carries the model-axis psum, and a bf16 psum ships
+    half the bytes of the f32 one (flash-attention kernels do the same)."""
+    logits = jnp.einsum("bhgld,bhsd->bhgls", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if mask is not None:
+        while mask.ndim < logits.ndim:
+            mask = mask[None]
+        logits = jnp.where(mask, logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    return jnp.einsum("bhgls,bhsd->bhgld", w, v)
+
+
+def _softmax_attn(q, k, v, scale, causal: bool, kv_valid=None,
+                  q_chunk: int = ATTN_Q_CHUNK):
+    """q: (B,Hq,L,hd) k,v: (B,Hkv,S,hd). GQA via head grouping.
+
+    Long query axes are processed in rematerialized chunks so the (qc, S)
+    probability block is the only live attention buffer — the unchunked
+    (L, S) f32 probs are 89 GB/device at prefill_32k (measured; §Perf)."""
+    b, hq, l, hd = q.shape
+    hkv = k.shape[1]
+    s = k.shape[2]
+    g = hq // hkv
+    qg = q.reshape(b, hkv, g, l, hd)
+    dv = v.shape[-1]
+
+    base_mask = None
+    if kv_valid is not None:
+        base_mask = kv_valid[None, :]                      # (1, S)
+
+    if l <= q_chunk or l % q_chunk != 0:
+        mask = base_mask
+        if causal:
+            tri = jnp.tril(jnp.ones((l, s), bool), k=s - l)
+            mask = tri if mask is None else (tri & mask)
+        out = _attn_block(qg, k, v, scale, mask)
+        return out.reshape(b, hq, l, dv).astype(q.dtype)
+
+    nc = l // q_chunk
+    qc_all = qg.reshape(b, hkv, g, nc, q_chunk, hd).transpose(3, 0, 1, 2, 4, 5)
+    offs = jnp.arange(nc) * q_chunk
+
+    @jax.checkpoint
+    def block(carry, inp):
+        qc, off = inp
+        mask = base_mask
+        if causal:
+            rows = off + jnp.arange(q_chunk)[:, None]      # absolute q pos
+            cols = jnp.arange(s)[None, :]
+            tri = rows + (s - l) >= cols
+            mask = tri if mask is None else (tri & mask[0][None])
+        return carry, _attn_block(qc, k, v, scale, mask)
+
+    _, outs = jax.lax.scan(block, 0, (qc_all, offs))
+    out = outs.transpose(1, 2, 3, 0, 4, 5).reshape(b, hkv, g, l, dv)
+    return out.reshape(b, hq, l, dv).astype(q.dtype)
+
+
+def _repeat_kv(x, g):
+    """(B, Hkv, ...)-> (B, Hkv*g, ...)."""
+    return jnp.repeat(x, g, axis=1)
+
+
+# ---------------------------------------------------------------------------
+# full / SRF GQA attention
+# ---------------------------------------------------------------------------
+
+def attention(p, cfg, x: jax.Array, positions: jax.Array, mode: str,
+              cache: Optional[Dict] = None, pos3: Optional[jax.Array] = None
+              ) -> Tuple[jax.Array, Optional[Dict]]:
+    if cfg.is_mla:
+        return _mla_attention(p, cfg, x, positions, mode, cache)
+    b, l, d = x.shape
+    q = x @ p["wq"] + (p.get("bq", 0) if cfg.qkv_bias else 0)
+    k = x @ p["wk"] + (p.get("bk", 0) if cfg.qkv_bias else 0)
+    v = x @ p["wv"] + (p.get("bv", 0) if cfg.qkv_bias else 0)
+    q = _split_heads(q, cfg.n_heads, cfg.head_dim)
+    k = _split_heads(k, cfg.n_kv_heads, cfg.head_dim)
+    v = _split_heads(v, cfg.n_kv_heads, cfg.head_dim)
+    if cfg.qk_norm:
+        q = layers.head_rmsnorm(p["q_norm"], q, cfg.norm_eps)
+        k = layers.head_rmsnorm(p["k_norm"], k, cfg.norm_eps)
+    if cfg.m_rope and pos3 is not None:
+        q = layers.apply_m_rope(q, pos3, cfg.rope_theta, cfg.m_rope_sections)
+        k = layers.apply_m_rope(k, pos3, cfg.rope_theta, cfg.m_rope_sections)
+    else:
+        q = layers.apply_rope(q, positions, cfg.rope_theta)
+        k = layers.apply_rope(k, positions, cfg.rope_theta)
+
+    if cfg.attn_impl == "srf":
+        out, cache = _srf_paths(p, cfg, q, k, v, mode, cache)
+    else:
+        out, cache = _full_paths(cfg, q, k, v, positions, mode, cache)
+    return _merge_heads(out) @ p["wo"], cache
+
+
+def _full_paths(cfg, q, k, v, positions, mode, cache):
+    scale = 1.0 / math.sqrt(cfg.head_dim)
+    if mode in ("train", "encoder"):
+        return _softmax_attn(q, k, v, scale, causal=(mode == "train")), None
+    quant = "k_scale" in (cache or {})
+    if mode == "prefill":
+        out = _softmax_attn(q, k, v, scale, causal=True)
+        l = k.shape[2]
+        new = {"idx": jnp.asarray(l, jnp.int32)}
+        if quant:
+            kq, ks = _quantize_kv(k)
+            vq, vs = _quantize_kv(v)
+            new["k"] = jax.lax.dynamic_update_slice(cache["k"], kq,
+                                                    (0, 0, 0, 0))
+            new["v"] = jax.lax.dynamic_update_slice(cache["v"], vq,
+                                                    (0, 0, 0, 0))
+            new["k_scale"] = jax.lax.dynamic_update_slice(
+                cache["k_scale"], ks, (0, 0, 0, 0))
+            new["v_scale"] = jax.lax.dynamic_update_slice(
+                cache["v_scale"], vs, (0, 0, 0, 0))
+        else:
+            new["k"] = jax.lax.dynamic_update_slice(
+                cache["k"], k.astype(cache["k"].dtype), (0, 0, 0, 0))
+            new["v"] = jax.lax.dynamic_update_slice(
+                cache["v"], v.astype(cache["v"].dtype), (0, 0, 0, 0))
+        return out, new
+    if mode == "decode":
+        idx = cache["idx"]
+        new = {"idx": idx + 1}
+        if quant:
+            kq, ks = _quantize_kv(k)
+            vq, vs = _quantize_kv(v)
+            new["k"] = jax.lax.dynamic_update_slice(cache["k"], kq,
+                                                    (0, 0, idx, 0))
+            new["v"] = jax.lax.dynamic_update_slice(cache["v"], vq,
+                                                    (0, 0, idx, 0))
+            new["k_scale"] = jax.lax.dynamic_update_slice(
+                cache["k_scale"], ks, (0, 0, idx, 0))
+            new["v_scale"] = jax.lax.dynamic_update_slice(
+                cache["v_scale"], vs, (0, 0, idx, 0))
+            kf = _dequantize_kv(new["k"], new["k_scale"], q.dtype)
+            vf = _dequantize_kv(new["v"], new["v_scale"], q.dtype)
+        else:
+            new["k"] = jax.lax.dynamic_update_slice(
+                cache["k"], k.astype(cache["k"].dtype), (0, 0, idx, 0))
+            new["v"] = jax.lax.dynamic_update_slice(
+                cache["v"], v.astype(cache["v"].dtype), (0, 0, idx, 0))
+            kf, vf = new["k"], new["v"]
+        s = new["k"].shape[2]
+        valid = jnp.arange(s) <= idx
+        out = _softmax_attn(q, kf, vf, scale, causal=False, kv_valid=valid)
+        return out, new
+    raise ValueError(mode)
+
+
+def _srf_paths(p, cfg, q, k, v, mode, cache):
+    sc = srf_cfg(cfg)
+    g = cfg.n_heads // cfg.n_kv_heads
+    # feature maps per kv head; group q-heads onto their kv head's P-model
+    b, hq, l, hd = q.shape
+    qg = q.reshape(b, cfg.n_kv_heads, g * l, hd)
+    phi_q = srf.feature_map(sc, p["srf"], qg, is_query=True)
+    phi_q = phi_q.reshape(b, hq, l, -1)
+    phi_k = srf.feature_map(sc, p["srf"], k, is_query=False)
+    phi_k = _repeat_kv(phi_k, g)
+    vr = _repeat_kv(v, g)
+    if mode == "encoder":
+        return srf.attention_noncausal(phi_q, phi_k, vr), None
+    if mode == "train":
+        return srf.attention_causal(sc, phi_q, phi_k, vr), None
+    if mode == "prefill":
+        out = srf.attention_causal(sc, phi_q, phi_k, vr)
+        s, z = srf.prefill_state(phi_k, vr)
+        return out, {"s": s.astype(v.dtype), "z": z.astype(v.dtype),
+                     "idx": jnp.asarray(l, jnp.int32)}
+    if mode == "decode":
+        state = (cache["s"], cache["z"])
+        (s, z), out = srf.decode_step(state, phi_q, phi_k, vr)
+        return out, {"s": s, "z": z, "idx": cache["idx"] + 1}
+    raise ValueError(mode)
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2 multi-head latent attention)
+# ---------------------------------------------------------------------------
+
+def _mla_qkv(p, cfg, x, c, kpe, positions, kpos=None):
+    """Decompress latent c into per-head k/v; build roped q."""
+    b, l, _ = x.shape
+    s = c.shape[1]
+    h = cfg.n_heads
+    q = (x @ p["wq"]).reshape(b, l, h, cfg.mla_qk_dim).transpose(0, 2, 1, 3)
+    if cfg.qk_norm:
+        q = layers.head_rmsnorm(p["q_norm"], q, cfg.norm_eps)
+    qn, qp = jnp.split(q, [cfg.mla_qk_nope], axis=-1)
+    qp = layers.apply_rope(qp, positions, cfg.rope_theta)
+    kn = (c @ p["wuk"]).reshape(b, s, h, cfg.mla_qk_nope).transpose(0, 2, 1, 3)
+    v = (c @ p["wuv"]).reshape(b, s, h, cfg.mla_v_dim).transpose(0, 2, 1, 3)
+    kp = kpe[:, None, :, :]                                 # (B,1,S,rope)
+    kpos_arr = kpos if kpos is not None else positions
+    kp = layers.apply_rope(kp, kpos_arr, cfg.rope_theta)
+    q_full = jnp.concatenate([qn, qp], axis=-1)
+    k_full = jnp.concatenate([kn, jnp.broadcast_to(kp, (b, h, s, cfg.mla_qk_rope))],
+                             axis=-1)
+    return q_full, k_full, v
+
+
+def _mla_attention(p, cfg, x, positions, mode, cache):
+    b, l, d = x.shape
+    scale = 1.0 / math.sqrt(cfg.mla_qk_dim)
+    c_new = x @ p["wdkv"]                                   # (B,L,lora)
+    kpe_new = x @ p["wkpe"]                                 # (B,L,rope)
+
+    if mode in ("train", "encoder", "prefill"):
+        q, k, v = _mla_qkv(p, cfg, x, c_new, kpe_new, positions)
+        if cfg.attn_impl == "srf":
+            sc = srf_cfg(cfg)
+            phi_q = srf.feature_map(sc, p["srf"], q, is_query=True)
+            phi_k = srf.feature_map(sc, p["srf"], k, is_query=False)
+            out = (srf.attention_noncausal(phi_q, phi_k, v) if mode == "encoder"
+                   else srf.attention_causal(sc, phi_q, phi_k, v))
+            new_cache = None
+            if mode == "prefill":
+                s, z = srf.prefill_state(phi_k, v)
+                new_cache = {"s": s.astype(x.dtype), "z": z.astype(x.dtype),
+                             "idx": jnp.asarray(l, jnp.int32)}
+        else:
+            out = _softmax_attn(q, k, v, scale, causal=(mode != "encoder"))
+            new_cache = None
+            if mode == "prefill":
+                ck = jax.lax.dynamic_update_slice(cache["c"],
+                                                  c_new.astype(cache["c"].dtype),
+                                                  (0, 0, 0))
+                kk = jax.lax.dynamic_update_slice(cache["kpe"],
+                                                  kpe_new.astype(cache["kpe"].dtype),
+                                                  (0, 0, 0))
+                new_cache = {"c": ck, "kpe": kk, "idx": jnp.asarray(l, jnp.int32)}
+        return _merge_heads(out) @ p["wo"], new_cache
+
+    if mode == "decode":
+        if cfg.attn_impl == "srf":
+            q, k, v = _mla_qkv(p, cfg, x, c_new, kpe_new, positions)
+            sc = srf_cfg(cfg)
+            phi_q = srf.feature_map(sc, p["srf"], q, is_query=True)
+            phi_k = srf.feature_map(sc, p["srf"], k, is_query=False)
+            (s, z), out = srf.decode_step((cache["s"], cache["z"]), phi_q, phi_k, v)
+            new_cache = {"s": s, "z": z, "idx": cache["idx"] + 1}
+            return _merge_heads(out) @ p["wo"], new_cache
+        idx = cache["idx"]
+        cc = jax.lax.dynamic_update_slice(cache["c"], c_new.astype(cache["c"].dtype),
+                                          (0, idx, 0))
+        kk = jax.lax.dynamic_update_slice(cache["kpe"],
+                                          kpe_new.astype(cache["kpe"].dtype),
+                                          (0, idx, 0))
+        smax = cc.shape[1]
+        kpos = jnp.broadcast_to(jnp.arange(smax)[None], (b, smax))
+        q, k, v = _mla_qkv(p, cfg, x, cc, kk, positions, kpos=kpos)
+        valid = jnp.arange(smax) <= idx
+        out = _softmax_attn(q, k, v, scale, causal=False, kv_valid=valid)
+        return _merge_heads(out) @ p["wo"], {"c": cc, "kpe": kk, "idx": idx + 1}
+    raise ValueError(mode)
+
+
+# ---------------------------------------------------------------------------
+# cross attention (enc-dec)
+# ---------------------------------------------------------------------------
+
+def cross_attention(p, cfg, x: jax.Array, memory: jax.Array) -> jax.Array:
+    """Exact softmax cross-attention (encoder memory is short)."""
+    b, l, d = x.shape
+    q = _split_heads(x @ p["wq"], cfg.n_heads, cfg.head_dim)
+    k = _split_heads(memory @ p["wk"], cfg.n_kv_heads, cfg.head_dim)
+    v = _split_heads(memory @ p["wv"], cfg.n_kv_heads, cfg.head_dim)
+    out = _softmax_attn(q, k, v, 1.0 / math.sqrt(cfg.head_dim), causal=False)
+    return _merge_heads(out) @ p["wo"]

@@ -1,0 +1,30 @@
+"""Modality frontends for [audio]/[vlm] archs — STUBS by spec.
+
+``input_specs()`` provides precomputed frame/patch embeddings; the only
+learned piece here is a linear adapter into d_model (so the backbone sees
+a realistic projected stream and the adapter shards like any weight).
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from . import layers
+
+# feature dims of the precomputed stub embeddings
+AUDIO_FEAT_DIM = 160     # fbank-ish frame features
+VISION_FEAT_DIM = 1176   # 14x14x2x3 qwen2-vl patchify
+
+def frontend_init(rng, cfg, dtype) -> Dict:
+    if cfg.frontend == "audio_stub":
+        return {"adapter": layers.dense_init(rng, AUDIO_FEAT_DIM, cfg.d_model, dtype)}
+    if cfg.frontend == "vision_stub":
+        return {"adapter": layers.dense_init(rng, VISION_FEAT_DIM, cfg.d_model, dtype)}
+    return {}
+
+
+def frontend_apply(p, cfg, feats: jax.Array) -> jax.Array:
+    """(B, T, feat_dim) precomputed features -> (B, T, d_model)."""
+    return feats @ p["adapter"]

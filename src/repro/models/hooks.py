@@ -1,0 +1,21 @@
+"""Sharding-constraint hook. Models call ``constrain(x, role)`` at a few
+activation boundaries; the launcher installs a mesh-aware implementation
+(distributed/sharding.py). Default is identity so models import mesh-free.
+"""
+from __future__ import annotations
+
+_fn = lambda x, role: x
+
+
+def constrain(x, role: str):
+    return _fn(x, role)
+
+
+def set_constrainer(fn) -> None:
+    global _fn
+    _fn = fn
+
+
+def reset() -> None:
+    global _fn
+    _fn = lambda x, role: x

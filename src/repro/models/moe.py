@@ -1,0 +1,146 @@
+"""Mixture-of-Experts FFN: top-k routing, capacity-bounded scatter dispatch,
+shared experts (DeepSeek style), load-balance aux loss.
+
+Dispatch is scatter/gather based (not the GShard one-hot einsum, whose
+(T, E, C) dispatch tensor is infeasible at top-6/E=64): slot positions come
+from running per-expert cumulative counts, tokens beyond capacity are
+dropped (mode='drop' scatter), and the (E, C, d) buffer is sharded over the
+'model' axis (expert parallelism) by the launch-time sharding constraints —
+XLA inserts the canonical MoE all-to-all at the token->expert resharding
+boundary.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import hooks, layers
+
+_constrain = hooks.constrain
+
+
+def moe_init(rng, cfg, dtype) -> Dict:
+    keys = jax.random.split(rng, 5)
+    d, e, ffe = cfg.d_model, cfg.moe_experts, cfg.moe_d_ff
+    s = 1.0 / math.sqrt(d)
+    p = {
+        "router": (jax.random.normal(keys[0], (d, e)) * s).astype(jnp.float32),
+        "wi": (jax.random.normal(keys[1], (e, d, ffe)) * s).astype(dtype),
+        "wg": (jax.random.normal(keys[2], (e, d, ffe)) * s).astype(dtype),
+        "wo": (jax.random.normal(keys[3], (e, ffe, d)) /
+               math.sqrt(ffe)).astype(dtype),
+    }
+    if cfg.moe_shared > 0:
+        p["shared"] = layers.mlp_init(keys[4], d, cfg.moe_shared * ffe, dtype)
+    return p
+
+
+def moe_apply(p, cfg, x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, L, d) -> (out, aux_loss).
+
+    Dispatch is GROUP-LOCAL (groups = batch rows, the GShard trick): slot
+    positions come from a per-group cumulative count (a local cumsum — no
+    distributed prefix sum), capacity is enforced per group, and the
+    dispatch buffer is (B, E, C, d) sharded P(dp, 'model', -, -) — batch
+    rows stay on their data shard while experts live on their model shard,
+    so the only cross-shard movement is the canonical token->expert
+    all-to-all of the scatter payload. (A single global (E, C, d) buffer
+    forces XLA to all-reduce the whole buffer across data shards:
+    3.2 TB/device/step on moonshot train_4k — measured, EXPERIMENTS.md
+    §Perf-hillclimb.)
+    """
+    b, l, d = x.shape
+    e, k = cfg.moe_experts, cfg.moe_top_k
+    cap = int(cfg.moe_capacity_factor * l * k / e)
+    cap = max(8, ((cap + 7) // 8) * 8)
+
+    logits = jnp.einsum("bld,de->ble", x.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, k)                     # (B, L, k)
+    gates = gates / jnp.sum(gates, axis=-1, keepdims=True)
+
+    # positions within each group, sequential over the k routing slots
+    pos = []
+    base = jnp.zeros((b, e), jnp.int32)
+    for j in range(k):
+        oh = jax.nn.one_hot(idx[:, :, j], e, dtype=jnp.int32)   # (B, L, E)
+        before = jnp.cumsum(oh, axis=1) - oh + base[:, None, :]
+        pos.append(jnp.sum(before * oh, axis=-1))               # (B, L)
+        base = base + jnp.sum(oh, axis=1)
+    pos = jnp.stack(pos, axis=2)                                # (B, L, k)
+    keep = pos < cap
+    safe_pos = jnp.where(keep, pos, cap)                        # OOB -> drop
+
+    # INDEX dispatch: scatter int32 token ids into the slot map (tiny —
+    # the data-dependent scatter that XLA must replicate across shards is
+    # (B, E, C) ints, not payloads), then GATHER payloads consumer-side
+    # (buf is born with its (dp, 'model') sharding; the only payload
+    # collective is the pre-gather x all-gather over 'model' — the same
+    # one Megatron-SP issues before any FFN).
+    sent = l                                                    # OOB sentinel
+    tok_ids = jnp.broadcast_to(jnp.arange(l)[:, None], (l, k)).reshape(-1)
+
+    def build_slots(idxg, posg, gg):
+        st = jnp.full((e, cap), sent, jnp.int32)
+        st = st.at[idxg.reshape(-1), posg.reshape(-1)].set(tok_ids,
+                                                           mode="drop")
+        sg = jnp.zeros((e, cap), jnp.float32)
+        sg = sg.at[idxg.reshape(-1), posg.reshape(-1)].set(gg.reshape(-1),
+                                                           mode="drop")
+        return st, sg
+
+    slot_tok, slot_gate = jax.vmap(build_slots)(
+        idx, safe_pos, (gates * keep).astype(jnp.float32))      # (B, E, C)
+
+    xpad = jnp.concatenate([x, jnp.zeros((b, 1, d), x.dtype)], axis=1)
+    buf = jax.vmap(lambda xg, st: xg[st])(xpad, slot_tok)       # (B, E, C, d)
+    buf = _constrain(buf, "moe_buf")
+
+    # expert FFN (batched over groups and experts; E is the EP axis)
+    h = jax.nn.silu(jnp.einsum("becd,edf->becf", buf, p["wg"])) * \
+        jnp.einsum("becd,edf->becf", buf, p["wi"])
+    y = jnp.einsum("becf,efd->becd", h, p["wo"])
+    y = _constrain(y, "moe_buf")
+
+    # combine: scatter-add weighted slots back onto tokens. Partial sums
+    # per model shard -> one (B, L, d) all-reduce (row-parallel pattern).
+    def combine(yg, st, sg):
+        w = yg * sg[..., None].astype(yg.dtype)
+        out = jnp.zeros((l + 1, d), yg.dtype)
+        return out.at[st.reshape(-1)].add(w.reshape(-1, d))[:l]
+
+    out = jax.vmap(combine)(y, slot_tok, slot_gate)             # (B, L, d)
+
+    if cfg.moe_shared > 0:
+        out = out + layers.mlp(p["shared"], x.reshape(-1, d)).reshape(b, l, d)
+
+    # switch-style load balance loss
+    me = jnp.mean(probs, axis=(0, 1))                           # (E,)
+    ce = jnp.mean(jax.nn.one_hot(idx[:, :, 0], e, dtype=jnp.float32),
+                  axis=(0, 1))
+    aux = e * jnp.sum(me * ce)
+    return out, aux
+
+
+def moe_dense_reference(p, cfg, x: jax.Array) -> jax.Array:
+    """O(T*E) oracle: run every expert on every token, weight by the same
+    (renormalized) top-k gates, no capacity drops. Tests compare against
+    moe_apply with capacity_factor large enough that nothing drops."""
+    b, l, d = x.shape
+    e, k = cfg.moe_experts, cfg.moe_top_k
+    xf = x.reshape(-1, d)
+    logits = xf.astype(jnp.float32) @ p["router"]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, k)
+    gates = gates / jnp.sum(gates, axis=-1, keepdims=True)
+    w = jnp.zeros_like(probs).at[jnp.arange(xf.shape[0])[:, None], idx].set(gates)
+    h = jax.nn.silu(jnp.einsum("td,edf->tef", xf, p["wg"])) * \
+        jnp.einsum("td,edf->tef", xf, p["wi"])
+    y = jnp.einsum("tef,efd->ted", h, p["wo"])
+    out = jnp.einsum("te,ted->td", w.astype(y.dtype), y)
+    if cfg.moe_shared > 0:
+        out = out + layers.mlp(p["shared"], xf)
+    return out.reshape(b, l, d)

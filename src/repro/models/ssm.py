@@ -1,0 +1,193 @@
+"""Mamba-2 (SSD, state-space duality) block — chunked scan form.
+
+Follows the minimal-SSD formulation of Dao & Gu (arXiv:2405.21060):
+scalar-per-head decay A, per-step dt, shared B/C (n_groups=1),
+depthwise causal conv on (x, B, C), gated RMSNorm, out projection.
+
+Train/prefill run a chunk-parallel scan (O(L c) per head with chunk c);
+decode is a single recurrent state update. The decode state
+(B, nh, state, hd) is sequence-length-free — the same O(1)-in-L serving
+story as SRF attention, which is why the hybrid/ssm archs run the
+long_500k cells natively.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import layers
+
+
+def conv_dim(cfg) -> int:
+    return cfg.d_inner + 2 * cfg.ssm_state
+
+
+def ssm_init(rng, cfg, dtype) -> Dict:
+    """Projections are SPLIT by role (z / x / BC / dt) instead of one merged
+    in_proj so each piece gets a clean TP sharding (x,z: column-parallel;
+    BC/dt: replicated — they are tiny)."""
+    keys = jax.random.split(rng, 8)
+    d, di, ns, nh = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    return {
+        "wz": layers.dense_init(keys[0], d, di, dtype),
+        "wx": layers.dense_init(keys[1], d, di, dtype),
+        "wbc": layers.dense_init(keys[2], d, 2 * ns, dtype),
+        "wdt": layers.dense_init(keys[3], d, nh, dtype),
+        "conv_x": (jax.random.normal(keys[4], (cfg.ssm_conv, di)) * 0.1).astype(dtype),
+        "conv_bc": (jax.random.normal(keys[5], (cfg.ssm_conv, 2 * ns)) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((di + 2 * ns,), dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(dtype),
+        "d_skip": jnp.ones((nh,), dtype),
+        "dt_bias": jnp.zeros((nh,), dtype),
+        "norm_w": jnp.ones((di,), dtype),
+        "out_proj": layers.dense_init(keys[6], di, d, dtype),
+    }
+
+
+def _project(p, cfg, x):
+    """-> z (di), xbc_raw (di + 2ns), dt_raw (nh)."""
+    z = x @ p["wz"]
+    xbc = jnp.concatenate([x @ p["wx"], x @ p["wbc"]], axis=-1)
+    dt = x @ p["wdt"]
+    return z, xbc, dt
+
+
+def _conv_w(p):
+    return jnp.concatenate([p["conv_x"], p["conv_bc"]], axis=-1)
+
+
+def init_ssm_cache(cfg, batch: int, dtype) -> Dict:
+    return {"conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim(cfg)), dtype),
+            "ssm": jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_state,
+                              cfg.ssm_head_dim), jnp.float32),
+            "idx": jnp.zeros((), jnp.int32)}
+
+
+def _causal_conv(w, b, x):
+    """Depthwise causal conv via k static shifts. x: (B, L, C), w: (k, C)."""
+    k = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    y = sum(pad[:, i:i + x.shape[1], :] * w[i] for i in range(k))
+    return y + b
+
+
+def _split_xbc(cfg, xbc):
+    di, ns = cfg.d_inner, cfg.ssm_state
+    return jnp.split(xbc, [di, di + ns], axis=-1)
+
+
+def ssm_apply(p, cfg, x: jax.Array, mode: str, cache: Optional[Dict] = None
+              ) -> Tuple[jax.Array, Optional[Dict]]:
+    if mode == "decode":
+        return _ssm_decode(p, cfg, x, cache)
+    b, l, d = x.shape
+    di, ns, nh, hd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    z, xbc_raw, dt = _project(p, cfg, x)
+    xbc = jax.nn.silu(_causal_conv(_conv_w(p), p["conv_b"], xbc_raw))
+    xs, bs, cs = _split_xbc(cfg, xbc)
+    xs = xs.reshape(b, l, nh, hd)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))          # (nh,) negative
+    dta = dt * a                                           # (B, L, nh)
+
+    c = min(cfg.ssm_chunk, l)
+    lp = l
+    if l % c:
+        # zero-pad the DERIVED tensors to a chunk multiple: dta=dt=0 makes
+        # padded steps exact identities for the state; padded outputs are
+        # sliced off below.
+        pad = c - l % c
+        lp = l + pad
+        p2 = ((0, 0), (0, pad))
+        xs = jnp.pad(xs, p2 + ((0, 0), (0, 0)))
+        bs = jnp.pad(bs, p2 + ((0, 0),))
+        cs = jnp.pad(cs, p2 + ((0, 0),))
+        dta = jnp.pad(dta, p2 + ((0, 0),))
+        dt = jnp.pad(dt, p2 + ((0, 0),))
+    nc = lp // c
+    xs_c = xs.reshape(b, nc, c, nh, hd).transpose(1, 0, 2, 3, 4)
+    bs_c = bs.reshape(b, nc, c, ns).transpose(1, 0, 2, 3)
+    cs_c = cs.reshape(b, nc, c, ns).transpose(1, 0, 2, 3)
+    dta_c = dta.reshape(b, nc, c, nh).transpose(1, 0, 2, 3)
+    dt_c = dt.reshape(b, nc, c, nh).transpose(1, 0, 2, 3)
+    del lp
+
+    def step(state, inp):
+        xc, bc, cc, dtac, dtc = inp                        # per-chunk slices
+        cum = jnp.cumsum(dtac, axis=1)                     # (B, c, nh) <= 0
+        # intra-chunk: G[b,h,i,j] = (C_i.B_j) exp(cum_i - cum_j) dt_j, j <= i
+        scores = jnp.einsum("bis,bjs->bij", cc, bc)        # (B, c, c)
+        diff = cum[:, :, None, :] - cum[:, None, :, :]     # (B, c, c, nh)
+        # clamp BEFORE exp: in the masked (j > i) region diff > 0 and
+        # exp overflows to inf -> 0*inf = NaN in the where-gradient. The
+        # valid (j <= i) region always has diff <= 0, so min(diff, 0) is
+        # exact there and keeps the backward finite.
+        decay = jnp.exp(jnp.minimum(diff, 0.0))
+        tri = jnp.tril(jnp.ones((c, c), bool))
+        gate = jnp.where(tri[None, :, :, None], decay, 0.0)
+        # the (B, c, c, nh) gate tensor dominates SSD HBM traffic; compute
+        # the mask/exp in f32 for stability, contract in bf16 (2x less
+        # bytes through the MXU — EXPERIMENTS.md §Perf-hillclimb)
+        g = (scores[..., None] * gate * dtc[:, None, :, :]).astype(xc.dtype)
+        y_intra = jnp.einsum("bijh,bjhd->bihd", g, xc).astype(jnp.float32)
+        # inter-chunk: y_i += C_i . (exp(cum_i) S)
+        y_inter = jnp.einsum("bis,bih,bhsd->bihd", cc, jnp.exp(cum), state)
+        # state update: S' = exp(cum_T) S + sum_j exp(cum_T - cum_j) dt_j B_j (x) x_j
+        tot = cum[:, -1, :]                                # (B, nh)
+        w = jnp.exp(tot[:, None, :] - cum) * dtc           # (B, c, nh)
+        s_new = jnp.exp(tot)[:, :, None, None] * state + \
+            jnp.einsum("bjh,bjs,bjhd->bhsd", w, bs_cast(bc), xc.astype(jnp.float32))
+        return s_new, (y_intra + y_inter)
+
+    def bs_cast(bc):
+        return bc.astype(jnp.float32)
+
+    s0 = jnp.zeros((b, nh, ns, hd), jnp.float32)
+    # checkpoint the chunk body: backward recomputes the (B, c, c, nh)
+    # gate tensor per chunk instead of keeping all chunks' gates alive
+    # (peak regression otherwise; EXPERIMENTS.md §Perf-hillclimb)
+    s_fin, ys = jax.lax.scan(jax.checkpoint(step), s0,
+                             (xs_c, bs_c, cs_c, dta_c, dt_c))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, -1, nh, hd)[:, :l]
+    y = y + p["d_skip"].astype(jnp.float32)[None, None, :, None] \
+        * xs.astype(jnp.float32)[:, :l]
+    y = y.reshape(b, l, di).astype(x.dtype)
+    y = layers.rmsnorm({"w": p["norm_w"]}, y * jax.nn.silu(z), cfg.norm_eps)
+    out = y @ p["out_proj"]
+
+    new_cache = None
+    if mode == "prefill":
+        # last ssm_conv-1 RAW (pre-conv) xbc inputs feed the decode conv
+        k1 = cfg.ssm_conv - 1
+        xbc_tail = jnp.pad(xbc_raw, ((0, 0), (k1, 0), (0, 0)))[:, l:l + k1]
+        new_cache = {"conv": xbc_tail.astype(x.dtype), "ssm": s_fin,
+                     "idx": jnp.asarray(l, jnp.int32)}
+    return out, new_cache
+
+
+def _ssm_decode(p, cfg, x, cache):
+    """Single-token recurrence. x: (B, 1, d)."""
+    b = x.shape[0]
+    di, ns, nh, hd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    z, xbc_new, dt = _project(p, cfg, x)
+    window = jnp.concatenate([cache["conv"], xbc_new], axis=1)  # (B, k, cd)
+    xbc = jnp.einsum("bkc,kc->bc", window, _conv_w(p)) + p["conv_b"]
+    xbc = jax.nn.silu(xbc)[:, None, :]
+    xs, bs, cs = _split_xbc(cfg, xbc)
+    xs = xs.reshape(b, nh, hd)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))[:, 0]
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    decay = jnp.exp(dt * a)                                 # (B, nh)
+    s = cache["ssm"] * decay[:, :, None, None] + \
+        jnp.einsum("bh,bs,bhd->bhsd", dt, bs[:, 0].astype(jnp.float32),
+                   xs.astype(jnp.float32))
+    y = jnp.einsum("bs,bhsd->bhd", cs[:, 0], s)
+    y = y + p["d_skip"].astype(jnp.float32)[None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(b, 1, di).astype(x.dtype)
+    y = layers.rmsnorm({"w": p["norm_w"]}, y * jax.nn.silu(z), cfg.norm_eps)
+    out = y @ p["out_proj"]
+    new_cache = {"conv": window[:, 1:], "ssm": s, "idx": cache["idx"] + 1}
+    return out, new_cache

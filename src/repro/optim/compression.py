@@ -1,0 +1,146 @@
+"""Structured-JL gradient compression (the paper's f=identity case) for
+cross-pod data parallelism, with error feedback.
+
+Gradients cross the slow DCN (`pod`) boundary as m/n-size sketches:
+
+    sketch      y = A x          A = circulant P-model, O(n) storage,
+                                 regenerated from a shared seed on both ends
+    unsketch    x' = A^T y / m   unbiased: rows of A are marginally N(0, I_n)
+
+Error feedback (Karimireddy et al. style) keeps the bias from hurting
+convergence: each worker accumulates (x - unsketch(sketch(x))) locally and
+adds it to the next step's gradient before sketching.
+
+This is exactly the paper's space/time story applied to collectives: the
+projection itself costs O(n log n) (FFT path) and the matrix is never
+materialized or shipped.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import structured
+
+
+@dataclass(frozen=True)
+class CompressionConfig:
+    kind: str = "circulant"
+    ratio: int = 4              # n / m  (bytes saved on the wire)
+    chunk: int = 4096           # n — projection block length
+    seed: int = 17
+    error_feedback: bool = True
+    min_size: int = 1024        # leaves smaller than this ship uncompressed
+    scaling: str = "contractive"   # contractive: x' = A^T A x / n;
+    # "unbiased" (A^T A x / m, E[C(x)] = x) DIVERGES under EF: eigenvalues
+    # of I - A^T A/m reach ~ -(sqrt(n/m)+1)^2+1 (measured in test_optim).
+    whiten: bool = True            # normalize the generator spectrum to
+    # unit modulus (Romberg's random convolution — the paper's ref [35]):
+    # the full circulant becomes orthogonal, so A^T A / n is an EXACT
+    # row-space projection (eigenvalues in [0, 1]) and error feedback is
+    # provably stable with delta = m/n. Without whitening max_w |g^(w)|^2/n
+    # ~ log n and EF still blows up. Rotate ``seed`` per step so the
+    # projection's null space is re-drawn.
+
+
+def _leaf_key(cc: CompressionConfig, idx: int, step=0) -> jax.Array:
+    """step may be a traced int (seed rotation inside jit)."""
+    k = jax.random.fold_in(jax.random.PRNGKey(cc.seed), idx)
+    return jax.random.fold_in(k, step)
+
+
+def _gen(cc: CompressionConfig, idx: int, step=0) -> Dict[str, jax.Array]:
+    """Generator params for the chunk projection (same on every worker)."""
+    m = cc.chunk // cc.ratio
+    p = structured.init(_leaf_key(cc, idx, step), cc.kind, m, cc.chunk)
+    if cc.whiten and cc.kind == "circulant":
+        spec = jnp.fft.rfft(p["g"], axis=-1)
+        spec = spec / (jnp.abs(spec) + 1e-20)
+        g = jnp.fft.irfft(spec, n=cc.chunk, axis=-1)
+        p = dict(p, g=g * jnp.sqrt(jnp.asarray(cc.chunk, g.dtype)))
+    return p
+
+
+def compress_leaf(x: jax.Array, cc: CompressionConfig, idx: int,
+                  step=0) -> jax.Array:
+    n = cc.chunk
+    m = n // cc.ratio
+    flat = x.reshape(-1).astype(jnp.float32)
+    pad = (-flat.size) % n
+    flat = jnp.pad(flat, (0, pad)).reshape(-1, n)
+    g = _gen(cc, idx, step)
+    return structured.matvec(cc.kind, g, flat, m)          # (K, m)
+
+
+def decompress_leaf(y: jax.Array, cc: CompressionConfig, idx: int,
+                    shape, dtype, step=0) -> jax.Array:
+    n = cc.chunk
+    m = n // cc.ratio
+    g = _gen(cc, idx, step)
+    yp = jnp.pad(y, ((0, 0), (0, n - m)))
+    denom = n if cc.scaling == "contractive" else m
+    # A^T y: circulant transpose-correlation == circular convolution with g
+    xhat = structured._circ_conv(yp, g["g"][0]) / denom    # (K, n)
+    size = 1
+    for s in shape:
+        size *= s
+    return xhat.reshape(-1)[:size].reshape(shape).astype(dtype)
+
+
+def _should_compress(x, cc) -> bool:
+    return x.size >= cc.min_size
+
+
+def compress_tree(tree, cc: CompressionConfig, step=0):
+    leaves, treedef = jax.tree.flatten(tree)
+    out = []
+    for i, x in enumerate(leaves):
+        out.append(compress_leaf(x, cc, i, step)
+                   if _should_compress(x, cc) else x)
+    return jax.tree.unflatten(treedef, out)
+
+
+def decompress_tree(ctree, proto, cc: CompressionConfig, step=0):
+    cleaves, treedef = jax.tree.flatten(ctree)
+    pleaves = jax.tree.leaves(proto)
+    out = []
+    for i, (y, p) in enumerate(zip(cleaves, pleaves)):
+        out.append(decompress_leaf(y, cc, i, p.shape, p.dtype, step)
+                   if _should_compress(p, cc) else y)
+    return jax.tree.unflatten(treedef, out)
+
+
+def roundtrip_with_feedback(grads, err, cc: CompressionConfig, step=0
+                            ) -> Tuple[Dict, Dict, Dict]:
+    """One worker's step: -> (sketch_to_allreduce, local_reconstruction,
+    new_error). The caller means sketches across pods, then decompresses.
+    Pass the (possibly traced) training step to rotate the sketch."""
+    g_in = jax.tree.map(lambda g, e: g.astype(jnp.float32) + e, grads, err) \
+        if cc.error_feedback else grads
+    sk = compress_tree(g_in, cc, step)
+    recon = decompress_tree(sk, grads, cc, step)
+    new_err = jax.tree.map(
+        lambda gi, r: (gi.astype(jnp.float32) - r.astype(jnp.float32)),
+        g_in, recon) if cc.error_feedback else err
+    return sk, recon, new_err
+
+
+def init_error(params) -> Dict:
+    return jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), params)
+
+
+def wire_bytes(tree, cc: CompressionConfig) -> Tuple[int, int]:
+    """(uncompressed, compressed) f32 bytes crossing the pod boundary."""
+    raw = comp = 0
+    for x in jax.tree.leaves(tree):
+        raw += x.size * 4
+        if _should_compress(x, cc):
+            n = cc.chunk
+            k = -(-x.size // n)
+            comp += k * (n // cc.ratio) * 4
+        else:
+            comp += x.size * 4
+    return raw, comp

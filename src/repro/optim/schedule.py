@@ -1,0 +1,19 @@
+"""LR schedules (pure functions of the step)."""
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(step, base_lr: float, warmup: int, total: int,
+                  min_ratio: float = 0.1):
+    step = jnp.asarray(step, jnp.float32)
+    warm = base_lr * step / max(1, warmup)
+    frac = jnp.clip((step - warmup) / max(1, total - warmup), 0.0, 1.0)
+    cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(math.pi * frac))
+    return jnp.where(step < warmup, warm, base_lr * cos)
+
+
+def constant(step, base_lr: float):
+    return jnp.full((), base_lr, jnp.float32)

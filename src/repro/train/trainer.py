@@ -1,0 +1,153 @@
+"""Fault-tolerant training loop.
+
+Wires together: model step (launch/steps.py), AdamW, schedule, sharded
+data loader, checkpoint manager (atomic/async/auto-resume), straggler
+watchdog, and optional compressed cross-pod DP (distributed/collectives).
+
+Failure model exercised in tests: the process can die at ANY step (a
+``crash_at`` hook injects this); a restarted Trainer resumes from the
+latest committed checkpoint and — because the data stream is a function
+of (seed, step, shard) — replays the exact same batches.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.data import synth
+from repro.data.loader import ShardedLoader
+from repro.ft.straggler import StragglerWatchdog
+from repro.launch import steps as step_lib
+from repro.models import transformer as model_lib
+from repro.optim import adamw, compression as comp_lib
+from repro.distributed import collectives
+
+
+@dataclass
+class TrainerConfig:
+    num_steps: int = 100
+    batch: int = 8
+    seq: int = 64
+    seed: int = 0
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    ckpt_every: int = 25
+    keep: int = 3
+    log_every: int = 10
+    hyper: step_lib.TrainHyper = field(default_factory=step_lib.TrainHyper)
+    compress_dp: bool = False
+    compression: comp_lib.CompressionConfig = field(
+        default_factory=comp_lib.CompressionConfig)
+
+
+class CrashInjected(RuntimeError):
+    pass
+
+
+class Trainer:
+    def __init__(self, cfg, tcfg: TrainerConfig, mesh=None,
+                 crash_at: Optional[int] = None):
+        self.cfg = cfg
+        self.tcfg = tcfg
+        self.mesh = mesh
+        self.crash_at = crash_at
+        self.ckpt = CheckpointManager(tcfg.ckpt_dir, keep=tcfg.keep)
+        self.watchdog = StragglerWatchdog(n_hosts=1)
+        self.metrics_log: list = []
+        self._build()
+
+    # -------------- setup --------------
+
+    def _build(self):
+        rng = jax.random.PRNGKey(self.tcfg.seed)
+        self.params = model_lib.init(rng, self.cfg)
+        self.opt_state = adamw.init(self.params)
+        self.step = 0
+        if self.tcfg.compress_dp and self.mesh is not None:
+            self.err = comp_lib.init_error(self.params)
+            grad_fn = step_lib.make_grad_step(self.cfg)
+
+            def cstep(params, opt_state, err, step_idx, batch):
+                grads, metrics = grad_fn(params, batch)
+                grads, err = collectives.compressed_pod_mean(
+                    grads, err, self.mesh, self.tcfg.compression,
+                    step=step_idx)
+                from repro.optim import schedule
+                lr = schedule.warmup_cosine(step_idx, self.tcfg.hyper.lr,
+                                            self.tcfg.hyper.warmup,
+                                            self.tcfg.hyper.total_steps)
+                params, opt_state, stats = adamw.update(
+                    grads, opt_state, params, lr, self.tcfg.hyper.adam)
+                return params, opt_state, err, {**metrics, **stats, "lr": lr}
+            self._jit_step = jax.jit(cstep, donate_argnums=(0, 1, 2))
+        else:
+            self.err = None
+            fn = step_lib.make_train_step(self.cfg, self.tcfg.hyper)
+            self._jit_step = jax.jit(fn, donate_argnums=(0, 1))
+
+        def make_batch(step, shard):
+            return synth.full_batch(self.cfg, self.tcfg.batch,
+                                    self.tcfg.seq, step,
+                                    seed=self.tcfg.seed, shard=shard)
+        self.loader = ShardedLoader(make_batch)
+
+    # -------------- resume --------------
+
+    def try_resume(self) -> bool:
+        latest = self.ckpt.latest_step()
+        if latest is None:
+            return False
+        state = {"params": self.params, "opt": self.opt_state}
+        restored, step, meta = self.ckpt.restore(state)
+        self.params = restored["params"]
+        self.opt_state = restored["opt"]
+        self.step = step
+        self.loader.reset(step)
+        return True
+
+    # -------------- loop --------------
+
+    def train(self) -> Dict:
+        it = iter(self.loader.reset(self.step))
+        t_last = time.time()
+        while self.step < self.tcfg.num_steps:
+            step_i, host_batch = next(it)
+            assert step_i == self.step, (step_i, self.step)
+            batch = jax.tree.map(jnp.asarray, host_batch)
+            if self.err is not None:
+                self.params, self.opt_state, self.err, m = self._jit_step(
+                    self.params, self.opt_state, self.err,
+                    jnp.asarray(self.step), batch)
+            else:
+                self.params, self.opt_state, m = self._jit_step(
+                    self.params, self.opt_state, jnp.asarray(self.step),
+                    batch)
+            self.step += 1
+            now = time.time()
+            self.watchdog.record(0, self.step, now - t_last)
+            t_last = now
+            if self.step % self.tcfg.log_every == 0 or \
+                    self.step == self.tcfg.num_steps:
+                rec = {"step": self.step,
+                       **{k: float(v) for k, v in m.items()}}
+                self.metrics_log.append(rec)
+            if self.step % self.tcfg.ckpt_every == 0:
+                self.ckpt.save(self.step,
+                               {"params": self.params, "opt": self.opt_state},
+                               metadata={"loss": float(m["loss"])})
+            if self.crash_at is not None and self.step == self.crash_at:
+                self.loader.stop()
+                raise CrashInjected(f"injected crash at step {self.step}")
+        self.ckpt.save(self.step,
+                       {"params": self.params, "opt": self.opt_state},
+                       metadata={"final": True}, blocking=True)
+        self.ckpt.wait()
+        self.loader.stop()
+        return {"final_step": self.step, "log": self.metrics_log}

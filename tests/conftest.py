@@ -1,0 +1,12 @@
+import os
+import sys
+
+# Tests run on the single real CPU device (the dry-run process, and ONLY it,
+# forces 512 host devices). Keep XLA quiet and deterministic.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+
+jax.config.update("jax_default_prng_impl", "threefry2x32")

@@ -1,0 +1,98 @@
+"""Paper-claim validation: unbiasedness (Lemma 5), closed-form kernels,
+error concentration in m (Thm 11/12 direction), coherence params (Sec 2.2)."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import coherence as C
+from repro.core import estimators as E
+from repro.core import pmodel as P
+from repro.core import structured as S
+
+
+def _unit(key, n):
+    v = jax.random.normal(key, (n,))
+    return v / jnp.linalg.norm(v)
+
+
+@pytest.mark.parametrize("kind", ["circulant", "toeplitz", "hankel"])
+@pytest.mark.parametrize("fname", ["identity", "heaviside", "sign", "relu"])
+def test_unbiasedness_lemma5(kind, fname):
+    """E over P-model draws of the structured estimator == closed form."""
+    n, m, trials = 32, 32, 600
+    spec = P.PModelSpec(kind=kind, m=m, n=n, use_hd=True)
+    v1 = _unit(jax.random.PRNGKey(1), n)
+    v2 = 0.6 * v1 + 0.8 * _unit(jax.random.PRNGKey(2), n)
+    v2 = v2 / jnp.linalg.norm(v2)
+
+    def one(k):
+        params = P.init(k, spec)
+        return E.estimate(spec, params, fname, v1, v2)
+    ests = jax.vmap(one)(jax.random.split(jax.random.PRNGKey(3), trials))
+    exact = float(E.exact(fname, v1, v2))
+    se = float(ests.std()) / math.sqrt(trials)
+    assert abs(float(ests.mean()) - exact) < max(4 * se, 0.02), \
+        (fname, float(ests.mean()), exact)
+
+
+def test_angular_paper_form_vs_product_form():
+    """theta/(2pi) (paper's ex. 2 value) + product form = 1/2 - theta/pi +
+    ... consistency: product form (pi-theta)/(2pi)."""
+    n = 16
+    v1 = _unit(jax.random.PRNGKey(1), n)
+    v2 = _unit(jax.random.PRNGKey(2), n)
+    th = float(E.angle(v1, v2))
+    assert abs(float(E.k_angular_product(v1, v2))
+               - (math.pi - th) / (2 * math.pi)) < 1e-6
+    assert abs(float(E.k_angular_paper(v1, v2)) - th / (2 * math.pi)) < 1e-6
+
+
+@pytest.mark.parametrize("kind", ["circulant", "toeplitz"])
+def test_error_decreases_with_m(kind):
+    """Thm 11/12: estimation error concentrates as m grows."""
+    n = 64
+    v1 = _unit(jax.random.PRNGKey(1), n)
+    v2 = _unit(jax.random.PRNGKey(2), n)
+    errs = []
+    for m in [16, 256]:
+        spec = P.PModelSpec(kind=kind, m=m, n=n, use_hd=True)
+        mean_err, _ = E.mc_error(jax.random.PRNGKey(3), spec, "heaviside",
+                                 v1, v2, n_trials=48)
+        errs.append(float(mean_err))
+    assert errs[1] < errs[0], errs
+
+
+def test_gaussian_kernel_estimate():
+    n, m = 64, 2048
+    spec = P.PModelSpec(kind="circulant", m=m, n=n, use_hd=True)
+    params = P.init(jax.random.PRNGKey(0), spec)
+    v1 = 0.7 * _unit(jax.random.PRNGKey(1), n)
+    v2 = 0.5 * _unit(jax.random.PRNGKey(2), n)
+    est = float(E.estimate(spec, params, "trig", v1, v2, sigma=1.0))
+    exact = float(E.exact("trig", v1, v2, 1.0))
+    assert abs(est - exact) < 0.05, (est, exact)
+
+
+# --- coherence parameters (paper Sec 2.2 claims) -------------------------------
+
+@pytest.mark.parametrize("kind,chi_max", [("circulant", 3), ("toeplitz", 2),
+                                          ("hankel", 2)])
+def test_coherence_params(kind, chi_max):
+    m, n = 6, 8
+    params = S.init(jax.random.PRNGKey(0), kind, m, n)
+    st = C.pmodel_stats(kind, params, m, n)
+    assert st["chi"] <= chi_max, st
+    assert st["mu_tilde"] == pytest.approx(0.0, abs=1e-5)   # paper: mu~ = 0
+    assert st["normalized"] == 1.0                          # Def. 1
+    assert st["orthogonal_cols"] == 1.0                     # Lemma 5 condition
+    assert st["mu"] < 2.0                                   # mu = O(1)
+
+
+def test_budget_knob_monotone():
+    """More randomness budget t -> (weakly) fewer constraints: toeplitz has
+    strictly larger t than circulant at same (m, n)."""
+    m, n = 8, 16
+    assert S.budget("toeplitz", m, n) > S.budget("circulant", m, n)

@@ -1,0 +1,61 @@
+"""HLO analyzer: trip-count-aware flops, collective detection."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch import hlo_analysis as H
+
+
+def _scan_model(L):
+    def f(ws, x):
+        def body(x, w):
+            return jnp.tanh(x @ w), None
+        x, _ = jax.lax.scan(body, x, ws)
+        return x
+    return f
+
+
+@pytest.mark.parametrize("L", [1, 3, 8])
+def test_scan_flops_scale_with_trip_count(L):
+    ws = jax.ShapeDtypeStruct((L, 64, 64), jnp.float32)
+    x = jax.ShapeDtypeStruct((32, 64), jnp.float32)
+    c = jax.jit(_scan_model(L)).lower(ws, x).compile()
+    r = H.analyze(c.as_text())
+    expect = 2 * 32 * 64 * 64 * L
+    assert abs(r["flops"] - expect) < 1e-6 * expect, (r["flops"], expect)
+    # XLA's own cost_analysis counts the body once (the reason this module
+    # exists) — guard that the premise still holds:
+    ca = c.cost_analysis()
+    if L > 1:
+        assert ca["flops"] < expect
+
+
+def test_nested_scan_trips_multiply():
+    def f(x):
+        def outer(x, _):
+            def inner(y, _):
+                return jnp.tanh(y @ jnp.eye(16)), None
+            y, _ = jax.lax.scan(inner, x, None, length=3)
+            return y, None
+        y, _ = jax.lax.scan(outer, x, None, length=5)
+        return y
+    x = jax.ShapeDtypeStruct((8, 16), jnp.float32)
+    c = jax.jit(f).lower(x).compile()
+    r = H.analyze(c.as_text())
+    expect = 2 * 8 * 16 * 16 * 15
+    assert abs(r["flops"] - expect) < 1e-6 * expect, r["flops"]
+
+
+def test_roofline_terms():
+    per_dev = {"flops": 197e12, "bytes": 819e9 / 2, "collective_bytes": 0.0}
+    t = H.roofline_terms(per_dev)
+    assert t["t_compute"] == pytest.approx(1.0)
+    assert t["t_memory"] == pytest.approx(0.5)
+    assert t["bottleneck"] == "compute"
+
+
+def test_shape_bytes_parse():
+    assert H._shape_bytes("f32[128,256]{1,0}") == 128 * 256 * 4
+    assert H._shape_bytes("bf16[16]") == 32
+    assert H._shape_bytes("(f32[2,2], s32[3])") == 16 + 12

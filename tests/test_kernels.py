@@ -1,0 +1,89 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps, interpret=True."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+def _tol(dtype, epilogue="identity"):
+    if dtype == jnp.bfloat16:
+        # trig/exp epilogues amplify bf16 pre-activation rounding by the
+        # phase/magnitude |y| (~n^1/2); compare with widened tolerance.
+        if epilogue in ("cos_sin", "exp"):
+            return dict(rtol=5e-2, atol=1.5e-1)
+        return dict(rtol=2e-2, atol=2e-2)
+    return dict(rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("b,n", [(1, 8), (4, 64), (16, 128), (5, 512),
+                                 (300, 32)])
+def test_fwht_kernel(b, n, dtype):
+    x = jax.random.normal(jax.random.PRNGKey(0), (b, n)).astype(dtype)
+    y = ops.fwht(x, use_pallas=True)
+    yr = ref.fwht_ref(x)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(yr, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("nb,n,b,m", [(1, 16, 4, 16), (2, 32, 8, 48),
+                                      (4, 64, 16, 256), (1, 128, 300, 128),
+                                      (2, 256, 7, 512)])
+@pytest.mark.parametrize("epilogue", ["identity", "relu", "heaviside",
+                                      "exp", "cos_sin"])
+def test_circulant_kernel(nb, n, b, m, epilogue, dtype):
+    g = jax.random.normal(jax.random.PRNGKey(1), (nb, n)).astype(dtype)
+    x = (jax.random.normal(jax.random.PRNGKey(2), (b, n)) * 0.3).astype(dtype)
+    sq = (0.5 * jnp.sum(x.astype(jnp.float32) ** 2, -1)).astype(dtype) \
+        if epilogue == "exp" else None
+    y = ops.circulant_project(g, x, m, epilogue, sq, use_pallas=True)
+    yr = ref.circulant_project_ref(g, x, m, epilogue, sq)
+    ya, yb = np.asarray(y, np.float32), np.asarray(yr, np.float32)
+    if epilogue == "exp":
+        # exp amplifies bf16 rounding by |y|; compare pre-exp (log space)
+        ya, yb = np.log(ya + 1e-9), np.log(yb + 1e-9)
+    np.testing.assert_allclose(ya, yb, **_tol(dtype, epilogue))
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("b,h,m,dv", [(1, 1, 16, 8), (2, 3, 64, 32),
+                                      (4, 2, 256, 128)])
+def test_srf_decode_kernel(b, h, m, dv, dtype):
+    k = jax.random.split(jax.random.PRNGKey(0), 5)
+    s = jax.random.normal(k[0], (b, h, m, dv)).astype(dtype)
+    z = jax.random.uniform(k[1], (b, h, m)).astype(dtype)
+    pq = jax.random.uniform(k[2], (b, h, m)).astype(dtype)
+    pk = jax.random.uniform(k[3], (b, h, m)).astype(dtype)
+    v = jax.random.normal(k[4], (b, h, dv)).astype(dtype)
+    s2, z2, o = ops.srf_decode(s, z, pq, pk, v, use_pallas=True)
+    s2r, z2r, orr = ref.srf_decode_ref(s, z, pq, pk, v)
+    for a, bb in [(s2, s2r), (z2, z2r), (o, orr)]:
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(bb, np.float32), **_tol(dtype))
+
+
+def test_kernel_vs_core_structured():
+    """The Pallas circulant kernel == core.structured block-circulant."""
+    from repro.core import structured as S
+    nb, n, m = 2, 64, 128
+    params = S.init(jax.random.PRNGKey(3), "circulant", m, n)
+    x = jax.random.normal(jax.random.PRNGKey(4), (8, n))
+    y_core = S.matvec("circulant", params, x, m)
+    y_pallas = ops.circulant_project(params["g"], x, m, use_pallas=True)
+    np.testing.assert_allclose(np.asarray(y_pallas), np.asarray(y_core),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_auto_routing_large_falls_back():
+    """Big shapes on CPU route to the jnp reference (no pallas interpret)."""
+    g = jax.random.normal(jax.random.PRNGKey(1), (1, 64))
+    x = jax.random.normal(jax.random.PRNGKey(2), (1 << 17, 64))
+    y = ops.circulant_project(g, x, 64)   # auto
+    yr = ref.circulant_project_ref(g, x, 64)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), rtol=1e-4,
+                               atol=1e-4)

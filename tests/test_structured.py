@@ -1,0 +1,78 @@
+"""Property tests: every structured fast path == dense materialization."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import structured as S
+
+KINDS = list(S.KINDS)
+
+
+@st.composite
+def mn(draw):
+    n = draw(st.sampled_from([4, 8, 16, 32]))
+    m = draw(st.integers(1, 3 * n))
+    return m, n
+
+
+@settings(max_examples=25, deadline=None)
+@given(kind=st.sampled_from(KINDS), shapes=mn(), seed=st.integers(0, 2**16),
+       batch=st.integers(1, 3))
+def test_matvec_matches_dense(kind, shapes, seed, batch):
+    m, n = shapes
+    r = 2
+    params = S.init(jax.random.PRNGKey(seed), kind, m, n, r=r)
+    a = S.materialize(kind, params, m, n)
+    assert a.shape == (m, n)
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1), (batch, n))
+    y_fast = S.matvec(kind, params, x, m)
+    np.testing.assert_allclose(np.asarray(y_fast), np.asarray(x @ a.T),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_budget_below_dense(kind):
+    m, n = 64, 64
+    t = S.budget(kind, m, n, r=2)
+    if kind == "unstructured":
+        assert t == m * n
+    else:
+        assert t < m * n  # the paper's point: t << mn
+
+
+@pytest.mark.parametrize("kind", ["circulant", "toeplitz", "hankel",
+                                  "skew_circulant"])
+def test_rows_are_standard_gaussian(kind):
+    """Normalization property (Def. 1): rows of A are N(0, I_n) marginally."""
+    m, n = 8, 16
+    trials = 4000
+    keys = jax.random.split(jax.random.PRNGKey(0), trials)
+
+    def row0(k):
+        p = S.init(k, kind, m, n)
+        return S.materialize(kind, p, m, n)[m // 2]
+    rows = jax.vmap(row0)(keys)
+    mean = np.asarray(rows.mean(0))
+    var = np.asarray(rows.var(0))
+    assert np.all(np.abs(mean) < 0.1), mean
+    assert np.all(np.abs(var - 1.0) < 0.15), var
+
+
+def test_bf16_fft_paths():
+    """bf16 inputs route through f32 FFT and come back finite."""
+    p = S.init(jax.random.PRNGKey(0), "circulant", 8, 16)
+    p = {k: v.astype(jnp.bfloat16) for k, v in p.items()}
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16), jnp.bfloat16)
+    y = S.matvec("circulant", p, x, 8)
+    assert y.dtype == jnp.bfloat16
+    assert bool(jnp.all(jnp.isfinite(y.astype(jnp.float32))))
+
+
+def test_storage_claim():
+    """Space complexity: structured storage is O(n), dense is O(mn)."""
+    m, n = 256, 256
+    assert S.storage_floats("circulant", m, n) == n
+    assert S.storage_floats("toeplitz", m, n) == n + m - 1
+    assert S.storage_floats("unstructured", m, n) == m * n

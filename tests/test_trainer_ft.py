@@ -1,0 +1,111 @@
+"""Fault-tolerance integration: loss decreases, crash->resume determinism,
+straggler watchdog, data-stream determinism."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.data import synth
+from repro.data.loader import ShardedLoader
+from repro.ft.straggler import StragglerConfig, StragglerWatchdog
+from repro.launch.steps import TrainHyper
+from repro.train.trainer import CrashInjected, Trainer, TrainerConfig
+
+
+def _tcfg(tmp_path, **kw):
+    base = dict(num_steps=30, batch=4, seq=32, ckpt_every=10, log_every=5,
+                ckpt_dir=str(tmp_path),
+                hyper=TrainHyper(lr=1e-2, warmup=5, total_steps=30))
+    base.update(kw)
+    return TrainerConfig(**base)
+
+
+def test_loss_decreases(tmp_path):
+    cfg = registry.reduced("qwen3-4b", n_layers=2)
+    tr = Trainer(cfg, _tcfg(tmp_path, num_steps=40))
+    out = tr.train()
+    losses = [r["loss"] for r in out["log"]]
+    assert losses[-1] < losses[0] - 0.3, losses
+
+
+def test_crash_resume_is_deterministic(tmp_path):
+    """Train A: uninterrupted. Train B: crash at step 17, restart, resume
+    from the step-10 checkpoint. Final params must match EXACTLY."""
+    cfg = registry.reduced("qwen3-4b", n_layers=2)
+    ta = Trainer(cfg, _tcfg(tmp_path / "a"))
+    out_a = ta.train()
+
+    tb = Trainer(cfg, _tcfg(tmp_path / "b"), crash_at=17)
+    with pytest.raises(CrashInjected):
+        tb.train()
+    # "restart the job"
+    tb2 = Trainer(cfg, _tcfg(tmp_path / "b"))
+    assert tb2.try_resume()
+    assert tb2.step == 10          # resumed from the committed checkpoint
+    out_b = tb2.train()
+    la = jax.tree.leaves(ta.params)
+    lb = jax.tree.leaves(tb2.params)
+    for a, b in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+    assert out_a["final_step"] == out_b["final_step"] == 30
+
+
+def test_data_stream_determinism():
+    b1 = synth.lm_batch(100, 4, 16, step=3, seed=7, shard=2)
+    b2 = synth.lm_batch(100, 4, 16, step=3, seed=7, shard=2)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    b3 = synth.lm_batch(100, 4, 16, step=4, seed=7, shard=2)
+    assert not np.array_equal(b1["tokens"], b3["tokens"])
+    b4 = synth.lm_batch(100, 4, 16, step=3, seed=7, shard=3)
+    assert not np.array_equal(b1["tokens"], b4["tokens"])
+
+
+def test_loader_reset_replays(tmp_path):
+    def mk(step, shard):
+        return {"x": np.full((2,), step)}
+    ld = ShardedLoader(mk, prefetch=2)
+    it = iter(ld)
+    s0, b0 = next(it)
+    s1, b1 = next(it)
+    assert (s0, s1) == (0, 1)
+    ld.reset(1)
+    it = iter(ld)
+    s, b = next(it)
+    assert s == 1 and b["x"][0] == 1
+    ld.stop()
+
+
+def test_straggler_watchdog_reassigns():
+    wd = StragglerWatchdog(4, StragglerConfig(grace_steps=2, threshold=1.5))
+    ev = None
+    for step in range(10):
+        for h in range(4):
+            dt = 1.0 if h != 2 else 3.0      # host 2 is slow
+            e = wd.record(h, step, dt)
+            ev = e or ev
+    assert ev is not None and ev["host"] == 2
+    assert ev["action"] == "reassign"
+    assert len(wd.events) >= 1
+
+
+def test_straggler_exclude_policy():
+    wd = StragglerWatchdog(4, StragglerConfig(grace_steps=1, threshold=1.5,
+                                              policy="exclude"))
+    for step in range(6):
+        for h in range(4):
+            wd.record(h, step, 5.0 if h == 0 else 1.0)
+    shard_map = wd.active_shard_map()
+    assert 0 not in shard_map
+    assert len(shard_map) == 3
+
+
+def test_compressed_dp_trainer_runs(tmp_path):
+    """compress_dp path on a (pod=2, data=1, model=1)-style mesh is covered
+    by the subprocess sharding test; here: config plumbs through on 1 dev
+    without a pod axis -> falls back to plain training."""
+    cfg = registry.reduced("qwen3-4b", n_layers=2)
+    tr = Trainer(cfg, _tcfg(tmp_path, num_steps=6, compress_dp=True))
+    out = tr.train()   # mesh=None -> plain path
+    assert out["final_step"] == 6

@@ -1,0 +1,54 @@
+"""FWHT: butterfly == dense Hadamard == Kronecker (MXU) form; HD isometry."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import transforms as T
+
+
+@settings(max_examples=20, deadline=None)
+@given(k=st.integers(1, 9), seed=st.integers(0, 2**16))
+def test_fwht_equals_dense(k, seed):
+    n = 1 << k
+    x = jax.random.normal(jax.random.PRNGKey(seed), (3, n))
+    h = T.hadamard(n)
+    np.testing.assert_allclose(np.asarray(T.fwht(x)), np.asarray(x @ h.T),
+                               rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(k=st.integers(1, 10), seed=st.integers(0, 2**16))
+def test_kron_form_equals_butterfly(k, seed):
+    n = 1 << k
+    x = jax.random.normal(jax.random.PRNGKey(seed), (2, n))
+    np.testing.assert_allclose(np.asarray(T.fwht_kron(x)),
+                               np.asarray(T.fwht(x)), rtol=1e-4, atol=1e-4)
+
+
+def test_hd_preprocess_is_isometry():
+    n = 64
+    x = jax.random.normal(jax.random.PRNGKey(0), (5, n))
+    d0 = T.sample_signs(jax.random.PRNGKey(1), n)
+    d1 = T.sample_signs(jax.random.PRNGKey(2), n)
+    y = T.hd_preprocess(x, d0, d1)
+    np.testing.assert_allclose(np.asarray(jnp.linalg.norm(y, axis=-1)),
+                               np.asarray(jnp.linalg.norm(x, axis=-1)),
+                               rtol=1e-5)
+
+
+def test_pad_pow2():
+    x = jnp.ones((2, 100))
+    assert T.pad_pow2(x).shape == (2, 128)
+    assert T.pad_pow2(jnp.ones((2, 64))).shape == (2, 64)
+
+
+def test_balancedness_after_hd():
+    """Lemma 15's working: HD spreads mass -> coordinates are log(n)-balanced."""
+    n = 256
+    x = jnp.zeros((n,)).at[3].set(1.0)   # worst case: a basis vector
+    d0 = T.sample_signs(jax.random.PRNGKey(1), n)
+    d1 = T.sample_signs(jax.random.PRNGKey(2), n)
+    y = T.hd_preprocess(x, d0, d1)
+    assert float(jnp.abs(y).max()) <= np.log(n) / np.sqrt(n)
