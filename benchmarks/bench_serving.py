@@ -1,0 +1,98 @@
+"""Serving benchmark: paged continuous-batching engine vs the legacy
+per-slot engine — tokens/s and time-to-first-token across cache families
+and concurrency levels.
+
+Suite mode (``python -m benchmarks.run --only serving``) runs a fast
+smoke (one family, 8 requests) so the tier-1 flow exercises the serving
+path; the full sweep (8–64 concurrent requests x all four families) runs
+via
+
+    PYTHONPATH=src python -m benchmarks.bench_serving --full
+
+CSV columns: name, us_per_call (wall us per generated token), derived
+(tokens/s | mean ttft ms | preemptions).
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+import jax
+import numpy as np
+
+FAMILIES = [
+    ("kv", "qwen3-4b", {}),
+    ("srf", "qwen3-4b", {"attn_impl": "srf"}),
+    ("mla", "deepseek-v2-lite-16b", {}),
+    ("ssd", "mamba2-2.7b", {}),
+]
+
+
+def _requests(cfg, n, seed=0):
+    from repro.serving import Request
+    rng = np.random.default_rng(seed)
+    return [Request(uid=i,
+                    prompt=rng.integers(0, cfg.vocab,
+                                        int(rng.integers(4, 20))
+                                        ).astype(np.int32),
+                    max_new=12) for i in range(n)]
+
+
+def _drive(eng, reqs):
+    for r in reqs:
+        eng.submit(r)
+    t0 = time.time()
+    done = eng.run()
+    wall = time.time() - t0
+    toks = sum(len(r.out_tokens) for r in done)
+    ttft = np.mean([r.t_first - r.t_submit for r in done]) * 1e3
+    return wall, toks, ttft
+
+
+def _bench_pair(fam, arch, over, concurrency, seed=0):
+    from repro.configs import registry
+    from repro.models import transformer as T
+    from repro.serving import Engine
+    from repro.serving import legacy
+    cfg = registry.reduced(arch, **over)
+    params = T.init(jax.random.PRNGKey(0), cfg)
+    slots = min(concurrency, 16)
+
+    eng = Engine(cfg, params, batch_slots=slots, max_len=64, seed=seed)
+    wall_p, toks_p, ttft_p = _drive(eng, _requests(cfg, concurrency, seed))
+
+    leg = legacy.Engine(cfg, params, batch_slots=slots, max_len=64)
+    wall_l, toks_l, ttft_l = _drive(leg, _requests(cfg, concurrency, seed))
+
+    pre = eng.sched.stats["preemptions"]
+    yield (f"serving/{fam}/paged/c{concurrency},"
+           f"{wall_p / max(toks_p, 1) * 1e6:.0f},"
+           f"tok_s={toks_p / wall_p:.1f}|ttft_ms={ttft_p:.0f}|preempt={pre}")
+    yield (f"serving/{fam}/legacy/c{concurrency},"
+           f"{wall_l / max(toks_l, 1) * 1e6:.0f},"
+           f"tok_s={toks_l / wall_l:.1f}|ttft_ms={ttft_l:.0f}|preempt=0")
+    yield (f"serving/{fam}/speedup/c{concurrency},0,"
+           f"x{(toks_p / wall_p) / (toks_l / wall_l):.2f}")
+
+
+def run(full: bool = False):
+    """Suite entry point: fast smoke by default."""
+    if full:
+        for fam, arch, over in FAMILIES:
+            for c in (8, 16, 32, 64):
+                yield from _bench_pair(fam, arch, over, c)
+    else:
+        yield from _bench_pair("kv", "qwen3-4b", {}, 8)
+        yield from _bench_pair("srf", "qwen3-4b", {"attn_impl": "srf"}, 8)
+
+
+def main(argv=None):
+    full = "--full" in (argv or sys.argv[1:])
+    print("name,us_per_call,derived")
+    for row in run(full=full):
+        print(row, flush=True)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -11,7 +11,7 @@ import sys
 import time
 
 SUITES = ["coherence", "speed", "compression", "srf_attention",
-          "kernel_quality"]
+          "kernel_quality", "serving"]   # serving runs its fast smoke mode
 
 
 def main(argv=None):

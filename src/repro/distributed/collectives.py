@@ -24,14 +24,27 @@ from jax.sharding import PartitionSpec as P
 from repro.optim import compression as C
 
 
+def _pod_shard_map(f, mesh, in_specs, out_specs):
+    """shard_map manual over 'pod' only, across jax API generations:
+    ``jax.shard_map(..., axis_names=...)`` (new) vs
+    ``jax.experimental.shard_map.shard_map(..., auto=...)`` (0.4.x)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, axis_names={"pod"})
+    from jax.experimental.shard_map import shard_map
+    # 0.4.x: the auto-axes path is unimplemented in eager mode and its
+    # SPMD lowering is unstable, so go fully manual: the body is local
+    # compute + a pod-pmean, and with replicated in_specs the data/model
+    # axes just repeat the same deterministic work — same results.
+    return shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                     check_rep=False)
+
+
 def pod_mean_plain(grads, mesh):
     """Baseline: uncompressed cross-pod mean via shard_map (for A/B)."""
-    auto = frozenset(a for a in mesh.axis_names if a != "pod")
-
     def f(g):
         return jax.tree.map(lambda x: jax.lax.pmean(x, "pod"), g)
-    return jax.shard_map(f, mesh=mesh, in_specs=P(), out_specs=P(),
-                         axis_names={"pod"})(grads)
+    return _pod_shard_map(f, mesh, P(), P())(grads)
 
 
 def compressed_pod_mean(grads, err, mesh, cc: C.CompressionConfig,
@@ -46,5 +59,4 @@ def compressed_pod_mean(grads, err, mesh, cc: C.CompressionConfig,
         g_mean = jax.tree.map(lambda a, b: a.astype(b.dtype), g_mean, g)
         return g_mean, new_err
 
-    return jax.shard_map(f, mesh=mesh, in_specs=(P(), P()),
-                         out_specs=(P(), P()), axis_names={"pod"})(grads, err)
+    return _pod_shard_map(f, mesh, (P(), P()), (P(), P()))(grads, err)

@@ -16,6 +16,7 @@ import jax.numpy as jnp
 
 from . import circulant as _circ
 from . import fwht as _fwht
+from . import paged_gather as _pgather
 from . import ref as _ref
 from . import srf_decode as _dec
 
@@ -53,6 +54,17 @@ def circulant_project(g: jax.Array, x: jax.Array, m: int,
         return _ref.circulant_project_ref(g, x, m, epilogue, sq)
     return _circ.circulant_project_pallas(
         g, x, m, epilogue, sq, interpret=(route == "interpret"))
+
+
+def paged_gather(pool: jax.Array, tables: jax.Array,
+                 use_pallas: Optional[bool] = None) -> jax.Array:
+    """pool (N, P, D), tables (R, M) -> (R, M*P, D) contiguous history."""
+    r, m = tables.shape
+    route = _route(use_pallas, r * m * pool.shape[1] * pool.shape[2])
+    if route == "ref":
+        return _ref.paged_gather_ref(pool, tables)
+    return _pgather.paged_gather_pallas(pool, tables,
+                                        interpret=(route == "interpret"))
 
 
 def srf_decode(s, z, phi_q, phi_k, v, eps: float = 1e-6,

@@ -1,0 +1,57 @@
+"""Pallas TPU kernel: gather non-contiguous cache pages for batched decode.
+
+Paged serving stores each request's KV (or MLA-latent) history as a set
+of fixed-size pages scattered through one pooled buffer; batched decode
+attention needs each request's history contiguous. This kernel performs
+
+    out[r, j*P:(j+1)*P, :] = pool[table[r, j], :, :]
+
+with the block table prefetched as a scalar operand
+(``PrefetchScalarGridSpec``), so the page id is known *before* the body
+runs and the pool page is DMA'd straight into the output block — the
+kernel body is a pure VMEM copy, and the gather is one grid step per
+(request, page) with no gather/scatter HLO in between.
+
+Unallocated table slots point at the reserved null page 0; the garbage
+they fetch is masked by the attention length mask downstream.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gather_kernel(tables_ref, pool_ref, out_ref):
+    # index maps already routed the right page into pool_ref
+    out_ref[0, 0] = pool_ref[0]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_gather_pallas(pool: jax.Array, tables: jax.Array,
+                        interpret: bool = True) -> jax.Array:
+    """pool: (N, P, D); tables: (R, M) int32 page ids -> (R, M*P, D).
+
+    Grid (R, M): one program per (request, page slot). The scalar-prefetch
+    block table drives the input index map.
+    """
+    n, p, d = pool.shape
+    r, m = tables.shape
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(r, m),
+        in_specs=[
+            pl.BlockSpec((1, p, d), lambda i, j, tbl: (tbl[i, j], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, p, d), lambda i, j, tbl: (i, j, 0, 0)),
+    )
+    out = pl.pallas_call(
+        _gather_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((r, m, p, d), pool.dtype),
+        interpret=interpret,
+    )(tables, pool)
+    return out.reshape(r, m * p, d)

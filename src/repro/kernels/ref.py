@@ -63,3 +63,17 @@ def srf_decode_ref(s: jax.Array, z: jax.Array, phi_q: jax.Array,
     num = jnp.einsum("bhm,bhmd->bhd", phi_q, s2)
     den = jnp.einsum("bhm,bhm->bh", phi_q, z2)
     return s2, z2, num / (den[..., None] + eps)
+
+
+def paged_gather_ref(pool: jax.Array, tables: jax.Array) -> jax.Array:
+    """Gather cache pages into per-request contiguous views.
+
+    pool: (N, P, D) pooled pages; tables: (R, M) int32 page ids
+    -> (R, M*P, D). Out-of-range ids clamp (matching the kernel's
+    behavior of routing bad ids onto a real page; callers mask).
+    """
+    n = pool.shape[0]
+    idx = jnp.clip(tables, 0, n - 1)
+    r, m = tables.shape
+    out = pool[idx]                                  # (R, M, P, D)
+    return out.reshape(r, m * pool.shape[1], pool.shape[2])

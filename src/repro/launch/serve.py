@@ -1,10 +1,12 @@
-"""Serving launcher: batched generation with the continuous-batching engine.
+"""Serving launcher: paged continuous-batching engine.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-4b --reduced \
-        --requests 8 --prompt-len 16 --max-new 24 [--attn srf]
+        --requests 16 --prompt-len 16 --max-new 24 [--attn srf] \
+        [--policy priority] [--temperature 0.8 --top-k 40] [--legacy]
 
 ``--attn srf`` serves with the paper's SRF attention: the per-request
-cache is the O(m d) feature state instead of an O(L) KV cache.
+cache is one constant-size O(m d) state page instead of O(L) KV pages.
+``--legacy`` runs the old per-slot lock-step engine for comparison.
 """
 from __future__ import annotations
 
@@ -17,7 +19,8 @@ import numpy as np
 
 from repro.configs import registry
 from repro.models import transformer as model_lib
-from repro.serving.engine import Engine, Request
+from repro.serving import Engine, Request
+from repro.serving import legacy
 
 
 def main(argv=None):
@@ -25,29 +28,48 @@ def main(argv=None):
     ap.add_argument("--arch", required=True, choices=registry.ARCHS)
     ap.add_argument("--reduced", action="store_true", default=True)
     ap.add_argument("--attn", default=None, choices=[None, "full", "srf"])
-    ap.add_argument("--requests", type=int, default=8)
-    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--slots", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=24)
     ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--policy", default="fcfs", choices=["fcfs", "priority"])
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--top-p", type=float, default=1.0)
+    ap.add_argument("--legacy", action="store_true",
+                    help="old per-slot engine (baseline)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
     overrides = {"attn_impl": args.attn} if args.attn else {}
     cfg = registry.reduced(args.arch, **overrides)
     params = model_lib.init(jax.random.PRNGKey(args.seed), cfg)
-    eng = Engine(cfg, params, batch_slots=args.slots, max_len=args.max_len)
+    if args.legacy:
+        eng = legacy.Engine(cfg, params, batch_slots=args.slots,
+                            max_len=args.max_len)
+    else:
+        eng = Engine(cfg, params, batch_slots=args.slots,
+                     max_len=args.max_len, policy=args.policy,
+                     seed=args.seed)
     rng = np.random.default_rng(args.seed)
     t0 = time.time()
     for i in range(args.requests):
         prompt = rng.integers(0, cfg.vocab,
                               args.prompt_len).astype(np.int32)
-        eng.submit(Request(uid=i, prompt=prompt, max_new=args.max_new))
+        eng.submit(Request(uid=i, prompt=prompt, max_new=args.max_new,
+                           priority=int(rng.integers(0, 3)),
+                           temperature=args.temperature,
+                           top_k=args.top_k, top_p=args.top_p))
     done = eng.run()
     dt = time.time() - t0
     tok = sum(len(r.out_tokens) for r in done)
-    print(f"arch={args.arch} attn={cfg.attn_impl} requests={len(done)} "
-          f"tokens={tok} wall={dt:.2f}s tok/s={tok/dt:.1f}")
+    engine = "legacy" if args.legacy else "paged"
+    print(f"arch={args.arch} attn={cfg.attn_impl} engine={engine} "
+          f"requests={len(done)} tokens={tok} wall={dt:.2f}s "
+          f"tok/s={tok/dt:.1f}")
+    if not args.legacy:
+        print(f"  sched: {eng.sched.stats}  report: {eng.cache_report()}")
     for r in done[:3]:
         print(f"  req{r.uid}: ttft={r.t_first - r.t_submit:.3f}s "
               f"out={r.out_tokens[:8]}...")

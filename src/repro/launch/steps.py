@@ -63,6 +63,19 @@ def make_prefill_step(cfg):
     return prefill_step
 
 
+def make_paged_step(cfg):
+    """Batched paged serving step (decode: C = 1; chunked prefill: C = chunk).
+
+    (params, pools, tokens (B, C), positions (B, C), q_valid (B, C),
+    tables (B, M)) -> (logits (B, C, V_padded), pools'). One jit cache
+    entry per (B, C) shape — the engine keeps those fixed.
+    """
+    def paged_step(params, pools, tokens, positions, q_valid, tables):
+        return model.paged_step(params, cfg, pools, tokens, positions,
+                                q_valid, tables)
+    return paged_step
+
+
 def make_serve_step(cfg, greedy: bool = True, temperature: float = 1.0):
     """One decode step: (params, cache, tokens(B,1)) -> (next(B,1), cache)."""
     def serve_step(params, cache, tokens):

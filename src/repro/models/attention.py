@@ -26,6 +26,7 @@ import jax.numpy as jnp
 from repro.core import srf_attention as srf
 from repro.core.srf_attention import SRFConfig
 from repro.core.transforms import is_pow2
+from repro.kernels import ops as kops
 from . import layers
 
 
@@ -205,6 +206,115 @@ def _repeat_kv(x, g):
 
 
 # ---------------------------------------------------------------------------
+# paged serving helpers (see serving/paged_cache.py for the pool layouts)
+# ---------------------------------------------------------------------------
+
+def _paged_scatter(pool_arr: jax.Array, new: jax.Array, tables: jax.Array,
+                   positions: jax.Array, q_valid: jax.Array) -> jax.Array:
+    """Write per-token rows into cache pages.
+
+    pool_arr: (N, P, ...) pages; new: (B, C, ...) one row per token;
+    tables: (B, M) page ids; positions: (B, C) absolute token positions.
+    Invalid tokens are routed out of range and dropped."""
+    n, p = pool_arr.shape[:2]
+    b, c = positions.shape
+    page = jnp.take_along_axis(tables, positions // p, axis=1,
+                               mode="clip")                        # (B, C)
+    dest = page * p + positions % p
+    dest = jnp.where(q_valid, dest, n * p).reshape(-1)             # OOB -> drop
+    flat = pool_arr.reshape((n * p,) + pool_arr.shape[2:])
+    flat = flat.at[dest].set(new.reshape((b * c,) + new.shape[2:])
+                             .astype(pool_arr.dtype), mode="drop")
+    return flat.reshape(pool_arr.shape)
+
+
+def _paged_hist(pool_arr: jax.Array, tables: jax.Array) -> jax.Array:
+    """Gather a request-contiguous history view: (N, P, ...) + (B, M)
+    -> (B, M*P, ...) via the paged-gather kernel."""
+    n, p = pool_arr.shape[:2]
+    d = 1
+    for s in pool_arr.shape[2:]:
+        d *= s
+    hist = kops.paged_gather(pool_arr.reshape(n, p, d), tables)
+    b = tables.shape[0]
+    return hist.reshape((b, tables.shape[1] * p) + pool_arr.shape[2:])
+
+
+def _paged_softmax(q, k, v, scale, positions):
+    """Batched chunk attention against gathered pages.
+
+    q: (B, Hq, C, hd); k, v: (B, Hkv, T, hd); positions: (B, C) absolute
+    positions of the chunk tokens. Column t of the history is visible to
+    chunk row i iff t <= positions[:, i] (the new tokens were already
+    scattered into the history, so the diagonal is included)."""
+    b, hq, c, hd = q.shape
+    hkv, t = k.shape[1], k.shape[2]
+    g = hq // hkv
+    qg = q.reshape(b, hkv, g, c, hd)
+    logits = jnp.einsum("bhgld,bhsd->bhgls", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    mask = jnp.arange(t)[None, :] <= positions.reshape(b * c, 1)
+    mask = mask.reshape(b, 1, 1, c, t)
+    logits = jnp.where(mask, logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhgls,bhsd->bhgld", w, v)
+    return out.reshape(b, hq, c, v.shape[-1]).astype(q.dtype)
+
+
+def _paged_full(cfg, q, k, v, positions, ctx):
+    """Full-KV paged path: scatter the chunk's k/v into pages, gather the
+    whole history, attend. Works for decode (C=1) and chunked prefill."""
+    pool, tables, q_valid = ctx["pool"], ctx["tables"], ctx["q_valid"]
+    kt = k.transpose(0, 2, 1, 3)                       # (B, C, Hkv, hd)
+    vt = v.transpose(0, 2, 1, 3)
+    new_pool = {"k": _paged_scatter(pool["k"], kt, tables, positions, q_valid),
+                "v": _paged_scatter(pool["v"], vt, tables, positions, q_valid)}
+    kf = _paged_hist(new_pool["k"], tables).transpose(0, 2, 1, 3)
+    vf = _paged_hist(new_pool["v"], tables).transpose(0, 2, 1, 3)
+    scale = 1.0 / math.sqrt(cfg.head_dim)
+    out = _paged_softmax(q, kf.astype(q.dtype), vf.astype(q.dtype), scale,
+                         positions)
+    return out, new_pool
+
+
+def _paged_srf(sc, pool, tables, phi_q, phi_k, v, q_valid):
+    """SRF paged path: the state is one constant-size page per request
+    (the paper's O(m d) object) at slot ``tables[:, 0]``.
+
+    Chunked prefill processes C tokens causally against the carried
+    state; decode (C=1) routes through the fused srf_decode kernel.
+    Invalid chunk rows have phi_k/v zeroed, which makes their state
+    contribution an exact no-op."""
+    b, h, c, m = phi_q.shape
+    slots = tables[:, 0]
+    s = pool["s"][slots]                               # (B, Hq, m, dv)
+    z = pool["z"][slots]
+    valid = q_valid[:, None, :, None].astype(phi_k.dtype)
+    phi_k = phi_k * valid
+    v = v * valid
+    if c == 1:
+        s2, z2, out = kops.srf_decode(s.astype(jnp.float32),
+                                      z.astype(jnp.float32),
+                                      phi_q[:, :, 0].astype(jnp.float32),
+                                      phi_k[:, :, 0].astype(jnp.float32),
+                                      v[:, :, 0].astype(jnp.float32))
+        out = out[:, :, None, :]
+    else:
+        tri = jnp.tril(jnp.ones((c, c), phi_q.dtype))
+        attn = jnp.einsum("bhim,bhjm->bhij", phi_q, phi_k) * tri
+        num = jnp.einsum("bhij,bhjd->bhid", attn, v) \
+            + jnp.einsum("bhim,bhmd->bhid", phi_q, s.astype(phi_q.dtype))
+        den = jnp.einsum("bhij->bhi", attn) \
+            + jnp.einsum("bhim,bhm->bhi", phi_q, z.astype(phi_q.dtype))
+        out = num / (den[..., None] + 1e-6)
+        s2 = s + jnp.einsum("bhjm,bhjd->bhmd", phi_k, v).astype(s.dtype)
+        z2 = z + jnp.sum(phi_k, axis=-2).astype(z.dtype)
+    new_pool = {"s": pool["s"].at[slots].set(s2.astype(pool["s"].dtype)),
+                "z": pool["z"].at[slots].set(z2.astype(pool["z"].dtype))}
+    return out.astype(phi_q.dtype), new_pool
+
+
+# ---------------------------------------------------------------------------
 # full / SRF GQA attention
 # ---------------------------------------------------------------------------
 
@@ -230,6 +340,22 @@ def attention(p, cfg, x: jax.Array, positions: jax.Array, mode: str,
         q = layers.apply_rope(q, positions, cfg.rope_theta)
         k = layers.apply_rope(k, positions, cfg.rope_theta)
 
+    if mode == "paged":
+        if cfg.attn_impl == "srf":
+            sc = srf_cfg(cfg)
+            g = cfg.n_heads // cfg.n_kv_heads
+            b_, hq_, l_, hd_ = q.shape
+            qg = q.reshape(b_, cfg.n_kv_heads, g * l_, hd_)
+            phi_q = srf.feature_map(sc, p["srf"], qg, is_query=True)
+            phi_q = phi_q.reshape(b_, hq_, l_, -1)
+            phi_k = _repeat_kv(srf.feature_map(sc, p["srf"], k,
+                                               is_query=False), g)
+            out, new_pool = _paged_srf(sc, cache["pool"], cache["tables"],
+                                       phi_q, phi_k, _repeat_kv(v, g),
+                                       cache["q_valid"])
+        else:
+            out, new_pool = _paged_full(cfg, q, k, v, positions, cache)
+        return _merge_heads(out) @ p["wo"], new_pool
     if cfg.attn_impl == "srf":
         out, cache = _srf_paths(p, cfg, q, k, v, mode, cache)
     else:
@@ -349,6 +475,31 @@ def _mla_attention(p, cfg, x, positions, mode, cache):
     scale = 1.0 / math.sqrt(cfg.mla_qk_dim)
     c_new = x @ p["wdkv"]                                   # (B,L,lora)
     kpe_new = x @ p["wkpe"]                                 # (B,L,rope)
+
+    if mode == "paged":
+        pool, tables, q_valid = cache["pool"], cache["tables"], cache["q_valid"]
+        if cfg.attn_impl == "srf":
+            # SRF needs only the chunk's own k/v: build them from the fresh
+            # latent and fold into the carried O(m d) state.
+            q, k, v = _mla_qkv(p, cfg, x, c_new, kpe_new, positions,
+                               kpos=positions)
+            sc = srf_cfg(cfg)
+            phi_q = srf.feature_map(sc, p["srf"], q, is_query=True)
+            phi_k = srf.feature_map(sc, p["srf"], k, is_query=False)
+            out, new_pool = _paged_srf(sc, pool, tables, phi_q, phi_k, v,
+                                       q_valid)
+            return _merge_heads(out) @ p["wo"], new_pool
+        new_pool = {
+            "c": _paged_scatter(pool["c"], c_new, tables, positions, q_valid),
+            "kpe": _paged_scatter(pool["kpe"], kpe_new, tables, positions,
+                                  q_valid)}
+        cc = _paged_hist(new_pool["c"], tables).astype(x.dtype)
+        kk = _paged_hist(new_pool["kpe"], tables).astype(x.dtype)
+        t = cc.shape[1]
+        kpos = jnp.broadcast_to(jnp.arange(t)[None], (b, t))
+        q, k, v = _mla_qkv(p, cfg, x, cc, kk, positions, kpos=kpos)
+        out = _paged_softmax(q, k, v, scale, positions)
+        return _merge_heads(out) @ p["wo"], new_pool
 
     if mode in ("train", "encoder", "prefill"):
         q, k, v = _mla_qkv(p, cfg, x, c_new, kpe_new, positions)

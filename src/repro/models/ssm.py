@@ -191,3 +191,63 @@ def _ssm_decode(p, cfg, x, cache):
     out = y @ p["out_proj"]
     new_cache = {"conv": window[:, 1:], "ssm": s, "idx": cache["idx"] + 1}
     return out, new_cache
+
+
+def paged_ssm_step(p, cfg, x: jax.Array, q_valid: jax.Array, pool: Dict,
+                  slots: jax.Array) -> Tuple[jax.Array, Dict]:
+    """Paged serving step: C tokens per request against a carried state.
+
+    x: (B, C, d); q_valid: (B, C) bool (dense prefix — padding only at the
+    chunk tail); pool: {"conv": (S, k-1, cd), "ssm": (S, nh, ns, hd)};
+    slots: (B,) page ids. Covers both chunked prefill (C = chunk) and
+    decode (C = 1); invalid steps get dt = 0, which makes their state
+    update an exact identity, and the conv tail is re-gathered from the
+    last valid inputs so tail padding never leaks into the next chunk.
+    """
+    b, c, d = x.shape
+    di, ns, nh, hd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    k1 = cfg.ssm_conv - 1
+    conv_st = pool["conv"][slots]                        # (B, k-1, cd)
+    ssm_st = pool["ssm"][slots]                          # (B, nh, ns, hd)
+
+    z, xbc_raw, dt = _project(p, cfg, x)
+    xbc_raw = xbc_raw * q_valid[..., None].astype(xbc_raw.dtype)
+    full = jnp.concatenate([conv_st.astype(xbc_raw.dtype), xbc_raw], axis=1)
+    w = _conv_w(p)
+    y = sum(full[:, i:i + c, :] * w[i] for i in range(cfg.ssm_conv))
+    xbc = jax.nn.silu(y + p["conv_b"])
+    xs, bs, cs = _split_xbc(cfg, xbc)
+    xs = xs.reshape(b, c, nh, hd)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+    dt = dt * q_valid.astype(jnp.float32)[..., None]     # identity on pads
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+
+    def step(state, inp):
+        x_t, b_t, c_t, dt_t = inp                        # (B, nh, hd) ...
+        decay = jnp.exp(dt_t * a)                        # (B, nh)
+        state = state * decay[:, :, None, None] + \
+            jnp.einsum("bh,bs,bhd->bhsd", dt_t, b_t.astype(jnp.float32),
+                       x_t.astype(jnp.float32))
+        y_t = jnp.einsum("bs,bhsd->bhd", c_t, state)
+        return state, y_t
+
+    xs_t = xs.transpose(1, 0, 2, 3)
+    bs_t = bs.transpose(1, 0, 2)
+    cs_t = cs.transpose(1, 0, 2)
+    dt_t = dt.transpose(1, 0, 2)
+    s_fin, ys = jax.lax.scan(step, ssm_st, (xs_t, bs_t, cs_t, dt_t))
+    y = ys.transpose(1, 0, 2, 3)                         # (B, C, nh, hd)
+    y = y + p["d_skip"].astype(jnp.float32)[None, None, :, None] \
+        * xs.astype(jnp.float32)
+    y = y.reshape(b, c, di).astype(x.dtype)
+    y = layers.rmsnorm({"w": p["norm_w"]}, y * jax.nn.silu(z), cfg.norm_eps)
+    out = y @ p["out_proj"]
+
+    # conv tail = last k-1 inputs ending at the final VALID token
+    n_valid = jnp.sum(q_valid.astype(jnp.int32), axis=1)           # (B,)
+    idx = n_valid[:, None] + jnp.arange(k1)[None, :]               # (B, k-1)
+    tail = jnp.take_along_axis(full, idx[..., None], axis=1)
+    new_pool = {"conv": pool["conv"].at[slots].set(tail.astype(pool["conv"].dtype)),
+                "ssm": pool["ssm"].at[slots].set(s_fin)}
+    return out, new_pool

@@ -149,6 +149,24 @@ def init(rng, cfg) -> Dict:
 # segment runners (scan over stacked layers)
 # ---------------------------------------------------------------------------
 
+@jax.custom_jvp
+def _barrier(x: jax.Array) -> jax.Array:
+    """``lax.optimization_barrier`` with a differentiation rule.
+
+    The raw primitive has no JVP/transpose registration (jax 0.4.x), so any
+    ``grad`` through the scan body raises NotImplementedError. The barrier is
+    the identity on values, so the tangent passes through unbarriered — it
+    must stay a plain identity to be transposable for reverse mode.
+    """
+    return jax.lax.optimization_barrier(x)
+
+
+@_barrier.defjvp
+def _barrier_jvp(primals, tangents):
+    (x,), (t,) = primals, tangents
+    return _barrier(x), t
+
+
 def _remat(cfg, fn):
     if cfg.remat == "none":
         return fn
@@ -188,14 +206,14 @@ def run_segment(stacked, cfg, kind: str, x, positions, mode: str,
             # its per-device footprint drops by the TP width. XLA inserts
             # the all-gather (pre-attention) / reduce-scatter (post-wo)
             # pair automatically from the sharding constraint.
-            x = hooks.constrain(jax.lax.optimization_barrier(x), "residual")
+            x = hooks.constrain(_barrier(x), "residual")
             aux = jnp.zeros((), jnp.float32)
             for i in range(g):
                 lp = jax.tree.map(lambda a: a[i], lp_group) if g > 1 \
                     else lp_group
                 x, a = inner(x, lp)
                 aux = aux + a
-            return jax.lax.optimization_barrier(x), aux
+            return _barrier(x), aux
 
         body = _remat(cfg, body)
         grouped = stacked if g == 1 else jax.tree.map(
@@ -323,6 +341,59 @@ def prefill(params, cfg, batch: Dict, cache: Dict) -> Tuple[jax.Array, Dict]:
     if cfg.is_encdec:
         out["memory"] = memory
     return logits, out
+
+
+def paged_step(params, cfg, pools: List, tokens: jax.Array,
+               positions: jax.Array, q_valid: jax.Array,
+               tables: jax.Array) -> Tuple[jax.Array, List]:
+    """One batched step against pooled paged caches (serving hot path).
+
+    tokens: (B, C) int32 — C = 1 for batched decode, C = prefill chunk
+    for chunked prefill; both run through the same code. positions: (B, C)
+    absolute positions; q_valid: (B, C) validity (False rows/tails are
+    padding); tables: (B, M) page ids into the pools (see
+    ``serving.paged_cache``). Returns (logits (B, C, V_padded), pools').
+
+    Layers scan over (stacked params, stacked per-layer pools); tables /
+    positions are loop constants, so the whole step stays one jit'd
+    program regardless of batch composition.
+    """
+    dt = _dtype(cfg)
+    x = layers.embed(params["embed"], tokens).astype(dt)
+    x = hooks.constrain(x, "activation")
+    new_pools = []
+    for seg_params, seg_pool, (kind, _) in zip(params["segments"], pools,
+                                               segments(cfg)):
+        def body(x, inp):
+            lp, lpool = inp
+            y, new_lpool = _paged_layer(lp, cfg, kind, x, positions,
+                                        q_valid, lpool, tables)
+            return y, new_lpool
+        x, new_pool = jax.lax.scan(body, x, (seg_params, seg_pool))
+        new_pools.append(new_pool)
+    return _logits(params, cfg, x), new_pools
+
+
+def _paged_layer(p, cfg, kind: str, x, positions, q_valid, lpool, tables
+                 ) -> Tuple[jax.Array, Dict]:
+    """Single-layer paged step (mirrors ``layer_apply`` for serving)."""
+    h = layers.rmsnorm(p["ln1"], x, cfg.norm_eps)
+    if kind == "ssm":
+        y, new_pool = ssm.paged_ssm_step(p["ssm"], cfg, h, q_valid, lpool,
+                                         tables[:, 0])
+        return x + y, new_pool
+    if kind in ("hybrid", "dense_cross"):
+        raise ValueError(f"paged serving unsupported for layer kind {kind!r}")
+    a, new_pool = attention.attention(
+        p["attn"], cfg, h, positions, "paged",
+        {"pool": lpool, "tables": tables, "q_valid": q_valid})
+    x = x + a
+    h2 = layers.rmsnorm(p["ln2"], x, cfg.norm_eps)
+    if kind == "moe":
+        y, _ = moe.moe_apply(p["moe"], cfg, h2)
+    else:
+        y = layers.mlp(p["mlp"], h2)
+    return x + y, new_pool
 
 
 def decode_step(params, cfg, cache: Dict, tokens: jax.Array,

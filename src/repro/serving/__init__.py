@@ -1,1 +1,12 @@
-"""repro.serving subsystem."""
+"""Paged serving subsystem: block allocator, pooled caches per family,
+continuous-batching scheduler, batched sampler, and the Engine on top.
+
+See ``serving/README.md`` for the block-table layout and the
+bytes-per-token comparison across cache families (full KV vs MLA-latent
+vs the paper's SRF state vs SSD). ``serving.legacy`` keeps the old
+per-slot engine as the benchmark baseline.
+"""
+from .blocks import BlockAllocator, BlockTable          # noqa: F401
+from .engine import Engine, Request                     # noqa: F401
+from .paged_cache import family_for, init_pools         # noqa: F401
+from .scheduler import SchedConfig, Scheduler           # noqa: F401

@@ -1,0 +1,100 @@
+"""Page/block bookkeeping for the paged serving cache (host-side control
+plane; no jax here).
+
+The pool of cache pages is a fixed device allocation (see
+``paged_cache``); this module hands out *page ids* into that pool and
+tracks which request owns which pages. One allocator serves every cache
+family: full-KV and MLA-latent requests take ``ceil(len / page_size)``
+pages, SRF and SSD requests take exactly one constant-size page (the
+paper's O(m d) decode state — that uniformity is what lets all four
+families share the same block-table machinery).
+
+Page 0 is reserved as the *null page*: padded batch rows point their
+block tables at it, so scatters from inactive rows land in scratch
+memory instead of corrupting live requests.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+NULL_PAGE = 0
+
+
+class BlockAllocator:
+    """Free-list page allocator over a fixed pool of ``num_pages`` pages.
+
+    Invariants (tested):
+      * a page is never handed out twice while allocated
+      * ``free`` returns pages to the pool exactly once
+      * page ``NULL_PAGE`` is never allocated
+    """
+
+    def __init__(self, num_pages: int, page_size: int):
+        if num_pages < 2:
+            raise ValueError("need >= 2 pages (page 0 is reserved)")
+        self.num_pages = num_pages
+        self.page_size = page_size
+        self._free: List[int] = list(range(num_pages - 1, 0, -1))  # pop -> 1,2,..
+        self._allocated: set = set()
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_pages(self) -> int:
+        return len(self._allocated)
+
+    def can_alloc(self, n: int) -> bool:
+        return n <= len(self._free)
+
+    def alloc(self, n: int) -> Optional[List[int]]:
+        """n pages, or None if the pool cannot satisfy the request."""
+        if n > len(self._free):
+            return None
+        pages = [self._free.pop() for _ in range(n)]
+        self._allocated.update(pages)
+        return pages
+
+    def free(self, pages: List[int]) -> None:
+        for pg in pages:
+            if pg not in self._allocated:
+                raise ValueError(f"double free / foreign page {pg}")
+            self._allocated.remove(pg)
+            self._free.append(pg)
+
+    def defrag_plan(self) -> Dict[int, int]:
+        """Compaction map {old_page: new_page} packing live pages into the
+        lowest indices. The caller must apply the map to its block tables
+        AND copy the pool rows (``paged_cache.apply_moves``) before using
+        the allocator again; this method re-labels internal state only."""
+        live = sorted(self._allocated)
+        targets = range(1, len(live) + 1)
+        moves = {old: new for old, new in zip(live, targets) if old != new}
+        if moves:
+            self._allocated = set(targets)
+            self._free = [p for p in range(self.num_pages - 1, 0, -1)
+                          if p not in self._allocated]
+        return moves
+
+
+@dataclass
+class BlockTable:
+    """Per-request page list + logical length (tokens written)."""
+    pages: List[int] = field(default_factory=list)
+    length: int = 0
+
+    def padded(self, width: int) -> List[int]:
+        """Fixed-width view for the device block-table tensor."""
+        if len(self.pages) > width:
+            raise ValueError(f"{len(self.pages)} pages > table width {width}")
+        return self.pages + [NULL_PAGE] * (width - len(self.pages))
+
+    def pages_needed(self, new_length: int, page_size: int,
+                     constant_state: bool) -> int:
+        """How many NEW pages must be allocated to grow to ``new_length``."""
+        if constant_state:
+            return 1 - len(self.pages)
+        want = -(-new_length // page_size)        # ceil
+        return max(0, want - len(self.pages))

@@ -1,13 +1,23 @@
-"""Batched serving engine: continuous batching over fixed decode slots.
+"""Paged continuous-batching serving engine.
 
-Requests enter a queue; free slots are filled by prefilling the prompt
-into that slot's cache region. All active slots decode in lock-step with
-one jit'd serve_step per token (the standard continuous-batching loop,
-single-host flavor). Works with every cache family — full KV, MLA latent,
-SRF state (the paper's O(m d) cache), SSD state.
+Replaces the per-slot lock-step engine (now ``serving.legacy``): all
+requests share one pooled, pre-allocated cache (``paged_cache``) indexed
+through per-request block tables (``blocks``), a scheduler handles
+admission / chunked prefill / preemption (``scheduler``), prefill and
+decode both run as single batched jit steps (``transformer.paged_step``),
+and sampling is temperature / top-k / top-p (``sampler``) with greedy as
+the deterministic default.
 
-For simplicity slots share a common max_len; prefill runs per-request
-(batch-1) and writes into the slot. Greedy decoding; EOS or max_new stops.
+Why paged: full-KV and MLA caches grow O(L) and are pooled in fixed-size
+pages; the paper's SRF attention state (and the SSD state) is O(m d) —
+one constant-size page per request — so the same engine serves all four
+families and the structured-feature families admit far more concurrent
+requests from the same pool bytes.
+
+Step shapes are fixed (max_batch x 1 decode, prefill_batch x chunk
+prefill), so the engine compiles exactly two programs regardless of
+traffic; inactive batch rows are masked and their writes land in the
+reserved null page.
 """
 from __future__ import annotations
 
@@ -20,7 +30,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.launch import steps as step_lib
-from repro.models import transformer as model_lib
+from . import paged_cache
+from .sampler import sample as _sample
+from .scheduler import SchedConfig, Scheduler, Sequence
 
 
 @dataclass
@@ -29,6 +41,10 @@ class Request:
     prompt: np.ndarray               # (P,) int32
     max_new: int = 32
     eos_id: int = -1                 # -1: never
+    priority: int = 0                # higher first (policy="priority")
+    temperature: float = 0.0         # 0 = greedy (deterministic)
+    top_k: int = 0                   # 0 = disabled
+    top_p: float = 1.0
     out_tokens: List[int] = field(default_factory=list)
     done: bool = False
     t_submit: float = 0.0
@@ -36,63 +52,209 @@ class Request:
     t_done: float = 0.0
 
 
+def _default_sched(cfg, batch_slots: int, max_len: int,
+                   constant_state: bool, policy: str) -> SchedConfig:
+    page = 16 if max_len >= 64 else 8
+    width = max(1, -(-max_len // page))
+    if constant_state:
+        # one slot per concurrent request + headroom for swapped admits
+        return SchedConfig(max_batch=batch_slots, prefill_batch=batch_slots,
+                           prefill_chunk=min(32, max(8, page)),
+                           page_size=page, num_pages=2 * batch_slots + 1,
+                           table_width=1, policy=policy)
+    return SchedConfig(max_batch=batch_slots, prefill_batch=batch_slots,
+                       prefill_chunk=min(32, 2 * page), page_size=page,
+                       num_pages=2 * batch_slots * width + 1,
+                       table_width=width, policy=policy)
+
+
 class Engine:
+    """Continuous batching over a paged cache pool.
+
+    ``batch_slots`` and ``max_len`` keep the old engine's constructor
+    contract (tests, examples); pass ``sched=SchedConfig(...)`` to size
+    the pool explicitly (e.g. tight pools to exercise preemption).
+    """
+
     def __init__(self, cfg, params, batch_slots: int = 4,
-                 max_len: int = 512):
+                 max_len: int = 512, sched: Optional[SchedConfig] = None,
+                 policy: str = "fcfs", seed: int = 0):
         self.cfg = cfg
         self.params = params
-        self.slots = batch_slots
-        self.max_len = max_len
-        self._prefill = jax.jit(step_lib.make_prefill_step(cfg))
-        self._step = jax.jit(step_lib.make_serve_step(cfg))
-        # per-slot independent caches (batch=1) stacked lazily
-        self.caches = [model_lib.init_serve_cache(cfg, 1, max_len)
-                       for _ in range(batch_slots)]
-        self.active: List[Optional[Request]] = [None] * batch_slots
-        self.queue: List[Request] = []
-        self.stats: Dict[str, float] = {"tokens": 0, "requests": 0}
+        self.family = paged_cache.family_for(cfg)
+        if sched is None:
+            sched = _default_sched(cfg, batch_slots, max_len,
+                                   self.family.constant_state, policy)
+        self.sched_cfg = sched
+        self.sched = Scheduler(sched, self.family.constant_state)
+        self.pools = paged_cache.init_pools(cfg, sched.num_pages,
+                                            sched.page_size)
+        self._step = jax.jit(step_lib.make_paged_step(cfg))
+        self._rng = jax.random.PRNGKey(seed)
+        self.stats: Dict[str, float] = {
+            "tokens": 0, "requests": 0, "prefill_steps": 0,
+            "decode_steps": 0, "preemptions": 0}
 
-    def submit(self, req: Request):
+    # -- public API ---------------------------------------------------------
+
+    def submit(self, req: Request) -> None:
         req.t_submit = time.time()
-        self.queue.append(req)
+        self.sched.submit(req)
 
-    def _fill_slots(self, extra_batch: Optional[Dict] = None):
-        for i in range(self.slots):
-            if self.active[i] is None and self.queue:
-                req = self.queue.pop(0)
-                batch = {"tokens": jnp.asarray(req.prompt[None, :])}
-                if extra_batch:
-                    batch.update(extra_batch)
-                cache = model_lib.init_serve_cache(self.cfg, 1, self.max_len)
-                logits, cache = self._prefill(self.params, batch, cache)
-                nxt = int(jnp.argmax(logits[0, -1, : self.cfg.vocab]))
-                req.out_tokens.append(nxt)
-                req.t_first = time.time()
-                self.caches[i] = cache
-                self.active[i] = req
-
-    def _decode_once(self):
-        for i, req in enumerate(self.active):
-            if req is None:
-                continue
-            tok = jnp.asarray([[req.out_tokens[-1]]], jnp.int32)
-            nxt, _, cache = self._step(self.params, self.caches[i], tok)
-            self.caches[i] = cache
-            t = int(nxt[0, 0])
-            req.out_tokens.append(t)
-            self.stats["tokens"] += 1
-            if t == req.eos_id or len(req.out_tokens) >= req.max_new:
-                req.done = True
-                req.t_done = time.time()
-                self.stats["requests"] += 1
-                self.active[i] = None
-
-    def run(self, extra_batch: Optional[Dict] = None) -> List[Request]:
-        """Drain the queue; returns completed requests."""
-        done: List[Request] = []
-        pending = lambda: self.queue or any(a is not None for a in self.active)
-        tracked: List[Request] = list(self.queue)
-        while pending():
-            self._fill_slots(extra_batch)
-            self._decode_once()
+    def run(self) -> List[Request]:
+        """Drain all submitted requests; returns the completed ones."""
+        tracked = [s.req for s in self.sched.waiting + self.sched.running]
+        stall = 0
+        while self.sched.has_work:
+            progressed = self.step()
+            stall = 0 if progressed else stall + 1
+            if stall > 2:
+                raise RuntimeError(
+                    "scheduler stalled: pool too small for the remaining "
+                    f"requests (free={self.sched.alloc.free_pages} pages)")
         return [r for r in tracked if r.done]
+
+    def step(self) -> bool:
+        """One scheduler iteration: admit, then one prefill-chunk step if
+        any sequence is still prefilling, else one batched decode step.
+        Returns False when nothing could run (allocator exhausted)."""
+        restored = self.sched.admit()
+        for seq in restored:
+            self.pools = paged_cache.restore_page_rows(
+                self.pools, seq.table.pages, seq.snapshot)
+            self.sched.restored(seq)
+        work = self.sched.prefill_work()
+        if work:
+            self._prefill_step(work)
+            return True
+        ready = self.sched.decode_ready()
+        if ready:
+            return self._decode_step(ready)
+        return bool(restored)
+
+    # -- sampling -----------------------------------------------------------
+
+    def _sample_rows(self, rows: jax.Array, seqs: List[Sequence],
+                     n_pad: int) -> np.ndarray:
+        temps = np.zeros((n_pad,), np.float32)
+        ks = np.zeros((n_pad,), np.int32)
+        ps = np.ones((n_pad,), np.float32)
+        for i, s in enumerate(seqs):
+            temps[i] = s.req.temperature
+            ks[i] = s.req.top_k
+            ps[i] = s.req.top_p
+        self._rng, sub = jax.random.split(self._rng)
+        toks = _sample(sub, rows, jnp.asarray(temps), jnp.asarray(ks),
+                       jnp.asarray(ps))
+        return np.asarray(toks)
+
+    # -- prefill ------------------------------------------------------------
+
+    def _prefill_step(self, work: List[Sequence]) -> None:
+        sc = self.sched_cfg
+        b, c, m = sc.prefill_batch, sc.prefill_chunk, sc.table_width
+        tokens = np.zeros((b, c), np.int32)
+        pos = np.zeros((b, c), np.int32)
+        qv = np.zeros((b, c), bool)
+        tables = np.zeros((b, m), np.int32)
+        last_row = np.zeros((b,), np.int32)
+        finishing: List[Optional[Sequence]] = [None] * b
+        for i, seq in enumerate(work):
+            start = seq.prefill_pos
+            chunk = np.asarray(seq.req.prompt[start:start + c], np.int32)
+            n = len(chunk)
+            tokens[i, :n] = chunk
+            # true absolute positions (rope); the invalid tail rows are
+            # masked by q_valid, and page lookups clamp harmlessly
+            pos[i] = start + np.arange(c)
+            qv[i, :n] = True
+            tables[i] = seq.table.padded(m)
+            seq.prefill_pos += n
+            seq.table.length = seq.prefill_pos
+            if seq.prefill_done:
+                finishing[i] = seq
+                last_row[i] = n - 1
+        logits, self.pools = self._step(
+            self.params, self.pools, jnp.asarray(tokens), jnp.asarray(pos),
+            jnp.asarray(qv), jnp.asarray(tables))
+        rows = jnp.take_along_axis(
+            logits[:, :, : self.cfg.vocab],
+            jnp.asarray(last_row)[:, None, None], axis=1)[:, 0]
+        toks = self._sample_rows(rows, [s or work[0] for s in finishing], b)
+        now = time.time()
+        for i, seq in enumerate(finishing):
+            if seq is None:
+                continue
+            seq.req.out_tokens.append(int(toks[i]))
+            seq.req.t_first = now
+            self.stats["tokens"] += 1
+        self.stats["prefill_steps"] += 1
+
+    # -- decode -------------------------------------------------------------
+
+    def _evict(self, victim: Sequence) -> None:
+        snap = paged_cache.pool_page_rows(self.pools, victim.table.pages)
+        self.sched.evicted(victim, snap)
+        self.stats["preemptions"] += 1
+
+    def _decode_step(self, ready: List[Sequence]) -> bool:
+        sc = self.sched_cfg
+        batch: List[Sequence] = []
+        for seq in ready:
+            if seq not in self.sched.running:
+                continue                       # evicted below us this step
+            ok, victim = self.sched.grow_for_decode(seq)
+            while not ok and victim is not None:
+                self._evict(victim)
+                batch = [s for s in batch if s is not victim]
+                ok, victim = self.sched.grow_for_decode(seq)
+            if ok:
+                batch.append(seq)
+        if not batch:
+            return False
+        b, m = sc.max_batch, sc.table_width
+        tokens = np.zeros((b, 1), np.int32)
+        pos = np.zeros((b, 1), np.int32)
+        qv = np.zeros((b, 1), bool)
+        tables = np.zeros((b, m), np.int32)
+        for i, seq in enumerate(batch):
+            tokens[i, 0] = seq.req.out_tokens[-1]
+            pos[i, 0] = seq.table.length
+            qv[i, 0] = True
+            tables[i] = seq.table.padded(m)
+        logits, self.pools = self._step(
+            self.params, self.pools, jnp.asarray(tokens), jnp.asarray(pos),
+            jnp.asarray(qv), jnp.asarray(tables))
+        toks = self._sample_rows(logits[:, 0, : self.cfg.vocab], batch, b)
+        now = time.time()
+        for i, seq in enumerate(batch):
+            seq.table.length += 1
+            tok = int(toks[i])
+            seq.req.out_tokens.append(tok)
+            self.stats["tokens"] += 1
+            if tok == seq.req.eos_id or \
+                    len(seq.req.out_tokens) >= seq.req.max_new:
+                seq.req.done = True
+                seq.req.t_done = now
+                self.stats["requests"] += 1
+                self.sched.finished(seq)
+        self.stats["decode_steps"] += 1
+        return True
+
+    def defrag(self) -> None:
+        """Compact live pages to the low pool indices. Paging never needs
+        this for correctness (any free page serves any request); it is an
+        idle-time locality optimization, so it is NOT run on the decode
+        hot path."""
+        moves = self.sched.defrag()
+        self.pools = paged_cache.apply_moves(self.pools, moves)
+
+    # -- introspection ------------------------------------------------------
+
+    def cache_report(self, max_len: Optional[int] = None) -> Dict[str, float]:
+        ml = max_len or (self.sched_cfg.table_width * self.sched_cfg.page_size)
+        return {"family": self.family.name,
+                "bytes_per_token_per_layer":
+                    self.family.bytes_per_token(self.cfg, ml),
+                "pool_bytes": paged_cache.pool_bytes(self.pools),
+                "free_pages": self.sched.alloc.free_pages}

@@ -1,0 +1,88 @@
+"""Legacy per-slot serving engine (kept as the benchmark baseline).
+
+The paged engine in ``serving.engine`` replaces this; ``bench_serving``
+measures the two head-to-head.
+
+Requests enter a queue; free slots are filled by prefilling the prompt
+into that slot's cache region. All active slots decode in lock-step with
+one jit'd serve_step per token (the standard continuous-batching loop,
+single-host flavor). Works with every cache family — full KV, MLA latent,
+SRF state (the paper's O(m d) cache), SSD state.
+
+For simplicity slots share a common max_len; prefill runs per-request
+(batch-1) and writes into the slot. Greedy decoding; EOS or max_new stops.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch import steps as step_lib
+from repro.models import transformer as model_lib
+from .engine import Request
+
+
+class Engine:
+    def __init__(self, cfg, params, batch_slots: int = 4,
+                 max_len: int = 512):
+        self.cfg = cfg
+        self.params = params
+        self.slots = batch_slots
+        self.max_len = max_len
+        self._prefill = jax.jit(step_lib.make_prefill_step(cfg))
+        self._step = jax.jit(step_lib.make_serve_step(cfg))
+        # per-slot independent caches (batch=1) stacked lazily
+        self.caches = [model_lib.init_serve_cache(cfg, 1, max_len)
+                       for _ in range(batch_slots)]
+        self.active: List[Optional[Request]] = [None] * batch_slots
+        self.queue: List[Request] = []
+        self.stats: Dict[str, float] = {"tokens": 0, "requests": 0}
+
+    def submit(self, req: Request):
+        req.t_submit = time.time()
+        self.queue.append(req)
+
+    def _fill_slots(self, extra_batch: Optional[Dict] = None):
+        for i in range(self.slots):
+            if self.active[i] is None and self.queue:
+                req = self.queue.pop(0)
+                batch = {"tokens": jnp.asarray(req.prompt[None, :])}
+                if extra_batch:
+                    batch.update(extra_batch)
+                cache = model_lib.init_serve_cache(self.cfg, 1, self.max_len)
+                logits, cache = self._prefill(self.params, batch, cache)
+                nxt = int(jnp.argmax(logits[0, -1, : self.cfg.vocab]))
+                req.out_tokens.append(nxt)
+                req.t_first = time.time()
+                self.caches[i] = cache
+                self.active[i] = req
+
+    def _decode_once(self):
+        for i, req in enumerate(self.active):
+            if req is None:
+                continue
+            tok = jnp.asarray([[req.out_tokens[-1]]], jnp.int32)
+            nxt, _, cache = self._step(self.params, self.caches[i], tok)
+            self.caches[i] = cache
+            t = int(nxt[0, 0])
+            req.out_tokens.append(t)
+            self.stats["tokens"] += 1
+            if t == req.eos_id or len(req.out_tokens) >= req.max_new:
+                req.done = True
+                req.t_done = time.time()
+                self.stats["requests"] += 1
+                self.active[i] = None
+
+    def run(self, extra_batch: Optional[Dict] = None) -> List[Request]:
+        """Drain the queue; returns completed requests."""
+        done: List[Request] = []
+        pending = lambda: self.queue or any(a is not None for a in self.active)
+        tracked: List[Request] = list(self.queue)
+        while pending():
+            self._fill_slots(extra_batch)
+            self._decode_once()
+        return [r for r in tracked if r.done]

@@ -1,0 +1,184 @@
+"""Pooled, pre-allocated decode caches behind one ``CacheFamily`` protocol.
+
+Four families share the allocator and the batched decode step:
+
+=========  ==============================================  ===============
+family     page contents (per layer)                       state growth
+=========  ==============================================  ===============
+``kv``     k/v pages   (num_pages, P, Hkv, hd) x2          O(L) paged
+``mla``    latent c    (num_pages, P, kv_lora)
+           + rope kpe  (num_pages, P, qk_rope)             O(L) paged
+``srf``    feature S   (num_slots, Hq, m, dv)
+           + norm z    (num_slots, Hq, m)                  O(m d) constant
+``ssd``    conv tail   (num_slots, conv-1, conv_dim)
+           + SSM state (num_slots, nh, ns, hd)             O(1) constant
+=========  ==============================================  ===============
+
+``kv``/``mla`` grow one page per ``page_size`` tokens; ``srf``/``ssd``
+are the paper's constant-size decode states stored as a *single* page
+("slot") per request — the multi-block structured construction keeps
+that layout uniform across head counts, so the same block table indexes
+all four. Pools carry a leading layer axis per model segment and are
+scanned together with the stacked layer params (see
+``transformer.paged_step``).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Protocol, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.transforms import is_pow2
+from repro.models import transformer as model_lib
+
+
+# ---------------------------------------------------------------------------
+# family protocol
+# ---------------------------------------------------------------------------
+
+class CacheFamily(Protocol):
+    """A cache family owns the pool layout for one serving state kind."""
+    name: str
+    constant_state: bool     # True: one fixed-size page per request
+
+    def layer_pool(self, cfg, num_pages: int, page_size: int) -> Dict:
+        """Single-layer pool pytree (leading axis = num_pages/slots)."""
+
+    def bytes_per_token(self, cfg, max_len: int) -> float:
+        """Decode-state bytes per cached token per layer (docs/stats)."""
+
+
+def _dt(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+class KVFamily:
+    name = "kv"
+    constant_state = False
+
+    def layer_pool(self, cfg, num_pages, page_size):
+        shp = (num_pages, page_size, cfg.n_kv_heads, cfg.head_dim)
+        return {"k": jnp.zeros(shp, _dt(cfg)), "v": jnp.zeros(shp, _dt(cfg))}
+
+    def bytes_per_token(self, cfg, max_len):
+        return 2 * cfg.n_kv_heads * cfg.head_dim * _dt(cfg).itemsize
+
+
+class MLAFamily:
+    name = "mla"
+    constant_state = False
+
+    def layer_pool(self, cfg, num_pages, page_size):
+        return {"c": jnp.zeros((num_pages, page_size, cfg.mla_kv_lora), _dt(cfg)),
+                "kpe": jnp.zeros((num_pages, page_size, cfg.mla_qk_rope), _dt(cfg))}
+
+    def bytes_per_token(self, cfg, max_len):
+        return (cfg.mla_kv_lora + cfg.mla_qk_rope) * _dt(cfg).itemsize
+
+
+class SRFFamily:
+    name = "srf"
+    constant_state = True
+
+    def _feat_dim(self, cfg):
+        from repro.models.attention import srf_cfg
+        return srf_cfg(cfg).feat_dim
+
+    def layer_pool(self, cfg, num_pages, page_size):
+        m = self._feat_dim(cfg)
+        dv = cfg.mla_v_dim if cfg.is_mla else cfg.head_dim
+        return {"s": jnp.zeros((num_pages, cfg.n_heads, m, dv), _dt(cfg)),
+                "z": jnp.zeros((num_pages, cfg.n_heads, m), _dt(cfg))}
+
+    def bytes_per_token(self, cfg, max_len):
+        m = self._feat_dim(cfg)
+        dv = cfg.mla_v_dim if cfg.is_mla else cfg.head_dim
+        total = cfg.n_heads * m * (dv + 1) * _dt(cfg).itemsize
+        return total / max_len      # amortized: the state never grows
+
+
+class SSDFamily:
+    name = "ssd"
+    constant_state = True
+
+    def layer_pool(self, cfg, num_pages, page_size):
+        cd = cfg.d_inner + 2 * cfg.ssm_state
+        return {"conv": jnp.zeros((num_pages, cfg.ssm_conv - 1, cd), _dt(cfg)),
+                "ssm": jnp.zeros((num_pages, cfg.ssm_heads, cfg.ssm_state,
+                                  cfg.ssm_head_dim), jnp.float32)}
+
+    def bytes_per_token(self, cfg, max_len):
+        cd = cfg.d_inner + 2 * cfg.ssm_state
+        total = ((cfg.ssm_conv - 1) * cd * _dt(cfg).itemsize
+                 + cfg.ssm_heads * cfg.ssm_state * cfg.ssm_head_dim * 4)
+        return total / max_len
+
+
+FAMILIES = {f.name: f for f in (KVFamily(), MLAFamily(), SRFFamily(),
+                                SSDFamily())}
+
+
+def family_for(cfg) -> CacheFamily:
+    """Resolve the cache family a config serves with."""
+    if cfg.is_encdec or cfg.family == "hybrid" or cfg.frontend != "none":
+        raise ValueError(
+            f"paged serving does not support family={cfg.family!r} / "
+            f"frontend={cfg.frontend!r} yet (use serving.legacy.Engine)")
+    if cfg.family == "ssm":
+        return FAMILIES["ssd"]
+    if cfg.attn_impl == "srf":
+        return FAMILIES["srf"]
+    if cfg.is_mla:
+        return FAMILIES["mla"]
+    return FAMILIES["kv"]
+
+
+# ---------------------------------------------------------------------------
+# pool container
+# ---------------------------------------------------------------------------
+
+def init_pools(cfg, num_pages: int, page_size: int) -> List[Dict]:
+    """One pool pytree per model segment, leading axis = layer count.
+
+    All layers of a segment share shapes, so the per-layer pools are
+    stacked and scanned with the stacked layer params."""
+    fam = family_for(cfg)
+    pools = []
+    for kind, count in model_lib.segments(cfg):
+        one = fam.layer_pool(cfg, num_pages, page_size)
+        pools.append(jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (count,) + a.shape), one))
+    return pools
+
+
+def pool_page_rows(pools: List[Dict], page_ids: List[int]) -> List[Dict]:
+    """Copy-on-preempt snapshot: pull the given pages of every layer pool
+    to host memory (numpy) so they can be restored after eviction."""
+    idx = np.asarray(page_ids, np.int32)
+    return [jax.tree.map(lambda a: np.asarray(a[:, idx]), p) for p in pools]
+
+
+def restore_page_rows(pools: List[Dict], page_ids: List[int],
+                      snap: List[Dict]) -> List[Dict]:
+    """Inverse of :func:`pool_page_rows`: scatter a snapshot back into
+    (freshly allocated) pages. Returns the updated pools."""
+    idx = jnp.asarray(page_ids, jnp.int32)
+    return [jax.tree.map(lambda a, s: a.at[:, idx].set(jnp.asarray(s)), p, sn)
+            for p, sn in zip(pools, snap)]
+
+
+def apply_moves(pools: List[Dict], moves: Dict[int, int]) -> List[Dict]:
+    """Apply a defrag plan {old: new} to every layer pool."""
+    if not moves:
+        return pools
+    src = jnp.asarray(list(moves.keys()), jnp.int32)
+    dst = jnp.asarray(list(moves.values()), jnp.int32)
+    return [jax.tree.map(lambda a: a.at[:, dst].set(a[:, src]), p)
+            for p in pools]
+
+
+def pool_bytes(pools: List[Dict]) -> int:
+    return sum(int(np.prod(x.shape)) * x.dtype.itemsize
+               for x in jax.tree.leaves(pools))

@@ -1,0 +1,52 @@
+"""Token sampling for the serving engine: temperature / top-k / top-p.
+
+One jit'd, fully batched sampler: every request carries its own
+(temperature, top_k, top_p) vector entry, so mixed sampling configs run
+in a single call with no per-request branching. ``temperature <= 0``
+selects greedy argmax for that row (the engine's default, which keeps
+decoding deterministic for tests).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnames=())
+def sample(rng: jax.Array, logits: jax.Array, temperature: jax.Array,
+           top_k: jax.Array, top_p: jax.Array) -> jax.Array:
+    """logits: (B, V); temperature/top_p: (B,) f32; top_k: (B,) int32
+    (0 = disabled) -> (B,) int32 sampled token ids.
+
+    Implementation: sort once descending, build the combined top-k
+    (rank < k) and top-p (cumulative prob below p, first always kept)
+    masks in sorted order, then Gumbel-max over the surviving logits —
+    equivalent to renormalized categorical sampling, no second pass.
+    """
+    b, v = logits.shape
+    lf = logits.astype(jnp.float32)
+    greedy = temperature <= 0.0
+    temp = jnp.where(greedy, 1.0, jnp.maximum(temperature, 1e-6))
+    scaled = lf / temp[:, None]
+
+    order = jnp.argsort(-scaled, axis=-1)                  # (B, V) desc
+    sorted_logits = jnp.take_along_axis(scaled, order, axis=-1)
+    ranks = jnp.arange(v)[None, :]
+    k_eff = jnp.where(top_k <= 0, v, top_k)[:, None]
+    keep = ranks < k_eff                                   # top-k in sorted order
+
+    probs = jax.nn.softmax(sorted_logits, axis=-1)
+    cum = jnp.cumsum(probs, axis=-1)
+    # keep tokens whose cumulative mass BEFORE them is < top_p; the
+    # argmax token (rank 0) always survives
+    keep &= (cum - probs) < top_p[:, None]
+    keep |= ranks == 0
+
+    masked = jnp.where(keep, sorted_logits, -jnp.inf)
+    g = jax.random.gumbel(rng, (b, v), jnp.float32)
+    pick_sorted = jnp.argmax(masked + g, axis=-1)          # (B,)
+    sampled = jnp.take_along_axis(order, pick_sorted[:, None], axis=-1)[:, 0]
+    argmax = jnp.argmax(lf, axis=-1)
+    return jnp.where(greedy, argmax, sampled).astype(jnp.int32)

@@ -1,0 +1,186 @@
+"""Continuous-batching scheduler: admission, chunked prefill, FCFS or
+priority ordering, and preemption-by-eviction.
+
+Replaces the old lock-step slot loop. Requests wait in an admission
+queue until the shared :class:`~repro.serving.blocks.BlockAllocator` can
+hold their prompt; admitted sequences prefill in fixed-size chunks
+(bounding any single step's cost, so a long prompt cannot stall decode
+for everyone), then join the batched decode set. When decode needs a
+page the pool cannot supply, the lowest-ranked running sequence is
+evicted: its pages are snapshotted to host memory (copy-on-preempt),
+freed, and the sequence re-enters the admission queue to be swapped back
+in later — no work is lost.
+
+The scheduler is pure host-side bookkeeping; the engine owns device
+state and tells the scheduler what happened.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional, Tuple
+
+from .blocks import BlockAllocator, BlockTable
+
+
+@dataclass(frozen=True)
+class SchedConfig:
+    max_batch: int = 8          # decode rows per step (jit shape)
+    prefill_batch: int = 4      # prefill rows per step
+    prefill_chunk: int = 16     # tokens per prefill chunk
+    page_size: int = 16
+    num_pages: int = 64         # pool pages incl. reserved null page
+    table_width: int = 8        # M: max pages per request
+    policy: str = "fcfs"        # fcfs | priority
+
+
+@dataclass
+class Sequence:
+    """Scheduler-side state of one request."""
+    req: object                       # serving.engine.Request
+    arrival: int
+    table: BlockTable = field(default_factory=BlockTable)
+    prefill_pos: int = 0              # prompt tokens already cached
+    snapshot: Optional[list] = None   # host pages while preempted
+    snapshot_pages: List[int] = field(default_factory=list)
+
+    @property
+    def prompt_len(self) -> int:
+        return len(self.req.prompt)
+
+    @property
+    def prefill_done(self) -> bool:
+        return self.prefill_pos >= self.prompt_len
+
+
+class Scheduler:
+    def __init__(self, cfg: SchedConfig, constant_state: bool):
+        self.cfg = cfg
+        self.constant_state = constant_state
+        self.alloc = BlockAllocator(cfg.num_pages, cfg.page_size)
+        self.waiting: List[Sequence] = []
+        self.running: List[Sequence] = []
+        self._arrivals = 0
+        self.stats = {"admitted": 0, "preemptions": 0, "defrags": 0}
+
+    # -- ordering -----------------------------------------------------------
+
+    def _rank(self, seq: Sequence) -> Tuple:
+        """Sort key: best-to-schedule first."""
+        if self.cfg.policy == "priority":
+            return (-getattr(seq.req, "priority", 0), seq.arrival)
+        return (seq.arrival,)
+
+    def _victim_order(self) -> List[Sequence]:
+        """Worst-to-keep first (reverse of schedule rank)."""
+        return sorted(self.running, key=self._rank, reverse=True)
+
+    # -- submission / admission --------------------------------------------
+
+    def submit(self, req) -> Sequence:
+        if len(req.prompt) == 0:
+            raise ValueError("empty prompt (need >= 1 token to prefill)")
+        need = len(req.prompt) + req.max_new
+        cap = (self.cfg.table_width * self.cfg.page_size
+               if not self.constant_state else float("inf"))
+        if need > cap:
+            raise ValueError(f"request needs {need} tokens > capacity {cap}")
+        seq = Sequence(req=req, arrival=self._arrivals)
+        self._arrivals += 1
+        self.waiting.append(seq)
+        return seq
+
+    def _pages_for(self, n_tokens: int) -> int:
+        if self.constant_state:
+            return 1
+        return max(1, -(-n_tokens // self.cfg.page_size))
+
+    def admit(self) -> List[Sequence]:
+        """Move waiting sequences into the running set while pages last.
+        Returns newly admitted sequences that carry a preemption snapshot
+        (the engine must swap their pages back in)."""
+        restored = []
+        for seq in sorted(self.waiting, key=self._rank):
+            if len(self.running) >= self.cfg.max_batch:
+                break
+            if seq.snapshot is not None:
+                n = len(seq.snapshot_pages)
+            else:
+                n = self._pages_for(max(seq.prompt_len, 1))
+            pages = self.alloc.alloc(n)
+            if pages is None:
+                break                    # head-of-line blocks (no starvation)
+            seq.table.pages = pages
+            self.waiting.remove(seq)
+            self.running.append(seq)
+            self.stats["admitted"] += 1
+            if seq.snapshot is not None:
+                restored.append(seq)
+        return restored
+
+    # -- prefill ------------------------------------------------------------
+
+    def prefill_work(self) -> List[Sequence]:
+        todo = [s for s in self.running if not s.prefill_done]
+        return sorted(todo, key=self._rank)[: self.cfg.prefill_batch]
+
+    # -- decode -------------------------------------------------------------
+
+    def decode_ready(self) -> List[Sequence]:
+        rdy = [s for s in self.running if s.prefill_done]
+        return sorted(rdy, key=self._rank)[: self.cfg.max_batch]
+
+    def grow_for_decode(self, seq: Sequence) -> Tuple[bool, Optional[Sequence]]:
+        """Ensure ``seq`` has a page for its next token. Returns
+        (ok, victim): when the pool is exhausted the chosen victim must be
+        evicted by the engine (its pages snapshotted + freed) before the
+        decode step; ``ok`` is False if seq itself must stall this step."""
+        need = seq.table.pages_needed(seq.table.length + 1,
+                                      self.cfg.page_size, self.constant_state)
+        if need <= 0:
+            return True, None
+        if len(seq.table.pages) + need > self.cfg.table_width:
+            return False, None           # at capacity: request finishes soon
+        pages = self.alloc.alloc(need)
+        if pages is not None:
+            seq.table.pages.extend(pages)
+            return True, None
+        for victim in self._victim_order():
+            if victim is not seq:
+                return False, victim
+        return False, None
+
+    # -- eviction / completion ---------------------------------------------
+
+    def evicted(self, seq: Sequence, snapshot) -> None:
+        """Engine snapshotted ``seq``'s pages; return them and requeue."""
+        seq.snapshot = snapshot
+        seq.snapshot_pages = list(seq.table.pages)
+        self.alloc.free(seq.table.pages)
+        seq.table.pages = []
+        self.running.remove(seq)
+        self.waiting.append(seq)
+        self.stats["preemptions"] += 1
+
+    def restored(self, seq: Sequence) -> None:
+        seq.snapshot = None
+        seq.snapshot_pages = []
+
+    def finished(self, seq: Sequence) -> None:
+        self.alloc.free(seq.table.pages)
+        seq.table.pages = []
+        self.running.remove(seq)
+
+    def defrag(self):
+        """Compact live pages to the low end of the pool. Returns the
+        {old: new} move map; the engine must apply it to the device pools
+        AND the scheduler rewrites the block tables here."""
+        moves = self.alloc.defrag_plan()
+        if moves:
+            for seq in self.running:
+                seq.table.pages = [moves.get(p, p) for p in seq.table.pages]
+            self.stats["defrags"] += 1
+        return moves
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.waiting or self.running)

@@ -27,6 +27,8 @@ def test_scan_flops_scale_with_trip_count(L):
     # XLA's own cost_analysis counts the body once (the reason this module
     # exists) — guard that the premise still holds:
     ca = c.cost_analysis()
+    if isinstance(ca, (list, tuple)):       # older jaxlib: one dict per device
+        ca = ca[0]
     if L > 1:
         assert ca["flops"] < expect
 
