@@ -1,0 +1,190 @@
+"""Fused-spinner benchmark: one-pass f(A . D1 H D0 . x) vs the unfused
+three-dispatch pipeline (hd_preprocess -> structured.matvec -> pointwise f)
+vs the dense O(mn) matmul, per structured kind x epilogue.
+
+Emits machine-readable ``BENCH_fused.json`` (per-kind / per-epilogue us)
+so the perf trajectory accumulates across PRs, plus the CSV rows of the
+bench harness. ``python -m benchmarks.bench_fused`` runs the full
+acceptance shape (B=256, n=1024, m=4096); the run.py suite calls
+``run()`` which uses a small smoke shape to keep the suite fast.
+
+Env: REPRO_BENCH_FUSED_JSON overrides the JSON output path.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import pmodel, structured, transforms
+from repro.core.pmodel import PModelSpec
+from repro.kernels import ops as kops
+
+FULL_SHAPE = (256, 1024, 4096)          # B, n, m — acceptance shape
+SMOKE_SHAPE = (64, 256, 512)
+KINDS = ("circulant", "skew_circulant", "toeplitz", "hankel")
+EPILOGUES = ("identity", "relu", "exp", "cos_sin")
+
+_EPI_FN = {
+    "identity": lambda y, sq: y,
+    "relu": lambda y, sq: jax.nn.relu(y),
+    "heaviside": lambda y, sq: (y >= 0).astype(y.dtype),
+    "sign": lambda y, sq: jnp.sign(y),
+    "exp": lambda y, sq: jnp.exp(y - sq),
+    "cos_sin": lambda y, sq: jnp.concatenate([jnp.cos(y), jnp.sin(y)], -1),
+}
+
+
+def _time_interleaved(fns_args, reps: int = 10, patience: int = 12,
+                      max_reps: int = 80) -> List[float]:
+    """Best-of-reps per candidate, candidates interleaved inside each rep
+    so background load hits them evenly (this host is a shared 2-vCPU box
+    with invisible co-tenants; sequential medians swing +/-50%). After the
+    ``reps`` floor, keep going until NO candidate's minimum has improved
+    for ``patience`` consecutive rounds — min-of-converged-reps estimates
+    the quiet-window (intrinsic) cost for every candidate equally."""
+    for fn, args in fns_args:
+        jax.block_until_ready(fn(*args))           # warmup / compile
+    best = [float("inf")] * len(fns_args)
+    stale, done = 0, 0
+    while done < reps or (stale < patience and done < max_reps):
+        improved = False
+        for i, (fn, args) in enumerate(fns_args):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(*args))
+            dt = time.perf_counter() - t0
+            if dt < best[i] * 0.995:
+                improved = True
+            best[i] = min(best[i], dt)
+        stale = 0 if improved else stale + 1
+        done += 1
+    return [t * 1e6 for t in best]
+
+
+def _bench_one(kind: str, epilogue: str, b: int, n: int, m: int,
+               reps: int, patience: int = 12, max_reps: int = 80) -> Dict:
+    """Times the phi-style feature map  f(A D1 H D0 x) / sqrt(m)  — the
+    actual SRF / feature hot path, including the 1/sqrt(m) feature
+    scaling that the pre-fusion pipeline paid as its own pass."""
+    spec = PModelSpec(kind=kind, m=m, n=n)
+    params = pmodel.init(jax.random.PRNGKey(0), spec)
+    x = jax.random.normal(jax.random.PRNGKey(1), (b, n)) * 0.3
+    inv_sqrt_m = float(m) ** -0.5
+
+    # --- unfused: the pre-fusion hot path, one dispatch per stage
+    # (hd_preprocess -> structured.matvec -> pointwise f + /sqrt(m), as
+    # features.phi_* composed it before the fused spinner) ------------------
+    hd = jax.jit(lambda p, xx: transforms.hd_preprocess(xx, p["d0"], p["d1"]))
+    mv = jax.jit(lambda p, v: structured.matvec(kind, p, v, m))
+    epi = _EPI_FN[epilogue]
+    ep = jax.jit(lambda xx, y: epi(
+        y, 0.5 * jnp.sum(xx * xx, -1, keepdims=True)) / jnp.sqrt(
+            jnp.asarray(float(m), y.dtype)))
+
+    def unfused(p, xx):
+        return ep(xx, mv(p, hd(p, xx)))
+
+    # --- unfused_1jit: same pre-fusion graph under ONE jit (how consumers
+    # that jit their whole step saw it — XLA fuses the pointwise stages
+    # but keeps the butterfly FWHT and per-stage intermediates) ------------
+    @jax.jit
+    def unfused_1jit(p, xx):
+        v = transforms.hd_preprocess(xx, p["d0"], p["d1"])
+        y = structured.matvec(kind, p, v, m)
+        return epi(y, 0.5 * jnp.sum(xx * xx, -1, keepdims=True)) \
+            / jnp.sqrt(jnp.asarray(float(m), y.dtype))
+
+    # --- fused: one spinner_project call, scaling folded into the epilogue.
+    # Pin the route: native Pallas on TPU, fused-jnp ref elsewhere (auto
+    # would pick the *interpreter* for small smoke shapes, which
+    # benchmarks interpretation overhead).
+    use_pallas = None if jax.default_backend() == "tpu" else False
+
+    def fused(p, xx):
+        return kops.spinner_project(kind, p, xx, m, epilogue=epilogue,
+                                    out_scale=inv_sqrt_m,
+                                    use_pallas=use_pallas)
+
+    # --- dense oracle: materialized O(mn) matmul + epilogue, one jit --------
+    a_dense = pmodel.materialize(spec, params)
+
+    @jax.jit
+    def dense(a, xx):
+        return epi(xx @ a.T,
+                   0.5 * jnp.sum(xx * xx, -1, keepdims=True)) * inv_sqrt_m
+
+    fused_us, unfused_us, unfused_1jit_us, dense_us = _time_interleaved(
+        [(fused, (params, x)), (unfused, (params, x)),
+         (unfused_1jit, (params, x)), (dense, (a_dense, x))],
+        reps=reps, patience=patience, max_reps=max_reps)
+    return {"kind": kind, "epilogue": epilogue,
+            "fused_us": round(fused_us, 1),
+            "unfused_us": round(unfused_us, 1),
+            "unfused_1jit_us": round(unfused_1jit_us, 1),
+            "dense_us": round(dense_us, 1),
+            "speedup_vs_unfused": round(unfused_us / fused_us, 3),
+            "speedup_vs_unfused_1jit": round(unfused_1jit_us / fused_us, 3),
+            "speedup_vs_dense": round(dense_us / fused_us, 3)}
+
+
+def bench(shape=FULL_SHAPE, kinds=KINDS, epilogues=EPILOGUES,
+          reps: int = 15, smoke: bool = False) -> Dict:
+    b, n, m = shape
+    # Full (artifact) runs sample until each candidate's min has been
+    # stale for `patience` rounds — on this noisy shared host the ratios
+    # only converge to their intrinsic values with long quiet-window
+    # sampling. Smoke runs keep the floor cheap.
+    patience, max_reps = (3, 12) if smoke else (25, 200)
+    results = [_bench_one(k, e, b, n, m, reps, patience, max_reps)
+               for k in kinds for e in epilogues]
+    payload = {
+        "bench": "fused_spinner",
+        "smoke": smoke,
+        "backend": jax.default_backend(),
+        "shape": {"batch": b, "n": n, "m": m},
+        "plan": {k: list(kops.spinner_plan(k, n, m)) for k in kinds},
+        "results": results,
+    }
+    default = "BENCH_fused_smoke.json" if smoke else "BENCH_fused.json"
+    path = os.environ.get("REPRO_BENCH_FUSED_JSON", default)
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    return payload
+
+
+def _rows(payload: Dict) -> List[str]:
+    b, n, m = (payload["shape"][k] for k in ("batch", "n", "m"))
+    return [f"fused/{r['kind']}/{r['epilogue']}/{b}x{n}x{m},"
+            f"{r['fused_us']:.1f},"
+            f"unfused_us={r['unfused_us']:.1f};dense_us={r['dense_us']:.1f};"
+            f"speedup={r['speedup_vs_unfused']:.2f}"
+            for r in payload["results"]]
+
+
+def run() -> List[str]:
+    """run.py suite entry: smoke shape, two kinds, two epilogues."""
+    payload = bench(shape=SMOKE_SHAPE, kinds=("circulant", "toeplitz"),
+                    epilogues=("relu", "cos_sin"), reps=3, smoke=True)
+    return _rows(payload)
+
+
+def main():
+    payload = bench()
+    for row in _rows(payload):
+        print(row)
+    best = {}
+    for r in payload["results"]:
+        best[r["kind"]] = max(best.get(r["kind"], 0.0),
+                              r["speedup_vs_unfused"])
+    n_fast = sum(s >= 1.5 for s in best.values())
+    print(f"fused/summary,0,kinds_ge_1.5x={n_fast};best=" +
+          ";".join(f"{k}:{s:.2f}" for k, s in best.items()))
+
+
+if __name__ == "__main__":
+    main()

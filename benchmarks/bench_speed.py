@@ -6,6 +6,7 @@ the roofline (the TPU numbers come from the dry-run, not wall time here).
 """
 from __future__ import annotations
 
+import statistics
 import time
 from typing import List
 
@@ -21,12 +22,15 @@ KINDS = ["unstructured", "circulant", "toeplitz"]
 
 
 def _time(fn, *args, reps=5) -> float:
-    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
-        jax.block_until_ready(fn(*args))
-    t0 = time.perf_counter()
+    """us per call: ONE warmup dispatch (jax.block_until_ready handles
+    tuples and pytrees), then the median of ``reps`` timed calls."""
+    jax.block_until_ready(fn(*args))
+    ts = []
     for _ in range(reps):
+        t0 = time.perf_counter()
         jax.block_until_ready(fn(*args))
-    return (time.perf_counter() - t0) / reps * 1e6
+        ts.append(time.perf_counter() - t0)
+    return statistics.median(ts) * 1e6
 
 
 def run() -> List[str]:

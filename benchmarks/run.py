@@ -10,8 +10,8 @@ import os
 import sys
 import time
 
-SUITES = ["coherence", "speed", "compression", "srf_attention",
-          "kernel_quality", "serving"]   # serving runs its fast smoke mode
+SUITES = ["coherence", "speed", "fused", "compression", "srf_attention",
+          "kernel_quality", "serving"]   # serving/fused run fast smoke modes
 
 
 def main(argv=None):

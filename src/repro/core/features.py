@@ -7,6 +7,13 @@ with  phi(v) = f(A D1 H D0 v) / sqrt(m)   (f applied pointwise).
 Each feature map returns features scaled so the dot product is the
 unbiased estimator of the corresponding closed-form kernel
 (core/estimators.py has the closed forms).
+
+Every phi here routes through the FUSED spinner (pmodel.project_fused ->
+kernels.ops.spinner_project): projection + f + scaling execute as one
+dispatch (one Pallas pass on TPU), not as separate projection / pointwise
+stages. ``grouped=True`` runs G independent P-models (leading axis on x
+and on every param leaf) in a single fused call — the per-kv-head layout
+of SRF attention.
 """
 from __future__ import annotations
 
@@ -48,50 +55,84 @@ F_TABLE: Dict[str, Callable] = {
 }
 
 
+def _inv_sqrt_m(spec: PModelSpec) -> float:
+    return float(spec.m) ** -0.5
+
+
 # --- feature maps phi (projection + f + scaling) -------------------------------
 
-def phi_scalar(spec: PModelSpec, params, x: jax.Array, f: str | Callable) -> jax.Array:
-    """phi(x) = f(proj(x)) / sqrt(m)  for scalar f from F_TABLE."""
-    fn = F_TABLE[f] if isinstance(f, str) else f
-    y = pmodel.project(spec, params, x)
-    return fn(y) / jnp.sqrt(jnp.asarray(spec.m, y.dtype))
+def phi_scalar(spec: PModelSpec, params, x: jax.Array, f: str | Callable,
+               grouped: bool = False) -> jax.Array:
+    """phi(x) = f(proj(x)) / sqrt(m); scalar f fused as the kernel epilogue
+    (callables fall back to a separate pointwise stage)."""
+    if isinstance(f, str):
+        if f not in F_TABLE:      # 'exp'/'cos_sin' have different semantics
+            raise KeyError(f"phi_scalar f must be one of {list(F_TABLE)}, "
+                           f"got {f!r}")
+        return pmodel.project_fused(spec, params, x, epilogue=f,
+                                    out_scale=_inv_sqrt_m(spec),
+                                    grouped=grouped)
+    y = pmodel.project_fused(spec, params, x, grouped=grouped)
+    return f(y) / jnp.sqrt(jnp.asarray(spec.m, y.dtype))
 
 
-def phi_trig(spec: PModelSpec, params, x: jax.Array, sigma: float = 1.0) -> jax.Array:
+def phi_trig(spec: PModelSpec, params, x: jax.Array, sigma: float = 1.0,
+             grouped: bool = False) -> jax.Array:
     """Gaussian-kernel features: phi = [cos(y/s), sin(y/s)] / sqrt(m).
 
     <phi(v1), phi(v2)> -> E[cos((y1-y2)/s)] = exp(-||v1-v2||^2 / (2 s^2)).
-    Output dim = 2m.
+    Output dim = 2m; for concrete (Python-number) sigma the 1/sigma
+    projection scale and the trig epilogue are fused into the single
+    spinner pass. A traced/learnable sigma (a jax value, e.g. a bandwidth
+    parameter under grad) keeps the fused projection but applies the
+    scale + trig outside — fused epilogue scales are trace-time statics.
     """
-    y = pmodel.project(spec, params, x) / sigma
+    if isinstance(sigma, (int, float)):
+        return pmodel.project_fused(spec, params, x, epilogue="cos_sin",
+                                    y_scale=1.0 / float(sigma),
+                                    out_scale=_inv_sqrt_m(spec),
+                                    grouped=grouped)
+    y = pmodel.project_fused(spec, params, x, grouped=grouped) / sigma
     s = jnp.sqrt(jnp.asarray(spec.m, y.dtype))
     return jnp.concatenate([jnp.cos(y), jnp.sin(y)], axis=-1) / s
 
 
 def phi_softmax_pos(spec: PModelSpec, params, x: jax.Array,
-                    scale: float = 1.0, stabilize: bool = True) -> jax.Array:
+                    scale: float = 1.0, stabilize: bool = True,
+                    grouped: bool = False) -> jax.Array:
     """Positive softmax-kernel features (FAVOR+ form; f = exp).
 
-    phi(x) = exp(y - ||x||^2/2 - c) / sqrt(m),  y = proj(x / sqrt(scale))...
+    phi(x) = exp(y - ||x||^2/2 - c) / sqrt(m),  y = proj(x * scale).
     Precisely: with q' = x * scale,  <phi(q'),phi(k')> ~ exp(<q',k'>) up to
     the global constant e^{-2c} which cancels in attention normalization.
+
+    With ``stabilize=False`` (keys) the whole exp(y - ||x||^2/2) runs
+    inside the fused spinner (the kernel computes the subtrahend from its
+    input tile via the HD isometry) — the same over/underflow exposure as
+    the unshifted closed form. With ``stabilize=True`` (queries) the
+    projection is still one fused pass but the epilogue stays outside in
+    the overflow-safe exp(z - sg(max z)) form: a post-hoc divide by the
+    row max would turn an under/overflowed kernel exp into NaN/inf for
+    large-norm inputs — exactly what the shift exists to prevent.
     """
     x = x * scale
-    y = pmodel.project(spec, params, x)
+    if not stabilize:
+        return pmodel.project_fused(spec, params, x, epilogue="exp",
+                                    out_scale=_inv_sqrt_m(spec),
+                                    grouped=grouped)
+    y = pmodel.project_fused(spec, params, x, grouped=grouped)
     sq = 0.5 * jnp.sum(x * x, axis=-1, keepdims=True)
     z = y - sq
-    if stabilize:
-        z = z - jax.lax.stop_gradient(jnp.max(z, axis=-1, keepdims=True))
+    z = z - jax.lax.stop_gradient(jnp.max(z, axis=-1, keepdims=True))
     return jnp.exp(z) / jnp.sqrt(jnp.asarray(spec.m, y.dtype))
 
 
 def phi_softmax_trig(spec: PModelSpec, params, x: jax.Array,
-                     scale: float = 1.0) -> jax.Array:
+                     scale: float = 1.0, grouped: bool = False) -> jax.Array:
     """Trigonometric softmax features (paper's sin/cos comment, Sec 2.1 ex.3):
     exp(<q,k>) = e^{(|q|^2+|k|^2)/2} E[cos(y_q - y_k)]. Unbiased but signed."""
     x = x * scale
-    y = pmodel.project(spec, params, x)
+    z = pmodel.project_fused(spec, params, x, epilogue="cos_sin",
+                             out_scale=_inv_sqrt_m(spec), grouped=grouped)
     sq = 0.5 * jnp.sum(x * x, axis=-1, keepdims=True)
-    s = jnp.sqrt(jnp.asarray(spec.m, y.dtype))
-    amp = jnp.exp(sq)
-    return jnp.concatenate([jnp.cos(y), jnp.sin(y)], axis=-1) * amp / s
+    return z * jnp.exp(sq)

@@ -58,13 +58,35 @@ def init(rng: jax.Array, spec: PModelSpec, dtype=jnp.float32) -> Dict[str, jax.A
 
 
 def project(spec: PModelSpec, params: Dict[str, jax.Array], x: jax.Array,
-            use_kron: bool = False) -> jax.Array:
-    """(..., n) -> (..., m):  A . D1 H D0 . x  (fast FFT/FWHT path)."""
+            use_kron: bool = False, use_pallas: Optional[bool] = None
+            ) -> jax.Array:
+    """(..., n) -> (..., m):  A . D1 H D0 . x.
+
+    Routed through the fused spinner (kernels.ops.spinner_project): one
+    Pallas pass on TPU, one fused jnp dispatch elsewhere. ``use_kron`` is
+    kept for back-compat; the fused path always uses the Kronecker FWHT.
+    """
+    return project_fused(spec, params, x, use_pallas=use_pallas)
+
+
+def project_fused(spec: PModelSpec, params: Dict[str, jax.Array],
+                  x: jax.Array, epilogue: str = "identity",
+                  y_scale: float = 1.0, out_scale: float = 1.0,
+                  grouped: bool = False,
+                  use_pallas: Optional[bool] = None) -> jax.Array:
+    """One-pass  f(y_scale * A D1 H D0 x) * out_scale  (feature-map hot path).
+
+    ``grouped=True``: x is (G, ..., n) and every param leaf carries a
+    leading group axis G (per-head P-models); the whole group runs as a
+    single fused dispatch. Output (..., m) — (..., 2m) for cos_sin.
+    """
     if x.shape[-1] != spec.n:
         raise ValueError(f"expected last dim {spec.n}, got {x.shape}")
-    if spec.use_hd:
-        x = transforms.hd_preprocess(x, params["d0"], params["d1"], use_kron)
-    return structured.matvec(spec.kind, params, x, spec.m)
+    from repro.kernels import ops as kops   # deferred: kernels import core
+    return kops.spinner_project(spec.kind, params, x, spec.m,
+                                epilogue=epilogue, y_scale=y_scale,
+                                out_scale=out_scale, grouped=grouped,
+                                use_pallas=use_pallas)
 
 
 def materialize(spec: PModelSpec, params: Dict[str, jax.Array]) -> jax.Array:

@@ -59,21 +59,28 @@ def init(rng: jax.Array, cfg: SRFConfig, n_kv_heads: int,
 def feature_map(cfg: SRFConfig, params, x: jax.Array, is_query: bool) -> jax.Array:
     """(B, H, L, d) -> (B, H, L, feat_dim). Softmax-kernel scaling d^-1/4 is
     folded in so phi(q).phi(k) ~ exp(q.k/sqrt(d)) (up to a global constant
-    that cancels in the normalizer)."""
+    that cancels in the normalizer).
+
+    All H per-head P-models run as ONE grouped fused-spinner dispatch
+    (kernels.ops.spinner_project: HD + implicit-tile projection + f in a
+    single pass) instead of a vmap of per-head projection pipelines."""
     scale = cfg.head_dim ** -0.25
+    b, h, l, d = x.shape
+    xg = x.transpose(1, 0, 2, 3).reshape(h, b * l, d)    # head-major groups
 
-    def per_head(p, xh):  # xh: (B, L, d)
-        if cfg.feature == "softmax_pos":
-            return features.phi_softmax_pos(cfg.spec, p, xh, scale=scale,
-                                            stabilize=is_query)
-        if cfg.feature == "trig":
-            return features.phi_trig(cfg.spec, p, xh * scale)
-        if cfg.feature == "relu":
-            y = pmodel.project(cfg.spec, p, xh * scale)
-            return (jax.nn.relu(y) + 1e-6) / math.sqrt(cfg.n_features)
+    if cfg.feature == "softmax_pos":
+        phi = features.phi_softmax_pos(cfg.spec, params, xg, scale=scale,
+                                       stabilize=is_query, grouped=True)
+    elif cfg.feature == "trig":
+        phi = features.phi_trig(cfg.spec, params, xg * scale, grouped=True)
+    elif cfg.feature == "relu":
+        inv = 1.0 / math.sqrt(cfg.n_features)
+        phi = pmodel.project_fused(cfg.spec, params, xg * scale,
+                                   epilogue="relu", out_scale=inv,
+                                   grouped=True) + 1e-6 * inv
+    else:
         raise ValueError(cfg.feature)
-
-    return jax.vmap(per_head, in_axes=(0, 1), out_axes=1)(params, x)
+    return phi.reshape(h, b, l, -1).transpose(1, 0, 2, 3)
 
 
 def attention_noncausal(phi_q: jax.Array, phi_k: jax.Array, v: jax.Array,

@@ -6,18 +6,30 @@ the pure-jnp reference (same semantics, faster than interpreting).
 
 ``use_pallas``: None = auto (pallas-interpret for small, jnp for big on
 CPU; pallas-native on TPU), True/False = force.
+
+Routing cost model: every kernel routes on its TRUE work estimate (the
+number of MACs / elements moved, B*n*m-style), not on input sizes — see
+kernels/README.md for the table. ``REPRO_FORCE_PALLAS`` overrides the
+auto route for debugging: ``1``/``true`` force the Pallas path (native on
+TPU, interpret elsewhere), ``native``/``interpret`` force that exact
+mode, ``0``/``false``/``ref`` force the jnp reference.
 """
 from __future__ import annotations
 
-from typing import Optional
+import functools
+import os
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+
+from repro.core import transforms
 
 from . import circulant as _circ
 from . import fwht as _fwht
 from . import paged_gather as _pgather
 from . import ref as _ref
+from . import spinner as _spin
 from . import srf_decode as _dec
 
 
@@ -26,20 +38,48 @@ def _on_tpu() -> bool:
 
 
 def _route(use_pallas: Optional[bool], work_elems: int,
-           interp_budget: int = 1 << 22) -> str:
-    """-> 'native' | 'interpret' | 'ref'."""
+           interp_budget: int = 1 << 24,
+           auto_interpret: bool = True) -> str:
+    """-> 'native' | 'interpret' | 'ref'.
+
+    ``work_elems`` is the kernel's true work estimate (MACs or elements
+    moved); the interpreter budget is compared against it, so all kernels
+    flip to the jnp reference at the same *work* level, not at
+    incomparable input-size levels.
+
+    ``auto_interpret=False`` disables the small-shape interpreter pick in
+    auto mode: off-TPU the jnp ref is chosen unless Pallas is explicitly
+    forced. Hot-path ops (the fused spinner) use this — the interpreter
+    is a correctness vehicle, measurably slower than the ref on CPU.
+    """
+    env = os.environ.get("REPRO_FORCE_PALLAS")
+    if env:
+        e = env.strip().lower()
+        if e in ("0", "false", "ref"):
+            return "ref"
+        if e in ("native", "interpret"):
+            return e
+        if e in ("1", "true"):
+            return "native" if _on_tpu() else "interpret"
+        raise ValueError(     # a typo'd debug override must not misroute
+            f"REPRO_FORCE_PALLAS={env!r}: expected 1/true/0/false/"
+            "ref/native/interpret")
     if use_pallas is False:
         return "ref"
     if _on_tpu():
         return "native"
     if use_pallas is True:
         return "interpret"
+    if not auto_interpret:
+        return "ref"
     return "interpret" if work_elems <= interp_budget else "ref"
 
 
 def fwht(x: jax.Array, normalized: bool = True,
          use_pallas: Optional[bool] = None) -> jax.Array:
-    route = _route(use_pallas, x.size)
+    n = x.shape[-1]
+    a, b = transforms.kron_factors(n)
+    route = _route(use_pallas, x.size * (a + b))     # Kronecker-sandwich MACs
     if route == "ref":
         return _ref.fwht_ref(x, normalized)
     return _fwht.fwht_pallas(x, normalized, interpret=(route == "interpret"))
@@ -49,7 +89,7 @@ def circulant_project(g: jax.Array, x: jax.Array, m: int,
                       epilogue: str = "identity",
                       sq: Optional[jax.Array] = None,
                       use_pallas: Optional[bool] = None) -> jax.Array:
-    route = _route(use_pallas, x.shape[0] * m)
+    route = _route(use_pallas, x.shape[0] * x.shape[-1] * m)   # B*n*m MACs
     if route == "ref":
         return _ref.circulant_project_ref(g, x, m, epilogue, sq)
     return _circ.circulant_project_pallas(
@@ -69,8 +109,175 @@ def paged_gather(pool: jax.Array, tables: jax.Array,
 
 def srf_decode(s, z, phi_q, phi_k, v, eps: float = 1e-6,
                use_pallas: Optional[bool] = None):
-    route = _route(use_pallas, s.size)
+    route = _route(use_pallas, s.size)               # state bytes dominate
     if route == "ref":
         return _ref.srf_decode_ref(s, z, phi_q, phi_k, v, eps)
     return _dec.srf_decode_pallas(s, z, phi_q, phi_k, v, eps,
                                   interpret=(route == "interpret"))
+
+
+# ---------------------------------------------------------------------------
+# fused structured spinner  f(A . D1 H D0 . x)
+# ---------------------------------------------------------------------------
+
+_VMEM_BUDGET = 8 * 1024 * 1024     # bytes; ~half of a 16 MB VMEM core
+_BLOCK_B_CANDIDATES = (512, 256, 128, 64, 32, 16, 8)
+_BLOCK_M_CANDIDATES = (2048, 1024, 512, 256, 128)
+_plan_cache: Dict[tuple, Tuple[int, int]] = {}
+
+
+def _spinner_vmem_bytes(kind: str, n: int, m: int, tb: int, tm: int,
+                        use_hd: bool, epilogue: str) -> int:
+    """f32-resident bytes of one spinner program (VMEM feasibility model)."""
+    elems = tb * n            # x tile
+    elems += tb * n + tb      # HD scratch + sq scratch
+    elems += tm * n           # regenerated / streamed A tile
+    elems += tb * tm * (2 if epilogue == "cos_sin" else 1)   # out tile
+    if use_hd:
+        a, b = transforms.kron_factors(n)
+        elems += a * a + b * b + 2 * n               # factors + d0/d1
+        elems += tb * n                              # sandwich intermediate
+    if kind in ("circulant", "skew_circulant"):
+        elems += 2 * n * -(-m // n)                  # doubled generators
+    elif kind in ("toeplitz", "hankel"):
+        elems += n + m - 1
+    # unstructured streams its (tm, n) tile — already counted above
+    return 4 * elems
+
+
+def spinner_plan(kind: str, n: int, m: int, *, use_hd: bool = True,
+                 epilogue: str = "identity",
+                 budget: int = _VMEM_BUDGET) -> Tuple[int, int]:
+    """Pick (block_b, block_m) for the spinner kernel: sweep the candidate
+    grid against the VMEM budget, preferring large row tiles (they
+    amortize grid overhead) then large batch tiles. Cached per shape, so
+    serving factories can pre-warm it (launch/steps.py)."""
+    key = (kind, n, m, use_hd, epilogue, budget)
+    if key in _plan_cache:
+        return _plan_cache[key]
+    best = (_BLOCK_B_CANDIDATES[-1], _BLOCK_M_CANDIDATES[-1])
+    found = False
+    for tm in _BLOCK_M_CANDIDATES:
+        if found:
+            break
+        for tb in _BLOCK_B_CANDIDATES:
+            if _spinner_vmem_bytes(kind, n, m, tb, min(tm, m),
+                                   use_hd, epilogue) <= budget:
+                best = (tb, tm)
+                found = True
+                break
+    _plan_cache[key] = best
+    return best
+
+
+def _spinner_pallas_vjp(kind: str, m: int, use_hd: bool, epilogue: str,
+                        y_scale: float, out_scale: float, tb: int, tm: int,
+                        interpret: bool):
+    """Pallas forward + jnp-reference backward (Pallas kernels have no
+    native autodiff; the ref graph IS the semantics, so its VJP is exact
+    up to float re-association)."""
+    fwd_fn = functools.partial(
+        _spin.spinner_project_pallas, kind, m=m, use_hd=use_hd,
+        epilogue=epilogue, y_scale=y_scale, out_scale=out_scale,
+        block_b=tb, block_m=tm, interpret=interpret)
+    ref_fn = functools.partial(
+        _ref.spinner_project_ref, kind, m=m, epilogue=epilogue,
+        y_scale=y_scale, out_scale=out_scale)
+
+    @jax.custom_vjp
+    def f(g, x, d0, d1):
+        return fwd_fn(g, x, d0=d0, d1=d1)
+
+    def fwd(g, x, d0, d1):
+        return f(g, x, d0, d1), (g, x, d0, d1)
+
+    def bwd(res, dy):
+        g, x, d0, d1 = res
+        _, vjp = jax.vjp(lambda gg, xx, dd0, dd1:
+                         ref_fn(gg, xx, d0=dd0, d1=dd1), g, x, d0, d1)
+        return vjp(dy)
+
+    f.defvjp(fwd, bwd)
+    return f
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "kind", "m", "epilogue", "y_scale", "out_scale", "grouped", "route",
+    "block_b", "block_m"))
+def _spinner_call(kind, g, x, m, d0, d1, h, *, epilogue, y_scale, out_scale,
+                  grouped, route, block_b, block_m):
+    """Single jit entry for both spinner routes: the group lift / leading-
+    dim flatten / output reshape all trace away, so an eager caller pays
+    exactly one dispatch (consumers under their own jit inline this)."""
+    n = x.shape[-1]
+    if grouped:
+        gsz, lead = x.shape[0], x.shape[1:-1]
+        xf = x.reshape(gsz, -1, n)
+    else:
+        gsz, lead = 1, x.shape[:-1]
+        xf = x.reshape(1, -1, n)
+        g = g[None]
+        h = None if h is None else h[None]
+        d0 = None if d0 is None else d0[None]
+        d1 = None if d1 is None else d1[None]
+    if route == "ref":
+        y = _ref.spinner_project_ref(kind, g, xf, m, d0=d0, d1=d1, h=h,
+                                     epilogue=epilogue, y_scale=y_scale,
+                                     out_scale=out_scale)
+    else:
+        fn = _spinner_pallas_vjp(kind, m, d0 is not None, epilogue, y_scale,
+                                 out_scale, block_b, block_m,
+                                 interpret=(route == "interpret"))
+        y = fn(g, xf, d0, d1)
+    out_dim = 2 * m if epilogue == "cos_sin" else m
+    shape = ((gsz,) + lead + (out_dim,)) if grouped else (lead + (out_dim,))
+    return y.reshape(shape)
+
+
+def spinner_project(kind: str, params: Dict[str, jax.Array], x: jax.Array,
+                    m: int, epilogue: str = "identity",
+                    y_scale: float = 1.0, out_scale: float = 1.0,
+                    grouped: bool = False,
+                    use_pallas: Optional[bool] = None,
+                    block_b: Optional[int] = None,
+                    block_m: Optional[int] = None) -> jax.Array:
+    """One-pass  f(y_scale * A . D1 H D0 . x) * out_scale  for any P-model.
+
+    params: the pmodel.init dict ({"g", optional "h", "d0", "d1"}); HD is
+    applied iff "d0" is present. x: (..., n) — or (G, ..., n) with
+    ``grouped=True`` and a leading group axis G on every param leaf
+    (per-kv-head P-models in SRF attention run as one fused dispatch).
+
+    Output (..., m), or (..., 2m) = [cos | sin] for the cos_sin epilogue.
+    epilogues: identity | relu | heaviside | sign | exp | cos_sin; ``exp``
+    computes exp(y - 0.5||x||^2) with the subtrahend taken in-kernel
+    (valid because the normalized HD block is an isometry).
+
+    Kinds circulant / skew_circulant / toeplitz / hankel run as implicit-
+    tile Pallas kernels; unstructured streams dense row tiles through the
+    same fused kernel; ldr always takes the fused jnp reference. The
+    Pallas path carries a jnp-reference VJP, so it is safe under grad.
+    """
+    g = params["g"]
+    h = params.get("h")
+    d0 = params.get("d0")
+    d1 = params.get("d1")
+    use_hd = d0 is not None
+    n = x.shape[-1]
+    work = (x.size // n) * n * m
+
+    pallas_ok = (kind in _spin.PALLAS_KINDS
+                 and (not use_hd or transforms.is_pow2(n))
+                 and n <= 8192 and n + m - 1 <= (1 << 22))
+    route = _route(use_pallas, work, auto_interpret=False)
+    if not pallas_ok:
+        route = "ref"
+    if route != "ref" and (block_b is None or block_m is None):
+        auto_b, auto_m = spinner_plan(kind, n, m, use_hd=use_hd,
+                                      epilogue=epilogue)
+        block_b = block_b or auto_b
+        block_m = block_m or auto_m
+    return _spinner_call(kind, g, x, m, d0, d1, h, epilogue=epilogue,
+                         y_scale=y_scale, out_scale=out_scale,
+                         grouped=grouped, route=route,
+                         block_b=block_b, block_m=block_m)

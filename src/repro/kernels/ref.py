@@ -6,12 +6,13 @@ dtypes and assert allclose against these.
 from __future__ import annotations
 
 import math
-from typing import Optional, Tuple
+from functools import partial
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import transforms
+from repro.core import structured, transforms
 
 
 def fwht_ref(x: jax.Array, normalized: bool = True) -> jax.Array:
@@ -48,6 +49,102 @@ def circulant_project_ref(g: jax.Array, x: jax.Array, m: int,
     if epilogue == "cos_sin":
         return jnp.concatenate([jnp.cos(y), jnp.sin(y)], axis=-1)
     raise ValueError(epilogue)
+
+
+def _spinner_epilogue(y, x, epilogue: str, out_scale: float):
+    """Pointwise f of the spinner; ``x`` is the pre-HD input (for ``exp``
+    the subtrahend 0.5||x||^2 equals 0.5||v||^2 by the HD isometry)."""
+    if epilogue == "identity":
+        r = y
+    elif epilogue == "relu":
+        r = jax.nn.relu(y)
+    elif epilogue == "heaviside":
+        r = (y >= 0).astype(y.dtype)
+    elif epilogue == "sign":
+        r = jnp.sign(y)
+    elif epilogue == "exp":
+        xf = x.astype(jnp.float32)
+        sq = 0.5 * jnp.sum(xf * xf, axis=-1, keepdims=True)
+        r = jnp.exp(y.astype(jnp.float32) - sq).astype(y.dtype)
+    elif epilogue == "cos_sin":
+        r = jnp.concatenate([jnp.cos(y), jnp.sin(y)], axis=-1)
+    else:
+        raise ValueError(epilogue)
+    return r if out_scale == 1.0 else r * jnp.asarray(out_scale, r.dtype)
+
+
+def _skew_matvec_diag(w: jax.Array, d1, g: jax.Array, m: int) -> jax.Array:
+    """Block skew-circulant matvec of (d1 ⊙ w), the D1 diagonal FOLDED into
+    the complex skew modulation (d1 · e^{iπj/n} is one combined elementwise
+    factor — one fewer full-width pass than d1-mul-then-matvec).
+
+    w: (..., n); g: (nb, n) -> (..., m). All blocks share one input FFT
+    and one batched inverse FFT.
+    """
+    n = w.shape[-1]
+    d = structured._skew_modulation(n)
+    dd = d if d1 is None else d * structured._f32(d1).astype(jnp.complex64)
+    fx = jnp.fft.fft(structured._f32(w).astype(jnp.complex64) * dd, n=n)
+    fg = jnp.fft.fft(structured._f32(g).astype(jnp.complex64) * d, n=n)
+    y = jnp.fft.ifft(fx[..., None, :] * jnp.conj(fg), n=n) * jnp.conj(d)
+    y = y.real.astype(w.dtype)                                # (..., nb, n)
+    return y.reshape(*w.shape[:-1], -1)[..., :m]
+
+
+def _hd_kron(x: jax.Array, d0: jax.Array, d1) -> jax.Array:
+    """D1 · H · D0 · x with the Kronecker-form FWHT and the 1/sqrt(n)
+    normalization FOLDED into the (constant) left Hadamard factor — one
+    fewer full-width scaling pass than hd_preprocess(use_kron=True).
+    Pass d1=None to skip the output diagonal (the skew path folds it into
+    its complex modulation instead)."""
+    n = x.shape[-1]
+    a, b = transforms.kron_factors(n)
+    ha = transforms.hadamard(a, x.dtype, normalized=False) \
+        * jnp.asarray(1.0 / math.sqrt(n), x.dtype)
+    hb = transforms.hadamard(b, x.dtype, normalized=False)
+    xm = (d0 * x).reshape(*x.shape[:-1], a, b)
+    y = jnp.einsum("pa,...ab,bq->...pq", ha, xm, hb)
+    y = y.reshape(*x.shape[:-1], n)
+    return y if d1 is None else d1 * y
+
+
+def _spinner_one(kind: str, m: int, epilogue: str, y_scale: float,
+                 out_scale: float, g, h, d0, d1, x):
+    params = {"g": g} if h is None else {"g": g, "h": h}
+    if kind == "skew_circulant":
+        w = x if d0 is None else _hd_kron(x, d0, None)
+        y = _skew_matvec_diag(w, None if d0 is None else d1, g, m)
+    else:
+        v = x if d0 is None else _hd_kron(x, d0, d1)
+        y = structured.matvec(kind, params, v, m)
+    if y_scale != 1.0:
+        y = y * jnp.asarray(y_scale, y.dtype)
+    return _spinner_epilogue(y, x, epilogue, out_scale)
+
+
+def spinner_project_ref(kind: str, g: jax.Array, x: jax.Array, m: int,
+                        d0: Optional[jax.Array] = None,
+                        d1: Optional[jax.Array] = None,
+                        h: Optional[jax.Array] = None,
+                        epilogue: str = "identity",
+                        y_scale: float = 1.0,
+                        out_scale: float = 1.0) -> jax.Array:
+    """Fused spinner  f(A . D1 H D0 . x)  as ONE differentiable jnp graph.
+
+    x: (G, B, n); g (and optional ldr ``h``) carry a leading group axis G;
+    d0/d1: (G, n) or None (no HD). Output (G, B, m) — (G, B, 2m) for
+    cos_sin. Uses the Kronecker-form FWHT and the FFT structured matvec,
+    so under jit this is a single fused dispatch (no HBM round trips
+    between HD / projection / f) — the CPU/GPU realization of the fusion
+    the Pallas kernel performs on TPU, and the backward rule for it.
+    """
+    fn = partial(_spinner_one, kind, m, epilogue, y_scale, out_scale)
+    if x.shape[0] == 1:                  # ungrouped: skip the vmap wrapper
+        sq = lambda t: None if t is None else t[0]
+        return fn(sq(g), sq(h), sq(d0), sq(d1), x[0])[None]
+    axes = (0, None if h is None else 0, None if d0 is None else 0,
+            None if d1 is None else 0, 0)
+    return jax.vmap(fn, in_axes=axes)(g, h, d0, d1, x)
 
 
 def srf_decode_ref(s: jax.Array, z: jax.Array, phi_q: jax.Array,

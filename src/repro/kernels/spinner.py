@@ -1,0 +1,234 @@
+"""Pallas TPU kernel: the fused structured spinner  f(A . D1 H D0 . x).
+
+The paper's whole pipeline (Step-1 HD preconditioner -> structured
+projection -> pointwise f) is one cheap operator, but executed naively it
+is 3+ dispatches with an HBM round trip between each:
+
+    u = D0 x ; w = H u ; v = D1 w      (transforms.hd_preprocess)
+    y = A v                            (structured.matvec, FFT)
+    out = f(y)                         (pointwise epilogue)
+
+This kernel runs the whole chain in a single ``pallas_call``: per batch
+tile the HD sandwich is computed ONCE into VMEM scratch (Kronecker-form
+FWHT — the MXU sandwich of kernels/fwht.py), then every row tile of the
+structured matrix A is REGENERATED in VMEM from its O(n) generator and
+fed straight to the MXU, with f fused as an epilogue before the single
+write-back.  HBM traffic: x in, f(y) out, generators (O(n)); no
+intermediate ever leaves the chip.
+
+Implicit tile regeneration (A is never materialized in HBM), with
+``rows = j*tm + iota`` the global row ids of the tile and ``cols`` the
+column iota:
+
+  circulant       A[i,j] = g[i//n, (j - i) mod n]
+                  -> gather gg[blk, cols - off + n],  gg = [g, g]
+  skew_circulant  wrapped entries negated
+                  -> same gather from gg = [-g, g]
+  toeplitz        A[i,j] = gen(j - i), gen(d>=0) = g[d], gen(d<0) = g[n-1-d]
+                  -> gather glin[cols - rows + m - 1],
+                     glin = [flip(g[n:]), g[:n]]          (length n+m-1)
+  hankel          A[i,j] = g[i + j]  -> gather g[rows + cols]
+  unstructured    dense g, streamed per row tile by BlockSpec (no gather
+                  — still fuses HD + matmul + epilogue in one pass)
+
+``ldr`` tiles cost O(r n) per entry to regenerate and stay on the jnp
+reference path (kernels/ref.py).
+
+Grid: (groups, batch_tiles, row_tiles); the group axis carries
+independent P-models (one per kv head in SRF attention) so per-head
+feature maps run as ONE kernel instead of a vmap of dispatches.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import transforms
+
+EPILOGUES = ("identity", "relu", "heaviside", "sign", "exp", "cos_sin")
+PALLAS_KINDS = ("circulant", "skew_circulant", "toeplitz", "hankel",
+                "unstructured")
+
+
+def _apply_epilogue(y, epilogue, sq, out_scale):
+    if epilogue == "identity":
+        r = y
+    elif epilogue == "relu":
+        r = jnp.maximum(y, 0.0)
+    elif epilogue == "heaviside":
+        r = (y >= 0).astype(y.dtype)
+    elif epilogue == "sign":
+        r = jnp.sign(y)
+    elif epilogue == "exp":
+        r = jnp.exp(y - sq)
+    else:
+        raise ValueError(epilogue)
+    return r if out_scale == 1.0 else r * out_scale
+
+
+def _regen_tile(kind, gt, j, *, n, m, tm, nb, gl):
+    """Rebuild the (tm, n) row tile of A in VMEM from the O(n) generator.
+
+    Indices from padded row tiles (rows >= m) are clamped; those rows are
+    garbage but their write-back is dropped by the out BlockSpec.
+    """
+    rows = j * tm + jax.lax.broadcasted_iota(jnp.int32, (tm, n), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (tm, n), 1)
+    if kind in ("circulant", "skew_circulant"):
+        blk = jnp.minimum(rows // n, nb - 1)
+        off = rows % n
+        idx = cols - off + n                     # in [1, 2n); sign folded in gt
+        return gt[blk, idx]
+    if kind == "toeplitz":
+        idx = jnp.clip(cols - rows + (m - 1), 0, gl - 1)
+        return gt[0][idx]
+    if kind == "hankel":
+        idx = jnp.clip(rows + cols, 0, gl - 1)
+        return gt[0][idx]
+    raise ValueError(kind)
+
+
+def _spinner_kernel(*refs, kind: str, n: int, m: int, tb: int, tm: int,
+                    a: int, b: int, nb: int, gl: int, use_hd: bool,
+                    epilogue: str, y_scale: float, out_scale: float):
+    it = iter(refs)
+    x_ref = next(it)
+    if use_hd:
+        d0_ref, d1_ref, ha_ref, hb_ref = next(it), next(it), next(it), next(it)
+    gt_ref = next(it)
+    o_ref = next(it)
+    hd_ref = next(it)                            # VMEM scratch (tb, n) f32
+    sq_ref = next(it)                            # VMEM scratch (tb, 1) f32
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _hd():                                   # once per (group, batch tile)
+        x = x_ref[0].astype(jnp.float32)         # (tb, n)
+        if epilogue == "exp":                    # ||v|| = ||x|| (HD isometry)
+            sq_ref[...] = 0.5 * jnp.sum(x * x, axis=-1, keepdims=True)
+        if use_hd:
+            u = x * d0_ref[0, 0].astype(jnp.float32)
+            z = jnp.dot(u.reshape(tb * a, b), hb_ref[...],
+                        preferred_element_type=jnp.float32)
+            z = z.reshape(tb, a, b).transpose(0, 2, 1).reshape(tb * b, a)
+            w = jnp.dot(z, ha_ref[...], preferred_element_type=jnp.float32)
+            w = w.reshape(tb, b, a).transpose(0, 2, 1).reshape(tb, n)
+            x = w * (1.0 / math.sqrt(n)) * d1_ref[0, 0].astype(jnp.float32)
+        hd_ref[...] = x
+
+    v = hd_ref[...]                              # (tb, n) f32
+    if kind == "unstructured":
+        tile = gt_ref[0]                         # (tm, n) streamed by BlockSpec
+    else:
+        tile = _regen_tile(kind, gt_ref[0], j, n=n, m=m, tm=tm, nb=nb, gl=gl)
+    y = jax.lax.dot_general(v, tile.astype(jnp.float32),
+                            (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (tb, tm)
+    if y_scale != 1.0:
+        y = y * y_scale
+    if epilogue == "cos_sin":
+        s = out_scale
+        o_ref[0, :, 0, :] = (jnp.cos(y) * s).astype(o_ref.dtype)
+        o_ref[0, :, 1, :] = (jnp.sin(y) * s).astype(o_ref.dtype)
+    else:
+        sq = sq_ref[...] if epilogue == "exp" else None
+        o_ref[0] = _apply_epilogue(y, epilogue, sq, out_scale).astype(o_ref.dtype)
+
+
+def _gen_table(kind: str, g: jax.Array, n: int) -> jax.Array:
+    """Per-kind generator layout consumed by ``_regen_tile`` (leading G)."""
+    if kind == "circulant":
+        return jnp.concatenate([g, g], axis=-1)            # (G, nb, 2n)
+    if kind == "skew_circulant":
+        return jnp.concatenate([-g, g], axis=-1)           # wrapped -> -g
+    if kind == "toeplitz":                                 # glin[d + m - 1]
+        return jnp.concatenate([jnp.flip(g[..., n:], -1), g[..., :n]],
+                               axis=-1)[:, None, :]        # (G, 1, n+m-1)
+    if kind == "hankel":
+        return g[:, None, :]                               # (G, 1, n+m-1)
+    if kind == "unstructured":
+        return g                                           # (G, m, n) dense
+    raise ValueError(kind)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "kind", "m", "use_hd", "epilogue", "y_scale", "out_scale",
+    "block_b", "block_m", "interpret"))
+def spinner_project_pallas(kind: str, g: jax.Array, x: jax.Array, m: int,
+                           d0: Optional[jax.Array] = None,
+                           d1: Optional[jax.Array] = None,
+                           use_hd: bool = True,
+                           epilogue: str = "identity",
+                           y_scale: float = 1.0, out_scale: float = 1.0,
+                           block_b: int = 256, block_m: int = 512,
+                           interpret: bool = True) -> jax.Array:
+    """x: (G, B, n) -> (G, B, m)  ((G, B, 2m) for cos_sin: [cos | sin]).
+
+    g: generators with leading group axis — (G, nb, n) for circulant /
+    skew_circulant, (G, n+m-1) for toeplitz / hankel, (G, m, n) dense.
+    d0/d1: (G, n) Rademacher diagonals when ``use_hd``.
+
+    All arithmetic is f32 in VMEM (bf16 inputs upcast on load, cast back
+    on the single write). Awkward B / m (not multiples of the block
+    sizes) are handled by grid padding: OOB gathers clamp, OOB writes
+    drop.
+    """
+    assert epilogue in EPILOGUES, epilogue
+    assert kind in PALLAS_KINDS, kind
+    gsz, bsz, n = x.shape
+    if use_hd:
+        assert transforms.is_pow2(n), f"HD needs power-of-two n, got {n}"
+    tb = min(block_b, bsz)
+    tm = min(block_m, m)
+    gt = _gen_table(kind, g, n)
+    nb, gl = gt.shape[-2], gt.shape[-1]
+    grid = (gsz, pl.cdiv(bsz, tb), pl.cdiv(m, tm))
+
+    in_specs = [pl.BlockSpec((1, tb, n), lambda gi, i, j: (gi, i, 0))]
+    inputs = [x]
+    a = b = 1
+    if use_hd:
+        a, b = transforms.kron_factors(n)
+        ha = transforms.hadamard(a, jnp.float32, normalized=False)
+        hb = transforms.hadamard(b, jnp.float32, normalized=False)
+        in_specs += [pl.BlockSpec((1, 1, n), lambda gi, i, j: (gi, 0, 0)),
+                     pl.BlockSpec((1, 1, n), lambda gi, i, j: (gi, 0, 0)),
+                     pl.BlockSpec((a, a), lambda gi, i, j: (0, 0)),
+                     pl.BlockSpec((b, b), lambda gi, i, j: (0, 0))]
+        inputs += [d0[:, None, :], d1[:, None, :], ha, hb]
+    if kind == "unstructured":                   # stream dense row tiles
+        in_specs += [pl.BlockSpec((1, tm, n), lambda gi, i, j: (gi, j, 0))]
+    else:                                        # O(n) generator resident
+        in_specs += [pl.BlockSpec((1, nb, gl), lambda gi, i, j: (gi, 0, 0))]
+    inputs += [gt]
+
+    if epilogue == "cos_sin":
+        out_shape = jax.ShapeDtypeStruct((gsz, bsz, 2, m), x.dtype)
+        out_specs = pl.BlockSpec((1, tb, 2, tm), lambda gi, i, j: (gi, i, 0, j))
+    else:
+        out_shape = jax.ShapeDtypeStruct((gsz, bsz, m), x.dtype)
+        out_specs = pl.BlockSpec((1, tb, tm), lambda gi, i, j: (gi, i, j))
+
+    kernel = functools.partial(
+        _spinner_kernel, kind=kind, n=n, m=m, tb=tb, tm=tm, a=a, b=b,
+        nb=nb, gl=gl, use_hd=use_hd, epilogue=epilogue,
+        y_scale=y_scale, out_scale=out_scale)
+    y = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        scratch_shapes=[pltpu.VMEM((tb, n), jnp.float32),
+                        pltpu.VMEM((tb, 1), jnp.float32)],
+        interpret=interpret,
+    )(*inputs)
+    if epilogue == "cos_sin":
+        y = y.reshape(gsz, bsz, 2 * m)           # row-major: [cos | sin]
+    return y

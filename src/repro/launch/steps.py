@@ -15,6 +15,27 @@ from repro.models import transformer as model
 from repro.optim import adamw, schedule
 
 
+def _prewarm_srf_spinner(cfg) -> None:
+    """Populate the fused-spinner block-size plan cache for the SRF
+    feature shapes this config will serve. The sweep itself is cheap
+    (a pure-Python candidate scan); the point is to pin the plan at
+    factory time so every step dispatch sees a warm, deterministic cache
+    and the chosen blocks are inspectable before the first request."""
+    if getattr(cfg, "attn_impl", None) != "srf":
+        return
+    from repro.kernels import ops as kops
+    from repro.models.attention import srf_cfg
+    sc = srf_cfg(cfg)
+    spec = sc.spec
+    # softmax_pos: keys use the fused 'exp' epilogue; the stabilized query
+    # path projects with 'identity' (overflow-safe shift applied outside).
+    epis = {"softmax_pos": ("exp", "identity"), "trig": ("cos_sin",),
+            "relu": ("relu",)}[sc.feature]
+    for epi in epis:
+        kops.spinner_plan(spec.kind, spec.n, spec.m, use_hd=spec.use_hd,
+                          epilogue=epi)
+
+
 @dataclass(frozen=True)
 class TrainHyper:
     lr: float = 3e-4
@@ -58,6 +79,7 @@ def make_grad_step(cfg, aux_weight: float = 0.01):
 
 
 def make_prefill_step(cfg):
+    _prewarm_srf_spinner(cfg)
     def prefill_step(params, batch, cache):
         return model.prefill(params, cfg, batch, cache)
     return prefill_step
@@ -68,8 +90,11 @@ def make_paged_step(cfg):
 
     (params, pools, tokens (B, C), positions (B, C), q_valid (B, C),
     tables (B, M)) -> (logits (B, C, V_padded), pools'). One jit cache
-    entry per (B, C) shape — the engine keeps those fixed.
+    entry per (B, C) shape — the engine keeps those fixed. With SRF
+    attention the phi(q)/phi(k) feature maps inside run as single fused
+    spinner passes; the factory pre-warms their block-size plan.
     """
+    _prewarm_srf_spinner(cfg)
     def paged_step(params, pools, tokens, positions, q_valid, tables):
         return model.paged_step(params, cfg, pools, tokens, positions,
                                 q_valid, tables)

@@ -87,3 +87,169 @@ def test_auto_routing_large_falls_back():
     yr = ref.circulant_project_ref(g, x, 64)
     np.testing.assert_allclose(np.asarray(y), np.asarray(yr), rtol=1e-4,
                                atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# fused structured spinner:  f(A . D1 H D0 . x)  vs the dense pmodel oracle
+# ---------------------------------------------------------------------------
+
+from repro.core import pmodel
+from repro.core.pmodel import PModelSpec
+
+SPINNER_EPILOGUES = ["identity", "relu", "heaviside", "sign", "exp",
+                     "cos_sin"]
+
+
+def _spinner_oracle(spec, params, x, epilogue):
+    """f(W x) with W = materialize(A . D1 H D0) — the dense ground truth."""
+    w = pmodel.materialize(spec, params).astype(jnp.float32)
+    y = x.astype(jnp.float32) @ w.T
+    if epilogue == "identity":
+        return np.asarray(y)
+    if epilogue == "relu":
+        return np.asarray(jnp.maximum(y, 0))
+    if epilogue == "heaviside":
+        return np.asarray((y >= 0).astype(jnp.float32))
+    if epilogue == "sign":
+        return np.asarray(jnp.sign(y))
+    if epilogue == "exp":
+        sq = 0.5 * jnp.sum(x.astype(jnp.float32) ** 2, -1, keepdims=True)
+        return np.asarray(jnp.exp(y - sq))
+    if epilogue == "cos_sin":
+        return np.asarray(jnp.concatenate([jnp.cos(y), jnp.sin(y)], -1))
+    raise ValueError(epilogue)
+
+
+def _spinner_tol(dtype, epilogue):
+    if dtype == jnp.bfloat16:
+        if epilogue in ("cos_sin", "exp"):
+            return dict(rtol=5e-2, atol=1.5e-1)
+        return dict(rtol=2e-2, atol=3e-2)
+    return dict(rtol=1e-4, atol=1e-4)   # acceptance: <= 1e-4 vs dense oracle
+
+
+@pytest.mark.parametrize("use_pallas", [True, False])
+@pytest.mark.parametrize("kind", ["circulant", "skew_circulant", "toeplitz",
+                                  "hankel", "unstructured", "ldr"])
+@pytest.mark.parametrize("epilogue", SPINNER_EPILOGUES)
+def test_spinner_all_kinds_epilogues(kind, epilogue, use_pallas):
+    """Every P-model kind x epilogue against the dense pipeline oracle, on
+    BOTH routes — the jnp ref path (use_pallas=False) is also the
+    custom_vjp backward of every Pallas call, so it needs oracle coverage
+    of its own (incl. the d1-folded skew path)."""
+    b, n, m = 9, 64, 128
+    spec = PModelSpec(kind=kind, m=m, n=n)
+    params = pmodel.init(jax.random.PRNGKey(0), spec)
+    x = jax.random.normal(jax.random.PRNGKey(1), (b, n)) * 0.3
+    y = ops.spinner_project(kind, params, x, m, epilogue=epilogue,
+                            use_pallas=use_pallas)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               _spinner_oracle(spec, params, x, epilogue),
+                               **_spinner_tol(jnp.float32, epilogue))
+
+
+@pytest.mark.parametrize("kind", ["circulant", "toeplitz", "hankel"])
+@pytest.mark.parametrize("b,n,m,bb,bm", [
+    (5, 128, 80, 4, 32),      # m not a multiple of block_m; ragged batch
+    (3, 32, 48, 8, 32),       # block-stacked m > n, ragged row tile
+    (300, 32, 40, 128, 16),   # batch not a multiple of block_b
+    (2, 64, 256, 2, 256),     # m > n whole-m row tile
+])
+def test_spinner_awkward_shapes(kind, b, n, m, bb, bm):
+    spec = PModelSpec(kind=kind, m=m, n=n)
+    params = pmodel.init(jax.random.PRNGKey(2), spec)
+    x = jax.random.normal(jax.random.PRNGKey(3), (b, n)) * 0.3
+    y = ops.spinner_project(kind, params, x, m, epilogue="relu",
+                            use_pallas=True, block_b=bb, block_m=bm)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               _spinner_oracle(spec, params, x, "relu"),
+                               **_spinner_tol(jnp.float32, "relu"))
+
+
+@pytest.mark.parametrize("epilogue", ["identity", "exp", "cos_sin"])
+def test_spinner_bf16(epilogue):
+    spec = PModelSpec(kind="circulant", m=256, n=128)
+    p32 = pmodel.init(jax.random.PRNGKey(4), spec)
+    p16 = jax.tree_util.tree_map(lambda t: t.astype(jnp.bfloat16), p32)
+    x = (jax.random.normal(jax.random.PRNGKey(5), (16, 128)) * 0.3
+         ).astype(jnp.bfloat16)
+    y = ops.spinner_project("circulant", p16, x, 256, epilogue=epilogue,
+                            use_pallas=True)
+    assert y.dtype == jnp.bfloat16
+    yr = _spinner_oracle(spec, p32, x, epilogue)
+    ya = np.asarray(y, np.float32)
+    if epilogue == "exp":       # exp amplifies bf16 rounding; log-space cmp
+        ya, yr = np.log(ya + 1e-9), np.log(yr + 1e-9)
+    np.testing.assert_allclose(ya, yr, **_spinner_tol(jnp.bfloat16, epilogue))
+
+
+def test_spinner_no_hd():
+    """use_hd=False (e.g. non-pow2 head dims): projection + epilogue only."""
+    spec = PModelSpec(kind="toeplitz", m=96, n=48, use_hd=False)
+    params = pmodel.init(jax.random.PRNGKey(6), spec)
+    x = jax.random.normal(jax.random.PRNGKey(7), (7, 48)) * 0.3
+    y = ops.spinner_project("toeplitz", params, x, 96, epilogue="exp",
+                            use_pallas=True)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               _spinner_oracle(spec, params, x, "exp"),
+                               **_spinner_tol(jnp.float32, "exp"))
+
+
+def test_spinner_grouped_matches_per_group():
+    """(G, B, n) grouped call == G independent single calls (per-head SRF)."""
+    gcount, b, n, m = 3, 6, 64, 96
+    spec = PModelSpec(kind="circulant", m=m, n=n)
+    keys = jax.random.split(jax.random.PRNGKey(8), gcount)
+    gp = jax.vmap(lambda k: pmodel.init(k, spec))(keys)
+    x = jax.random.normal(jax.random.PRNGKey(9), (gcount, b, n)) * 0.3
+    y = ops.spinner_project("circulant", gp, x, m, epilogue="cos_sin",
+                            grouped=True, use_pallas=True)
+    for i in range(gcount):
+        pi = jax.tree_util.tree_map(lambda t: t[i], gp)
+        np.testing.assert_allclose(
+            np.asarray(y[i], np.float32),
+            _spinner_oracle(spec, pi, x[i], "cos_sin"),
+            **_spinner_tol(jnp.float32, "cos_sin"))
+
+
+def test_spinner_grad_matches_ref():
+    """Pallas route carries a jnp-reference VJP: grads match the ref route."""
+    spec = PModelSpec(kind="circulant", m=64, n=32)
+    params = pmodel.init(jax.random.PRNGKey(10), spec)
+    x = jax.random.normal(jax.random.PRNGKey(11), (5, 32)) * 0.3
+
+    def loss(p, xx, up):
+        y = ops.spinner_project("circulant", p, xx, 64, epilogue="relu",
+                                use_pallas=up)
+        return jnp.sum(jnp.sin(y))
+
+    gp_pal, gx_pal = jax.grad(loss, argnums=(0, 1))(params, x, True)
+    gp_ref, gx_ref = jax.grad(loss, argnums=(0, 1))(params, x, False)
+    np.testing.assert_allclose(np.asarray(gx_pal), np.asarray(gx_ref),
+                               rtol=1e-4, atol=1e-5)
+    for k in gp_ref:
+        np.testing.assert_allclose(np.asarray(gp_pal[k]),
+                                   np.asarray(gp_ref[k]),
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_spinner_vs_project_fused():
+    """pmodel.project / project_fused are thin wrappers over the kernel."""
+    spec = PModelSpec(kind="skew_circulant", m=128, n=64)
+    params = pmodel.init(jax.random.PRNGKey(12), spec)
+    x = jax.random.normal(jax.random.PRNGKey(13), (4, 3, 64)) * 0.3
+    y = pmodel.project(spec, params, x)
+    np.testing.assert_allclose(np.asarray(y).reshape(12, 128),
+                               _spinner_oracle(spec, params,
+                                               x.reshape(12, 64), "identity"),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_spinner_force_env(monkeypatch):
+    """REPRO_FORCE_PALLAS=ref forces the jnp reference route."""
+    monkeypatch.setenv("REPRO_FORCE_PALLAS", "ref")
+    assert ops._route(True, 10) == "ref"
+    monkeypatch.setenv("REPRO_FORCE_PALLAS", "interpret")
+    assert ops._route(False, 10) == "interpret"
+    monkeypatch.delenv("REPRO_FORCE_PALLAS")
+    assert ops._route(False, 10) == "ref"

@@ -86,3 +86,24 @@ def test_budget_knob_changes_feature_quality():
         q, _, _ = _qkv(jax.random.PRNGKey(5), b=1, h=1, l=8, d=32)
         pq = A.feature_map(cfg, params, q, True)
         assert bool(jnp.all(jnp.isfinite(pq)))
+
+
+def test_phi_softmax_pos_stabilized_large_norm_finite():
+    """Regression: stabilize=True must stay finite (and match the shifted
+    closed form) for large-norm inputs where raw exp(y - ||x||^2/2)
+    under/overflows f32 — the SRF query path depends on this."""
+    import numpy as np
+    from repro.core import features, pmodel
+    from repro.core.pmodel import PModelSpec
+
+    spec = PModelSpec(kind="circulant", m=128, n=64)
+    params = pmodel.init(jax.random.PRNGKey(0), spec)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 64)) * 3.0  # sq ~ 290
+    phi = features.phi_softmax_pos(spec, params, x, stabilize=True)
+    assert np.isfinite(np.asarray(phi)).all()
+    y = pmodel.project(spec, params, x)
+    z = y - 0.5 * jnp.sum(x * x, -1, keepdims=True)
+    z = z - jnp.max(z, -1, keepdims=True)
+    ref = jnp.exp(z) / jnp.sqrt(jnp.asarray(spec.m, jnp.float32))
+    np.testing.assert_allclose(np.asarray(phi), np.asarray(ref),
+                               rtol=1e-5, atol=1e-7)
