@@ -2,7 +2,9 @@
 
 chi[P] (chromatic number of coherence graphs), mu[P], mu~[P], the
 normalization property and Lemma-5 orthogonality — computed numerically
-from the generic jacobian-recovered P_i matrices.
+from the generic jacobian-recovered P_i matrices, per SpinnerBlock; a
+stacked pipeline gets one report per block (the concentration machinery
+applies blockwise).
 """
 from __future__ import annotations
 
@@ -11,23 +13,31 @@ from typing import List
 import jax
 
 from repro.core import coherence as C
-from repro.core import structured as S
+from repro.core import spinner
 
 KINDS = ["unstructured", "circulant", "skew_circulant", "toeplitz", "hankel",
          "ldr"]
 M, N = 6, 8
 
 
-def run() -> List[str]:
-    rows = []
-    for kind in KINDS:
-        params = S.init(jax.random.PRNGKey(0), kind, M, N, r=2)
-        st = C.pmodel_stats(kind, params, M, N)
-        rows.append(
-            f"coherence/{kind},0.0,chi={st['chi']:.0f};mu={st['mu']:.3f};"
+def _fmt(tag: str, st) -> str:
+    return (f"coherence/{tag},0.0,chi={st['chi']:.0f};mu={st['mu']:.3f};"
             f"mu_tilde={st['mu_tilde']:.4f};t={st['budget_t']:.0f};"
             f"normalized={st['normalized']:.0f};"
             f"orth={st['orthogonal_cols']:.0f}")
+
+
+def run() -> List[str]:
+    rows = []
+    for kind in KINDS:
+        blk = spinner.SpinnerBlock(kind, M, N, r=2, use_hd=False)
+        st = C.block_stats(blk, blk.init(jax.random.PRNGKey(0)))
+        rows.append(_fmt(kind, st))
+    # stacked pipeline: per-block reports (index-aligned with pipe.blocks)
+    pipe = spinner.hd_chain("circulant", n=N, m=M, depth=2)
+    params = pipe.init(jax.random.PRNGKey(1))
+    for i, st in enumerate(C.pipeline_stats(pipe, params)):
+        rows.append(_fmt(f"pipeline_d2/circulant/blk{i}", st))
     return rows
 
 

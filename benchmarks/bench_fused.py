@@ -20,8 +20,7 @@ from typing import Dict, List
 import jax
 import jax.numpy as jnp
 
-from repro.core import pmodel, structured, transforms
-from repro.core.pmodel import PModelSpec
+from repro.core import spinner, structured, transforms
 from repro.kernels import ops as kops
 
 FULL_SHAPE = (256, 1024, 4096)          # B, n, m — acceptance shape
@@ -70,8 +69,8 @@ def _bench_one(kind: str, epilogue: str, b: int, n: int, m: int,
     """Times the phi-style feature map  f(A D1 H D0 x) / sqrt(m)  — the
     actual SRF / feature hot path, including the 1/sqrt(m) feature
     scaling that the pre-fusion pipeline paid as its own pass."""
-    spec = PModelSpec(kind=kind, m=m, n=n)
-    params = pmodel.init(jax.random.PRNGKey(0), spec)
+    pipe = spinner.single(kind, m=m, n=n, f=epilogue)
+    (params,) = pipe.init(jax.random.PRNGKey(0))
     x = jax.random.normal(jax.random.PRNGKey(1), (b, n)) * 0.3
     inv_sqrt_m = float(m) ** -0.5
 
@@ -98,19 +97,19 @@ def _bench_one(kind: str, epilogue: str, b: int, n: int, m: int,
         return epi(y, 0.5 * jnp.sum(xx * xx, -1, keepdims=True)) \
             / jnp.sqrt(jnp.asarray(float(m), y.dtype))
 
-    # --- fused: one spinner_project call, scaling folded into the epilogue.
-    # Pin the route: native Pallas on TPU, fused-jnp ref elsewhere (auto
-    # would pick the *interpreter* for small smoke shapes, which
-    # benchmarks interpretation overhead).
+    # --- fused: one 1-block SpinnerPipeline.apply (identical dispatch to a
+    # direct spinner_project call — pinned by bench_pipeline). Pin the
+    # route: native Pallas on TPU, fused-jnp ref elsewhere (auto would
+    # pick the *interpreter* for small smoke shapes, which benchmarks
+    # interpretation overhead).
     use_pallas = None if jax.default_backend() == "tpu" else False
 
     def fused(p, xx):
-        return kops.spinner_project(kind, p, xx, m, epilogue=epilogue,
-                                    out_scale=inv_sqrt_m,
-                                    use_pallas=use_pallas)
+        return pipe.apply((p,), xx, out_scale=inv_sqrt_m,
+                          use_pallas=use_pallas)
 
     # --- dense oracle: materialized O(mn) matmul + epilogue, one jit --------
-    a_dense = pmodel.materialize(spec, params)
+    a_dense = pipe.materialize((params,))
 
     @jax.jit
     def dense(a, xx):

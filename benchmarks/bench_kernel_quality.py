@@ -9,14 +9,13 @@ constants (their chi/mu enter only the constants).
 """
 from __future__ import annotations
 
-import math
 from typing import List
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import estimators as E
-from repro.core import pmodel as P
+from repro.core import spinner
 
 KINDS = ["unstructured", "circulant", "toeplitz", "ldr"]
 FNAMES = ["heaviside", "relu", "trig", "softmax"]
@@ -38,12 +37,12 @@ def run() -> List[str]:
     for fname in FNAMES:
         for kind in KINDS:
             for m in MS:
-                spec = P.PModelSpec(kind=kind, m=m, n=N, r=2, use_hd=True)
+                pipe = spinner.single(kind, m=m, n=N, r=2)
 
                 def one(k):
-                    params = P.init(k, spec)
+                    params = pipe.init(k)
                     est = jax.vmap(lambda a, b: E.estimate(
-                        spec, params, fname, a, b))(v1, v2)
+                        pipe, params, fname, a, b))(v1, v2)
                     ex = jax.vmap(lambda a, b: E.exact(fname, a, b))(v1, v2)
                     return jnp.abs(est - ex).mean()
                 errs = jax.vmap(one)(

@@ -1,0 +1,147 @@
+"""Spinner-pipeline benchmark: composability must cost nothing.
+
+Three candidates per structured kind (relu feature map, the SRF hot-path
+shape):
+
+* ``pipe1``   — 1-block SpinnerPipeline.apply. MUST be the same single
+                fused spinner_project dispatch as calling the kernel op
+                directly (the acceptance pin of the API redesign).
+* ``direct``  — kernels.ops.spinner_project called directly (the PR-2
+                hot path). ``pipe1/direct`` ~ 1.0 proves the pipeline
+                layer adds no dispatches.
+* ``pipe3``   — 3-block stacked pipeline (HD3.HD2.HD1, TripleSpin
+                shape): chained fused dispatches, n->n->n->m.
+* ``dense``   — the materialized (m, n) product as one O(mn) matmul +
+                epilogue (the oracle the stack replaces).
+
+Emits machine-readable ``BENCH_pipeline.json``; correctness is pinned in
+the same run (pipe1 == direct bitwise; pipe3 vs its dense oracle).
+
+    PYTHONPATH=src python -m benchmarks.bench_pipeline     # full shape
+
+Env: REPRO_BENCH_PIPELINE_JSON overrides the JSON output path.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.bench_fused import _time_interleaved
+from repro.core import spinner
+from repro.kernels import ops as kops
+
+FULL_SHAPE = (256, 1024, 4096)          # B, n, m — acceptance shape
+SMOKE_SHAPE = (64, 256, 512)
+KINDS = ("circulant", "skew_circulant", "toeplitz", "hankel")
+F = "relu"
+
+
+def _bench_kind(kind: str, b: int, n: int, m: int, reps: int,
+                patience: int = 12, max_reps: int = 80) -> Dict:
+    pipe1 = spinner.single(kind, m=m, n=n, f=F)
+    pipe3 = spinner.hd_chain(kind, n=n, m=m, depth=3, f=F)
+    p1 = pipe1.init(jax.random.PRNGKey(0))
+    p3 = pipe3.init(jax.random.PRNGKey(1))
+    x = jax.random.normal(jax.random.PRNGKey(2), (b, n)) * 0.3
+    inv = float(m) ** -0.5
+    # Pin the route (bench_fused rationale: auto would interpret on CPU).
+    use_pallas = None if jax.default_backend() == "tpu" else False
+
+    def fn_pipe1(p, xx):
+        return pipe1.apply(p, xx, out_scale=inv, use_pallas=use_pallas)
+
+    def fn_direct(p, xx):
+        return kops.spinner_project(kind, p[0], xx, m, epilogue=F,
+                                    out_scale=inv, use_pallas=use_pallas)
+
+    def fn_pipe3(p, xx):
+        return pipe3.apply(p, xx, out_scale=inv, use_pallas=use_pallas)
+
+    a3 = pipe3.materialize(p3).astype(jnp.float32)       # (m, n) product
+
+    @jax.jit
+    def fn_dense(a, xx):
+        return jax.nn.relu(xx @ a.T) * inv
+
+    # --- correctness pins (same run as the timings) ------------------------
+    y1 = np.asarray(fn_pipe1(p1, x))
+    yd = np.asarray(fn_direct(p1, x))
+    one_block_identical = bool(np.array_equal(y1, yd))
+    y3 = np.asarray(fn_pipe3(p3, x), np.float32)
+    yo = np.asarray(fn_dense(a3, x), np.float32)
+    stack_err = float(np.max(np.abs(y3 - yo)))
+
+    pipe1_us, direct_us, pipe3_us, dense_us = _time_interleaved(
+        [(fn_pipe1, (p1, x)), (fn_direct, (p1, x)),
+         (fn_pipe3, (p3, x)), (fn_dense, (a3, x))],
+        reps=reps, patience=patience, max_reps=max_reps)
+    return {"kind": kind,
+            "pipe1_us": round(pipe1_us, 1),
+            "direct_us": round(direct_us, 1),
+            "pipe3_us": round(pipe3_us, 1),
+            "dense_us": round(dense_us, 1),
+            "pipe1_overhead": round(pipe1_us / direct_us, 3),
+            "pipe3_speedup_vs_dense": round(dense_us / pipe3_us, 3),
+            "pipe3_storage_floats": pipe3.storage,
+            "dense_storage_floats": m * n,
+            "one_block_identical": one_block_identical,
+            "stack_max_abs_err": stack_err}
+
+
+def bench(shape=FULL_SHAPE, kinds=KINDS, reps: int = 15,
+          smoke: bool = False) -> Dict:
+    b, n, m = shape
+    patience, max_reps = (3, 12) if smoke else (25, 200)
+    results = [_bench_kind(k, b, n, m, reps, patience, max_reps)
+               for k in kinds]
+    payload = {
+        "bench": "spinner_pipeline",
+        "smoke": smoke,
+        "backend": jax.default_backend(),
+        "f": F,
+        "shape": {"batch": b, "n": n, "m": m},
+        "results": results,
+    }
+    default = "BENCH_pipeline_smoke.json" if smoke else "BENCH_pipeline.json"
+    path = os.environ.get("REPRO_BENCH_PIPELINE_JSON", default)
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    return payload
+
+
+def _rows(payload: Dict) -> List[str]:
+    b, n, m = (payload["shape"][k] for k in ("batch", "n", "m"))
+    return [f"pipeline/{r['kind']}/{b}x{n}x{m},"
+            f"{r['pipe1_us']:.1f},"
+            f"direct_us={r['direct_us']:.1f};pipe3_us={r['pipe3_us']:.1f};"
+            f"dense_us={r['dense_us']:.1f};"
+            f"overhead_1blk={r['pipe1_overhead']:.2f};"
+            f"identical_1blk={int(r['one_block_identical'])}"
+            for r in payload["results"]]
+
+
+def run() -> List[str]:
+    """run.py suite entry: smoke shape, two kinds."""
+    payload = bench(shape=SMOKE_SHAPE, kinds=("circulant", "toeplitz"),
+                    reps=3, smoke=True)
+    return _rows(payload)
+
+
+def main():
+    payload = bench()
+    for row in _rows(payload):
+        print(row)
+    ok = all(r["one_block_identical"] for r in payload["results"])
+    worst = max(r["pipe1_overhead"] for r in payload["results"])
+    print(f"pipeline/summary,0,all_1blk_identical={int(ok)};"
+          f"worst_1blk_overhead={worst:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -10,8 +10,9 @@ import os
 import sys
 import time
 
-SUITES = ["coherence", "speed", "fused", "compression", "srf_attention",
-          "kernel_quality", "serving"]   # serving/fused run fast smoke modes
+SUITES = ["coherence", "speed", "fused", "pipeline", "compression",
+          "srf_attention", "kernel_quality",
+          "serving"]   # serving/fused/pipeline run fast smoke modes
 
 
 def main(argv=None):

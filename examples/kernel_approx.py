@@ -8,7 +8,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import estimators as E
-from repro.core import pmodel as P
+from repro.core import spinner
 
 
 def main():
@@ -21,8 +21,8 @@ def main():
     for kind in ["unstructured", "circulant", "toeplitz", "ldr"]:
         for fname in ["heaviside", "trig"]:
             for m in [16, 64, 256, 1024]:
-                spec = P.PModelSpec(kind=kind, m=m, n=n, r=2, use_hd=True)
-                mean, std = E.mc_error(jax.random.PRNGKey(5), spec, fname,
+                pipe = spinner.single(kind, m=m, n=n, r=2)
+                mean, std = E.mc_error(jax.random.PRNGKey(5), pipe, fname,
                                        v1, v2, n_trials=32)
                 print(f"{kind},{fname},{m},{float(mean):.5f},{float(std):.5f}")
 

@@ -1,7 +1,9 @@
-"""Quickstart: the paper's pipeline in 30 lines.
+"""Quickstart: the paper's pipeline in 30 lines — on the Spinner API.
 
-Estimate three kernels with a circulant P-model using n Gaussians instead
-of m*n, then show the budget knob (circulant -> toeplitz -> unstructured).
+Estimate three kernels with a circulant 1-block SpinnerPipeline using n
+Gaussians instead of m*n, show the budget knob (circulant -> toeplitz ->
+unstructured), then stack blocks (TripleSpin-style) — same protocol,
+same estimator, three fused dispatches.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -9,28 +11,37 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import estimators as E
-from repro.core import pmodel as P
-from repro.core import structured as S
+from repro.core import spinner
 
 
 def main():
     n, m = 128, 512
     v1 = jax.random.normal(jax.random.PRNGKey(1), (n,))
     v1 = v1 / jnp.linalg.norm(v1)
-    v2 = 0.6 * v1 + 0.8 * jax.random.normal(jax.random.PRNGKey(2), (n,)) / jnp.sqrt(n) * jnp.sqrt(n)
+    v2 = 0.6 * v1 + 0.8 * jax.random.normal(jax.random.PRNGKey(2), (n,))
     v2 = v2 / jnp.linalg.norm(v2)
 
     print(f"input dim n={n}, embedding dim m={m}")
     for kind in ["circulant", "toeplitz", "unstructured"]:
-        spec = P.PModelSpec(kind=kind, m=m, n=n, use_hd=True)
-        params = P.init(jax.random.PRNGKey(0), spec)
-        print(f"\n[{kind}] budget of randomness t={spec.budget} "
-              f"(dense would use {m*n}); storage={spec.storage} floats")
+        pipe = spinner.single(kind, m=m, n=n)
+        params = pipe.init(jax.random.PRNGKey(0))
+        print(f"\n[{kind}] budget of randomness t={pipe.budget} "
+              f"(dense would use {m*n}); storage={pipe.storage} floats")
         for fname in ["heaviside", "relu", "trig", "softmax"]:
-            est = float(E.estimate(spec, params, fname, v1, v2))
+            est = float(E.estimate(pipe, params, fname, v1, v2))
             ex = float(E.exact(fname, v1, v2))
             print(f"  {fname:10s} estimate={est:+.4f}  exact={ex:+.4f}  "
                   f"|err|={abs(est-ex):.4f}")
+
+    # stacked spinners: HD3.HD2.HD1 (depth 3) — the same estimator runs
+    # through a chain of fused blocks; storage stays O(n) per block.
+    pipe3 = spinner.hd_chain("circulant", n=n, m=m, depth=3)
+    params3 = pipe3.init(jax.random.PRNGKey(0))
+    print(f"\n[circulant x3 stacked] t={pipe3.budget}, "
+          f"storage={pipe3.storage} floats, depth={pipe3.depth}")
+    for fname in ["heaviside", "trig"]:
+        est = float(E.estimate(pipe3, params3, fname, v1, v2))
+        print(f"  {fname:10s} estimate={est:+.4f}")
 
 
 if __name__ == "__main__":

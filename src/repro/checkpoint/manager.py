@@ -14,6 +14,7 @@ from __future__ import annotations
 import hashlib
 import json
 import os
+import re
 import shutil
 import threading
 from concurrent.futures import Future, ThreadPoolExecutor
@@ -24,6 +25,15 @@ import jax.numpy as jnp
 import numpy as np
 
 _BF16 = "bfloat16"
+
+# Key-path aliases applied on restore when a target key is missing:
+# (regex, replacement) rewriting the NEW layout's key into the legacy
+# stored key. Default migration: SRF params moved from one dict
+# ('.../srf/g') to a tuple of per-block dicts ('.../srf/0/g') with the
+# spinner-pipeline API. Callers can pass their own list to restore().
+LEGACY_KEY_ALIASES: List[Tuple[str, str]] = [
+    (r"(^|/)srf/0/", r"\1srf/"),
+]
 
 
 def _flatten(tree) -> Dict[str, Any]:
@@ -115,9 +125,15 @@ class CheckpointManager:
         return steps[-1] if steps else None
 
     def restore(self, target_tree, step: Optional[int] = None,
-                verify: bool = True) -> Tuple[Any, int, Dict]:
+                verify: bool = True,
+                key_aliases: Optional[List[Tuple[str, str]]] = None
+                ) -> Tuple[Any, int, Dict]:
         """Load into the structure of ``target_tree`` (shapes must match
-        unless the elastic resharder is used first)."""
+        unless the elastic resharder is used first).
+
+        ``key_aliases``: (regex, replacement) pairs tried on target keys
+        the checkpoint lacks, mapping them onto legacy stored keys;
+        defaults to ``LEGACY_KEY_ALIASES``."""
         if step is None:
             step = self.latest_step()
         if step is None:
@@ -138,6 +154,14 @@ class CheckpointManager:
             arrays[k] = v
         flat_target = _flatten(target_tree)
         missing = set(flat_target) - set(arrays)
+        aliases = LEGACY_KEY_ALIASES if key_aliases is None else key_aliases
+        for key in sorted(missing):
+            for pat, repl in aliases:
+                legacy = re.sub(pat, repl, key)
+                if legacy != key and legacy in arrays:
+                    arrays[key] = arrays[legacy]
+                    missing.discard(key)
+                    break
         if missing:
             raise KeyError(f"checkpoint missing keys: {sorted(missing)[:5]}...")
         leaves_p, treedef = jax.tree_util.tree_flatten_with_path(target_tree)

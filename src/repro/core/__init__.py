@@ -1,9 +1,18 @@
-"""Core P-model library: the paper's contribution as composable JAX modules."""
-from . import coherence, estimators, features, pmodel, srf_attention, structured, transforms
+"""Core P-model library: the paper's contribution as composable JAX modules.
+
+The embedding API is ``spinner``: ``SpinnerBlock`` / ``SpinnerPipeline``
+(frozen pytree specs with init/apply/materialize/budget protocol) plus the
+kind- and nonlinearity registries. ``pmodel`` is the deprecated 1-block
+shim. See core/README.md for the protocol and the migration table.
+"""
+from . import (coherence, estimators, features, pmodel, spinner,
+               srf_attention, structured, transforms)
 from .pmodel import PModelSpec
+from .spinner import SpinnerBlock, SpinnerPipeline
 from .srf_attention import SRFConfig
 
 __all__ = [
-    "coherence", "estimators", "features", "pmodel", "srf_attention",
-    "structured", "transforms", "PModelSpec", "SRFConfig",
+    "coherence", "estimators", "features", "pmodel", "spinner",
+    "srf_attention", "structured", "transforms",
+    "PModelSpec", "SpinnerBlock", "SpinnerPipeline", "SRFConfig",
 ]

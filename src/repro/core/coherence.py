@@ -21,18 +21,23 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from . import structured
+from . import spinner, structured
 
 
 def p_matrices(kind: str, params: Dict[str, jax.Array], m: int, n: int) -> np.ndarray:
-    """(m, t, n) stack of the P_i matrices (rows a^i = g . P_i)."""
+    """(m, t, n) stack of the P_i matrices (rows a^i = g . P_i).
+
+    Resolved through the spinner kind registry, so custom registered
+    kinds get coherence diagnostics for free.
+    """
     g = params["g"]
     gflat = g.reshape(-1)
     rest = {k: v for k, v in params.items() if k != "g"}
+    materialize = spinner.kind_def(kind).materialize
 
     def mat(gf):
         p = dict(rest, g=gf.reshape(g.shape))
-        return structured.materialize(kind, p, m, n)
+        return materialize(p, m, n)
 
     jac = jax.jacfwd(mat)(gflat)           # (m, n, t)
     return np.asarray(jnp.transpose(jac, (0, 2, 1)))
@@ -147,6 +152,25 @@ def pmodel_stats(kind: str, params: Dict[str, jax.Array], m: int, n: int,
         "orthogonal_cols": float(orthogonality_condition(pm)),
         "budget_t": float(pm.shape[1]),
     }
+
+
+def block_stats(block: spinner.SpinnerBlock, params: Dict[str, jax.Array],
+                tol: float = 1e-6) -> Dict[str, float]:
+    """chi/mu/mu~ report for one SpinnerBlock (HD excluded: the quality
+    parameters are properties of the structured A alone, Defs. 2-4)."""
+    return pmodel_stats(block.kind, params, block.m, block.n, tol)
+
+
+def pipeline_stats(pipe: spinner.SpinnerPipeline, params,
+                   tol: float = 1e-6) -> List[Dict[str, float]]:
+    """PER-BLOCK quality reports for a multi-block pipeline.
+
+    The concentration machinery (Thm 10) applies blockwise — each block
+    is an independent P-model; the report list is index-aligned with
+    ``pipe.blocks``.
+    """
+    params = pipe.block_params(params)      # validates the per-block count
+    return [block_stats(b, p, tol) for b, p in zip(pipe.blocks, params)]
 
 
 ANALYTIC = {

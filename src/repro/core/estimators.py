@@ -22,8 +22,8 @@ from typing import Callable, Dict
 import jax
 import jax.numpy as jnp
 
-from . import features, pmodel
-from .pmodel import PModelSpec
+from . import features, spinner
+from .spinner import SpinnerPipeline
 
 
 def angle(v1: jax.Array, v2: jax.Array) -> jax.Array:
@@ -82,18 +82,23 @@ EXACT: Dict[str, Callable] = {
 
 # --- structured estimators ------------------------------------------------------
 
-def estimate(spec: PModelSpec, params, fname: str, v1: jax.Array, v2: jax.Array,
-             sigma: float = 1.0) -> jax.Array:
-    """Lambda_f^struct(v1, v2) = <phi(v1), phi(v2)>  (eq. 13)."""
+def estimate(pipe: SpinnerPipeline, params, fname: str, v1: jax.Array,
+             v2: jax.Array, sigma: float = 1.0) -> jax.Array:
+    """Lambda_f^struct(v1, v2) = <phi(v1), phi(v2)>  (eq. 13).
+
+    ``pipe``: a SpinnerPipeline of any depth (legacy PModelSpec still
+    accepted, deprecated — see spinner.as_pipeline).
+    """
+    pipe = spinner.as_pipeline(pipe)
     if fname == "trig":
-        p1 = features.phi_trig(spec, params, v1, sigma)
-        p2 = features.phi_trig(spec, params, v2, sigma)
+        p1 = features.phi_trig(pipe, params, v1, sigma)
+        p2 = features.phi_trig(pipe, params, v2, sigma)
     elif fname == "softmax":
-        p1 = features.phi_softmax_pos(spec, params, v1, stabilize=False)
-        p2 = features.phi_softmax_pos(spec, params, v2, stabilize=False)
+        p1 = features.phi_softmax_pos(pipe, params, v1, stabilize=False)
+        p2 = features.phi_softmax_pos(pipe, params, v2, stabilize=False)
     else:
-        p1 = features.phi_scalar(spec, params, v1, fname)
-        p2 = features.phi_scalar(spec, params, v2, fname)
+        p1 = features.phi_scalar(pipe, params, v1, fname)
+        p2 = features.phi_scalar(pipe, params, v2, fname)
     return jnp.sum(p1 * p2, -1)
 
 
@@ -103,12 +108,14 @@ def exact(fname: str, v1, v2, sigma: float = 1.0):
     return EXACT[fname](v1, v2)
 
 
-def mc_error(rng: jax.Array, spec: PModelSpec, fname: str, v1, v2,
+def mc_error(rng: jax.Array, pipe: SpinnerPipeline, fname: str, v1, v2,
              n_trials: int = 32, sigma: float = 1.0):
-    """Mean absolute estimation error over fresh P-model draws (benchmark)."""
+    """Mean absolute estimation error over fresh pipeline draws (benchmark)."""
+    pipe = spinner.as_pipeline(pipe)
+
     def one(k):
-        params = pmodel.init(k, spec)
-        return jnp.abs(estimate(spec, params, fname, v1, v2, sigma)
+        params = pipe.init(k)
+        return jnp.abs(estimate(pipe, params, fname, v1, v2, sigma)
                        - exact(fname, v1, v2, sigma))
     errs = jax.vmap(one)(jax.random.split(rng, n_trials))
     return errs.mean(), errs.std()

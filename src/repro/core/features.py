@@ -2,50 +2,44 @@
 
 The estimator (eq. 13, k=2, beta=product, Psi=mean) is
     Lambda_f(v1, v2)  ~=  < phi(v1), phi(v2) >
-with  phi(v) = f(A D1 H D0 v) / sqrt(m)   (f applied pointwise).
+with  phi(v) = f(A_k ... A_1 v) / sqrt(m)   (f applied pointwise).
 
-Each feature map returns features scaled so the dot product is the
-unbiased estimator of the corresponding closed-form kernel
-(core/estimators.py has the closed forms).
+Every phi takes a ``spinner.SpinnerPipeline`` (any block depth) plus its
+params tuple; the projection chain + f + scaling execute as one fused
+dispatch per block (the nonlinearity fuses into the LAST block's kernel,
+see core/spinner.py). ``grouped=True`` runs G independent pipelines
+(leading axis on x and on every param leaf) — the per-kv-head layout of
+SRF attention.
 
-Every phi here routes through the FUSED spinner (pmodel.project_fused ->
-kernels.ops.spinner_project): projection + f + scaling execute as one
-dispatch (one Pallas pass on TPU), not as separate projection / pointwise
-stages. ``grouped=True`` runs G independent P-models (leading axis on x
-and on every param leaf) in a single fused call — the per-kv-head layout
-of SRF attention.
+Back-compat: passing a legacy ``PModelSpec`` (+ a bare params dict)
+still works and emits a ``DeprecationWarning`` — it is converted to the
+equivalent 1-block pipeline, so outputs are identical for fixed seeds.
 """
 from __future__ import annotations
 
-from typing import Callable, Dict
+from typing import Callable, Dict, Union
 
 import jax
 import jax.numpy as jnp
 
-from . import pmodel
-from .pmodel import PModelSpec
+from . import spinner
+from .spinner import SpinnerPipeline
 
 
-# --- pointwise f's of the paper ------------------------------------------------
+# --- pointwise f's of the paper — kept importable for back-compat, but
+# --- DERIVED from the registry in core/spinner.py (the single source of
+# --- truth and the extension point): identity (JL), heaviside (angular /
+# --- arc-cosine b=0), sign (E[s1 s2] = 1 - 2 theta/pi), relu (arc-cos b=1)
 
-def f_identity(y: jax.Array) -> jax.Array:
-    return y
-
-
-def f_heaviside(y: jax.Array) -> jax.Array:
-    """f(x) = 1{x >= 0}  (angular kernel / arc-cosine b=0; also the hashing map)."""
-    return (y >= 0).astype(y.dtype)
-
-
-def f_sign(y: jax.Array) -> jax.Array:
-    """+/-1 variant of the angular map: E[s1 s2] = 1 - 2 theta / pi."""
-    return jnp.sign(y)
+def _scalar_f(name: str) -> Callable:
+    fn = spinner.nonlinearity(name).fn
+    return lambda y: fn(y, None)
 
 
-def f_relu(y: jax.Array) -> jax.Array:
-    """arc-cosine b=1 (linear rectifier)."""
-    return jax.nn.relu(y)
-
+f_identity = _scalar_f("identity")
+f_heaviside = _scalar_f("heaviside")
+f_sign = _scalar_f("sign")
+f_relu = _scalar_f("relu")
 
 F_TABLE: Dict[str, Callable] = {
     "identity": f_identity,
@@ -55,49 +49,59 @@ F_TABLE: Dict[str, Callable] = {
 }
 
 
-def _inv_sqrt_m(spec: PModelSpec) -> float:
-    return float(spec.m) ** -0.5
+_as_pipeline = spinner.as_pipeline     # legacy-spec conversion (deprecated)
+
+
+def _inv_sqrt_m(pipe: SpinnerPipeline) -> float:
+    return float(pipe.m_out) ** -0.5
 
 
 # --- feature maps phi (projection + f + scaling) -------------------------------
 
-def phi_scalar(spec: PModelSpec, params, x: jax.Array, f: str | Callable,
+def phi_scalar(pipe, params, x: jax.Array, f: Union[str, Callable],
                grouped: bool = False) -> jax.Array:
     """phi(x) = f(proj(x)) / sqrt(m); scalar f fused as the kernel epilogue
     (callables fall back to a separate pointwise stage)."""
+    pipe = _as_pipeline(pipe)
     if isinstance(f, str):
-        if f not in F_TABLE:      # 'exp'/'cos_sin' have different semantics
-            raise KeyError(f"phi_scalar f must be one of {list(F_TABLE)}, "
-                           f"got {f!r}")
-        return pmodel.project_fused(spec, params, x, epilogue=f,
-                                    out_scale=_inv_sqrt_m(spec),
+        try:                                  # registry = extension point
+            nl = spinner.nonlinearity(f)
+        except ValueError as e:               # keep the KeyError contract
+            raise KeyError(str(e)) from None
+        if nl.out_mult != 1 or nl.needs_input:
+            raise KeyError(               # exp/cos_sin: different semantics
+                f"phi_scalar needs a scalar pointwise f, got {f!r} "
+                "(use phi_softmax_pos / phi_trig for exp / cos_sin)")
+        return pipe.with_f(f).apply(params, x, out_scale=_inv_sqrt_m(pipe),
                                     grouped=grouped)
-    y = pmodel.project_fused(spec, params, x, grouped=grouped)
-    return f(y) / jnp.sqrt(jnp.asarray(spec.m, y.dtype))
+    y = pipe.with_f("identity").apply(params, x, grouped=grouped)
+    return f(y) / jnp.sqrt(jnp.asarray(pipe.m_out, y.dtype))
 
 
-def phi_trig(spec: PModelSpec, params, x: jax.Array, sigma: float = 1.0,
+def phi_trig(pipe, params, x: jax.Array, sigma: float = 1.0,
              grouped: bool = False) -> jax.Array:
     """Gaussian-kernel features: phi = [cos(y/s), sin(y/s)] / sqrt(m).
 
     <phi(v1), phi(v2)> -> E[cos((y1-y2)/s)] = exp(-||v1-v2||^2 / (2 s^2)).
     Output dim = 2m; for concrete (Python-number) sigma the 1/sigma
-    projection scale and the trig epilogue are fused into the single
-    spinner pass. A traced/learnable sigma (a jax value, e.g. a bandwidth
-    parameter under grad) keeps the fused projection but applies the
-    scale + trig outside — fused epilogue scales are trace-time statics.
+    projection scale and the trig epilogue are fused into the last
+    block's spinner pass. A traced/learnable sigma (a jax value, e.g. a
+    bandwidth parameter under grad) keeps the fused projection but
+    applies the scale + trig outside — fused epilogue scales are
+    trace-time statics.
     """
+    pipe = _as_pipeline(pipe)
     if isinstance(sigma, (int, float)):
-        return pmodel.project_fused(spec, params, x, epilogue="cos_sin",
-                                    y_scale=1.0 / float(sigma),
-                                    out_scale=_inv_sqrt_m(spec),
-                                    grouped=grouped)
-    y = pmodel.project_fused(spec, params, x, grouped=grouped) / sigma
-    s = jnp.sqrt(jnp.asarray(spec.m, y.dtype))
+        return pipe.with_f("cos_sin").apply(params, x,
+                                            y_scale=1.0 / float(sigma),
+                                            out_scale=_inv_sqrt_m(pipe),
+                                            grouped=grouped)
+    y = pipe.with_f("identity").apply(params, x, grouped=grouped) / sigma
+    s = jnp.sqrt(jnp.asarray(pipe.m_out, y.dtype))
     return jnp.concatenate([jnp.cos(y), jnp.sin(y)], axis=-1) / s
 
 
-def phi_softmax_pos(spec: PModelSpec, params, x: jax.Array,
+def phi_softmax_pos(pipe, params, x: jax.Array,
                     scale: float = 1.0, stabilize: bool = True,
                     grouped: bool = False) -> jax.Array:
     """Positive softmax-kernel features (FAVOR+ form; f = exp).
@@ -107,32 +111,35 @@ def phi_softmax_pos(spec: PModelSpec, params, x: jax.Array,
     the global constant e^{-2c} which cancels in attention normalization.
 
     With ``stabilize=False`` (keys) the whole exp(y - ||x||^2/2) runs
-    inside the fused spinner (the kernel computes the subtrahend from its
-    input tile via the HD isometry) — the same over/underflow exposure as
-    the unshifted closed form. With ``stabilize=True`` (queries) the
-    projection is still one fused pass but the epilogue stays outside in
-    the overflow-safe exp(z - sg(max z)) form: a post-hoc divide by the
-    row max would turn an under/overflowed kernel exp into NaN/inf for
+    fused (for 1-block pipelines the kernel computes the subtrahend from
+    its input tile via the HD isometry; deeper pipelines apply it after
+    the last dispatch) — the same over/underflow exposure as the
+    unshifted closed form. With ``stabilize=True`` (queries) the
+    projection is still fused but the epilogue stays outside in the
+    overflow-safe exp(z - sg(max z)) form: a post-hoc divide by the row
+    max would turn an under/overflowed kernel exp into NaN/inf for
     large-norm inputs — exactly what the shift exists to prevent.
     """
+    pipe = _as_pipeline(pipe)
     x = x * scale
     if not stabilize:
-        return pmodel.project_fused(spec, params, x, epilogue="exp",
-                                    out_scale=_inv_sqrt_m(spec),
-                                    grouped=grouped)
-    y = pmodel.project_fused(spec, params, x, grouped=grouped)
+        return pipe.with_f("exp").apply(params, x,
+                                        out_scale=_inv_sqrt_m(pipe),
+                                        grouped=grouped)
+    y = pipe.with_f("identity").apply(params, x, grouped=grouped)
     sq = 0.5 * jnp.sum(x * x, axis=-1, keepdims=True)
     z = y - sq
     z = z - jax.lax.stop_gradient(jnp.max(z, axis=-1, keepdims=True))
-    return jnp.exp(z) / jnp.sqrt(jnp.asarray(spec.m, y.dtype))
+    return jnp.exp(z) / jnp.sqrt(jnp.asarray(pipe.m_out, y.dtype))
 
 
-def phi_softmax_trig(spec: PModelSpec, params, x: jax.Array,
+def phi_softmax_trig(pipe, params, x: jax.Array,
                      scale: float = 1.0, grouped: bool = False) -> jax.Array:
     """Trigonometric softmax features (paper's sin/cos comment, Sec 2.1 ex.3):
     exp(<q,k>) = e^{(|q|^2+|k|^2)/2} E[cos(y_q - y_k)]. Unbiased but signed."""
+    pipe = _as_pipeline(pipe)
     x = x * scale
-    z = pmodel.project_fused(spec, params, x, epilogue="cos_sin",
-                             out_scale=_inv_sqrt_m(spec), grouped=grouped)
+    z = pipe.with_f("cos_sin").apply(params, x, out_scale=_inv_sqrt_m(pipe),
+                                     grouped=grouped)
     sq = 0.5 * jnp.sum(x * x, axis=-1, keepdims=True)
     return z * jnp.exp(sq)

@@ -1,28 +1,44 @@
-"""The P-model: budget of randomness + structured projection + HD preconditioning.
+"""DEPRECATED back-compat shim: the single-block P-model API.
 
-This is the paper's core object (Sec 2.2-2.3). A ``PModel`` bundles:
-  * a structured matrix kind and its generator params (``structured.py``)
-  * the Step-1 randomized Hadamard preconditioner  D1 H D0
-  * the projection  x  ->  A . D1 H D0 . x        (the y_{i,j} of eq. 1)
+The paper's core object lives in ``core/spinner.py`` now: a ``PModel``
+is exactly a 1-block ``SpinnerPipeline`` (one structured block
+``A . D1 H D0`` + a fused nonlinearity). Everything here is a thin
+delegating wrapper kept so pre-pipeline call sites keep working:
 
-All state lives in a flat params dict (a pytree), so PModels embed directly
-into model parameter trees and shard like any other weight — except they
-are O(n) floats instead of O(mn), which is the paper's space claim.
+    old                                   new
+    ------------------------------------  -----------------------------------
+    PModelSpec(kind, m, n, ...)           spinner.single(kind, m, n, ...)
+    pmodel.init(rng, spec)                pipe.init(rng)      (params tuple)
+    pmodel.project(spec, params, x)       pipe.apply(params, x)
+    pmodel.project_fused(..., epilogue=f) pipe.with_f(f).apply(params, x, ...)
+    pmodel.materialize(spec, params)      pipe.materialize(params)
+    pmodel.row_gaussianity_moments(...)   pipe.row_gaussianity_moments(...)
+
+``init/project/project_fused`` emit ``DeprecationWarning``; outputs are
+bit-identical to the pipeline API for fixed seeds (pipeline init of a
+1-block pipeline consumes the rng exactly as the legacy init did).
 """
 from __future__ import annotations
 
-import math
-from dataclasses import dataclass, field, replace
+import warnings
+from dataclasses import dataclass
 from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
 
-from . import structured, transforms
+from . import spinner, structured, transforms
+
+
+def _warn(old: str, new: str) -> None:
+    warnings.warn(f"repro.core.pmodel.{old} is deprecated; use {new} "
+                  "(see core/README.md migration table)",
+                  DeprecationWarning, stacklevel=3)
 
 
 @dataclass(frozen=True)
 class PModelSpec:
+    """Legacy 1-block spec. Prefer ``spinner.single`` / ``SpinnerBlock``."""
     kind: str = "circulant"       # one of structured.KINDS
     m: int = 128                  # output (embedding) dimension
     n: int = 128                  # input dimension (pow2 if use_hd)
@@ -37,36 +53,38 @@ class PModelSpec:
             raise ValueError(f"use_hd requires power-of-two n, got {self.n}")
 
     @property
+    def block(self) -> spinner.SpinnerBlock:
+        return spinner.SpinnerBlock(self.kind, self.m, self.n, self.r,
+                                    self.use_hd, self.ldr_nnz)
+
+    @property
+    def pipeline(self) -> spinner.SpinnerPipeline:
+        """The equivalent 1-block SpinnerPipeline (identity f)."""
+        return spinner.SpinnerPipeline((self.block,))
+
+    @property
     def budget(self) -> int:
         """t — the number of Gaussians recycled into the m x n projection."""
-        return structured.budget(self.kind, self.m, self.n, self.r)
+        return self.block.budget
 
     @property
     def storage(self) -> int:
-        base = structured.storage_floats(self.kind, self.m, self.n, self.r)
-        return base + (2 * self.n if self.use_hd else 0)
+        return self.block.storage
 
 
-def init(rng: jax.Array, spec: PModelSpec, dtype=jnp.float32) -> Dict[str, jax.Array]:
-    kg, k0, k1 = jax.random.split(rng, 3)
-    params = structured.init(kg, spec.kind, spec.m, spec.n, spec.r,
-                             spec.ldr_nnz, dtype)
-    if spec.use_hd:
-        params["d0"] = transforms.sample_signs(k0, spec.n, dtype)
-        params["d1"] = transforms.sample_signs(k1, spec.n, dtype)
-    return params
+def init(rng: jax.Array, spec: PModelSpec, dtype=jnp.float32
+         ) -> Dict[str, jax.Array]:
+    _warn("init", "SpinnerPipeline.init")
+    return spec.pipeline.init(rng, dtype)[0]
 
 
 def project(spec: PModelSpec, params: Dict[str, jax.Array], x: jax.Array,
             use_kron: bool = False, use_pallas: Optional[bool] = None
             ) -> jax.Array:
-    """(..., n) -> (..., m):  A . D1 H D0 . x.
-
-    Routed through the fused spinner (kernels.ops.spinner_project): one
-    Pallas pass on TPU, one fused jnp dispatch elsewhere. ``use_kron`` is
-    kept for back-compat; the fused path always uses the Kronecker FWHT.
-    """
-    return project_fused(spec, params, x, use_pallas=use_pallas)
+    """(..., n) -> (..., m):  A . D1 H D0 . x  (``use_kron`` is vestigial;
+    the fused path always uses the Kronecker FWHT)."""
+    _warn("project", "SpinnerPipeline.apply")
+    return spec.pipeline.apply((params,), x, use_pallas=use_pallas)
 
 
 def project_fused(spec: PModelSpec, params: Dict[str, jax.Array],
@@ -74,32 +92,19 @@ def project_fused(spec: PModelSpec, params: Dict[str, jax.Array],
                   y_scale: float = 1.0, out_scale: float = 1.0,
                   grouped: bool = False,
                   use_pallas: Optional[bool] = None) -> jax.Array:
-    """One-pass  f(y_scale * A D1 H D0 x) * out_scale  (feature-map hot path).
-
-    ``grouped=True``: x is (G, ..., n) and every param leaf carries a
-    leading group axis G (per-head P-models); the whole group runs as a
-    single fused dispatch. Output (..., m) — (..., 2m) for cos_sin.
-    """
-    if x.shape[-1] != spec.n:
-        raise ValueError(f"expected last dim {spec.n}, got {x.shape}")
-    from repro.kernels import ops as kops   # deferred: kernels import core
-    return kops.spinner_project(spec.kind, params, x, spec.m,
-                                epilogue=epilogue, y_scale=y_scale,
-                                out_scale=out_scale, grouped=grouped,
-                                use_pallas=use_pallas)
+    """One-pass  f(y_scale * A D1 H D0 x) * out_scale."""
+    _warn("project_fused", "SpinnerPipeline.with_f(f).apply")
+    return spec.pipeline.with_f(epilogue).apply(
+        (params,), x, y_scale=y_scale, out_scale=out_scale,
+        grouped=grouped, use_pallas=use_pallas)
 
 
 def materialize(spec: PModelSpec, params: Dict[str, jax.Array]) -> jax.Array:
     """Dense (m, n) matrix of the *whole* pipeline A . D1 H D0 (oracle)."""
-    a = structured.materialize(spec.kind, params, spec.m, spec.n)
-    if spec.use_hd:
-        h = transforms.hadamard(spec.n, a.dtype)
-        a = (a * params["d1"][None, :]) @ h * params["d0"][None, :]
-    return a
+    return spec.pipeline.materialize((params,))
 
 
 def row_gaussianity_moments(spec: PModelSpec, params: Dict[str, jax.Array]):
     """Diagnostic: per-row mean/var of A (each row must be ~N(0, I) by the
     normalization property, Def. 1)."""
-    a = structured.materialize(spec.kind, params, spec.m, spec.n)
-    return a.mean(axis=1), a.var(axis=1)
+    return spec.block.row_gaussianity_moments(params)

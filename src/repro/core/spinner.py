@@ -1,0 +1,564 @@
+"""Composable Spinner embedding API: multi-block pipelines as pytrees.
+
+The paper's P-model ``(A, f)`` is one *structured spinner block*
+``A . D1 H D0`` followed by a pointwise nonlinearity ``f``. This module
+makes that composition first-class:
+
+* ``SpinnerBlock``    — one structured matrix kind + optional HD
+                        preconditioning + fixed output scaling, an
+                        (n -> m) linear map generated from O(n) Gaussians.
+* ``SpinnerPipeline`` — an ordered chain of blocks plus ONE fused
+                        nonlinearity:  f(A_k ... A_2 A_1 x). Expresses the
+                        stacked constructions (TripleSpin ``M3 M2 M1``,
+                        Gaussian-circulant over HD, LDR chains) the
+                        framework generalizes to.
+
+Both are frozen dataclasses registered as zero-leaf pytree nodes: they
+pass transparently through ``jax.jit`` / ``vmap`` / tree maps (all fields
+are static aux data), are hashable (valid static args), and embed inside
+parameter trees. Parameters live in a tuple of per-block dicts — a plain
+pytree that checkpoints and shards like any other weight.
+
+Uniform protocol (every block and every pipeline):
+
+    init(rng, dtype) -> params        sample the budget of randomness
+    apply(params, x, ...)             the fast (fused) forward map
+    materialize(params)               dense oracle of the whole linear map
+    budget / storage / flops          the paper's complexity accounting
+
+Registries replace ad-hoc string dispatch:
+
+* ``register_kind`` / ``kind_def``: structured matrix classes. The six
+  built-ins delegate to ``structured.py`` and carry ``fused=True`` — their
+  blocks lower to the fused Pallas spinner (``kernels.ops.spinner_project``,
+  ONE dispatch per block). Custom kinds run on a generic jnp path
+  (HD -> registry matvec -> epilogue, one jit-fusable graph).
+* ``register_nonlinearity`` / ``nonlinearity``: pointwise f's. Built-ins
+  map onto the kernel's fused epilogues; custom ones apply after the last
+  block's dispatch.
+
+A 1-block pipeline is byte-identical to the PR-2 hot path: a single
+``spinner_project`` call. Multi-block pipelines chain one fused dispatch
+per block (intermediates stay activations; nothing is re-materialized).
+"""
+from __future__ import annotations
+
+import json
+import math
+import warnings
+from dataclasses import asdict, dataclass, replace
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import structured, transforms
+
+
+# ---------------------------------------------------------------------------
+# kind registry — structured matrix classes
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class KindDef:
+    """One structured matrix class: samplers, fast/oracle paths, accounting.
+
+    ``init(rng, m, n, r, ldr_nnz, dtype) -> params dict``
+    ``matvec(params, x, m) -> y``            fast path, last-axis (..., n)
+    ``materialize(params, m, n) -> (m, n)``  dense oracle
+    ``budget/storage/flops (m, n, r) -> number``
+    ``fused``: the kind string is understood by kernels.ops.spinner_project
+    (implicit-tile Pallas on TPU, fused jnp ref elsewhere). Custom kinds
+    leave it False and take the generic registry path.
+    """
+    name: str
+    init: Callable[..., Dict[str, jax.Array]]
+    matvec: Callable[..., jax.Array]
+    materialize: Callable[..., jax.Array]
+    budget: Callable[[int, int, int], int]
+    storage: Callable[[int, int, int], int]
+    flops: Callable[[int, int, int], float]
+    fused: bool = False
+
+
+_KINDS: Dict[str, KindDef] = {}
+
+
+def register_kind(kd: KindDef, overwrite: bool = False) -> KindDef:
+    if kd.name in _KINDS and not overwrite:
+        raise ValueError(f"kind {kd.name!r} already registered "
+                         "(pass overwrite=True to replace)")
+    _KINDS[kd.name] = kd
+    return kd
+
+
+def kind_def(name: str) -> KindDef:
+    try:
+        return _KINDS[name]
+    except KeyError:
+        raise ValueError(f"unknown spinner kind {name!r}; registered: "
+                         f"{sorted(_KINDS)}") from None
+
+
+def registered_kinds() -> Tuple[str, ...]:
+    return tuple(_KINDS)
+
+
+def _register_builtin(kind: str) -> None:
+    register_kind(KindDef(
+        name=kind,
+        init=lambda rng, m, n, r=1, ldr_nnz=4, dtype=jnp.float32, _k=kind:
+            structured.init(rng, _k, m, n, r, ldr_nnz, dtype),
+        matvec=lambda params, x, m, _k=kind: structured.matvec(_k, params, x, m),
+        materialize=lambda params, m, n, _k=kind:
+            structured.materialize(_k, params, m, n),
+        budget=lambda m, n, r, _k=kind: structured.budget(_k, m, n, r),
+        storage=lambda m, n, r, _k=kind: structured.storage_floats(_k, m, n, r),
+        flops=lambda m, n, r, _k=kind: structured.flops_fast(_k, m, n, r),
+        fused=True))
+
+
+for _k in structured.KINDS:
+    _register_builtin(_k)
+
+
+# ---------------------------------------------------------------------------
+# nonlinearity registry — the pointwise f of the pipeline
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class Nonlinearity:
+    """Pointwise f applied to the final projection.
+
+    ``fn(y, sq) -> out``: ``sq`` is 0.5||x_in||^2 per row (keepdims) when
+    ``needs_input`` else None. ``out_mult``: output dim multiplier (2 for
+    cos_sin). ``epilogue``: fused kernel epilogue name, or None — then f
+    runs as a separate (XLA-fused) stage after the last block's dispatch.
+    ``needs_input=True`` (exp): f consumes the norm of the PIPELINE input;
+    it can only fuse in-kernel for 1-block pipelines, where the kernel's
+    input tile IS the pipeline input (HD isometry argument).
+    """
+    name: str
+    fn: Callable[[jax.Array, Optional[jax.Array]], jax.Array]
+    out_mult: int = 1
+    epilogue: Optional[str] = None
+    needs_input: bool = False
+
+
+_NONLINEARITIES: Dict[str, Nonlinearity] = {}
+
+
+def register_nonlinearity(nl: Nonlinearity, overwrite: bool = False
+                          ) -> Nonlinearity:
+    if nl.name in _NONLINEARITIES and not overwrite:
+        raise ValueError(f"nonlinearity {nl.name!r} already registered "
+                         "(pass overwrite=True to replace)")
+    _NONLINEARITIES[nl.name] = nl
+    return nl
+
+
+def nonlinearity(name: str) -> Nonlinearity:
+    try:
+        return _NONLINEARITIES[name]
+    except KeyError:
+        raise ValueError(f"unknown nonlinearity {name!r}; registered: "
+                         f"{sorted(_NONLINEARITIES)}") from None
+
+
+def registered_nonlinearities() -> Tuple[str, ...]:
+    return tuple(_NONLINEARITIES)
+
+
+def _f_exp(y: jax.Array, sq: jax.Array) -> jax.Array:
+    return jnp.exp(y.astype(jnp.float32) - sq).astype(y.dtype)
+
+
+register_nonlinearity(Nonlinearity(
+    "identity", lambda y, sq: y, epilogue="identity"))
+register_nonlinearity(Nonlinearity(
+    "relu", lambda y, sq: jax.nn.relu(y), epilogue="relu"))
+register_nonlinearity(Nonlinearity(
+    "heaviside", lambda y, sq: (y >= 0).astype(y.dtype), epilogue="heaviside"))
+register_nonlinearity(Nonlinearity(
+    "sign", lambda y, sq: jnp.sign(y), epilogue="sign"))
+register_nonlinearity(Nonlinearity(
+    "exp", _f_exp, epilogue="exp", needs_input=True))
+register_nonlinearity(Nonlinearity(
+    "cos_sin", lambda y, sq: jnp.concatenate([jnp.cos(y), jnp.sin(y)], -1),
+    out_mult=2, epilogue="cos_sin"))
+
+
+# ---------------------------------------------------------------------------
+# SpinnerBlock — one  A . D1 H D0  unit
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class SpinnerBlock:
+    """One structured spinner unit: (n -> m) via  scale . A . [D1 H D0].
+
+    All fields are static (the block is a spec, not a container of
+    arrays); parameters are sampled by ``init`` and passed to ``apply``.
+    ``scale`` is a fixed output scaling folded into the block's fused
+    dispatch (and into ``materialize``): intermediate blocks of a stack
+    use ``scale = 1/sqrt(n)`` to stay variance-preserving — a raw
+    row-Gaussian block multiplies input norms by ~sqrt(n), which would
+    de-calibrate every kernel estimator downstream of a deep stack.
+    """
+    kind: str = "circulant"
+    m: int = 128
+    n: int = 128
+    r: int = 1                    # displacement rank (ldr only)
+    use_hd: bool = True           # paper Step-1 preconditioner
+    ldr_nnz: int = 4
+    scale: float = 1.0            # fixed output scaling (fused)
+
+    def __post_init__(self):
+        kind_def(self.kind)       # raises on unknown kinds
+        if self.m <= 0 or self.n <= 0:
+            raise ValueError(f"block dims must be positive, got "
+                             f"m={self.m}, n={self.n}")
+        if self.use_hd and not transforms.is_pow2(self.n):
+            raise ValueError(f"use_hd requires power-of-two n, got {self.n}")
+
+    # --- accounting ---------------------------------------------------------
+
+    @property
+    def budget(self) -> int:
+        """t — Gaussians recycled into this block's m x n projection."""
+        return int(kind_def(self.kind).budget(self.m, self.n, self.r))
+
+    @property
+    def storage(self) -> int:
+        base = int(kind_def(self.kind).storage(self.m, self.n, self.r))
+        return base + (2 * self.n if self.use_hd else 0)
+
+    @property
+    def flops(self) -> float:
+        """~FLOPs of the fast path per input vector (HD is lower-order)."""
+        f = float(kind_def(self.kind).flops(self.m, self.n, self.r))
+        if self.use_hd:
+            f += 2.0 * self.n * math.log2(max(self.n, 2))
+        return f
+
+    # --- protocol -----------------------------------------------------------
+
+    def init(self, rng: jax.Array, dtype=jnp.float32) -> Dict[str, jax.Array]:
+        kg, k0, k1 = jax.random.split(rng, 3)
+        params = kind_def(self.kind).init(kg, self.m, self.n, self.r,
+                                          self.ldr_nnz, dtype)
+        if self.use_hd:
+            params["d0"] = transforms.sample_signs(k0, self.n, dtype)
+            params["d1"] = transforms.sample_signs(k1, self.n, dtype)
+        return params
+
+    def apply(self, params: Dict[str, jax.Array], x: jax.Array, *,
+              epilogue: str = "identity", y_scale: float = 1.0,
+              out_scale: float = 1.0, grouped: bool = False,
+              use_pallas: Optional[bool] = None) -> jax.Array:
+        """(..., n) -> (..., m):  epi(y_scale . A D1 H D0 x) . out_scale.
+
+        ``epilogue`` is a KERNEL epilogue name (the pipeline picks it from
+        its nonlinearity). Fused kinds run as one spinner_project dispatch;
+        custom kinds take the generic registry path below.
+        """
+        if x.shape[-1] != self.n:
+            raise ValueError(f"expected last dim {self.n}, got {x.shape}")
+        y_scale = float(self.scale) * y_scale     # block scaling, fused
+        if kind_def(self.kind).fused:
+            from repro.kernels import ops as kops   # deferred: kernels import core
+            return kops.spinner_project(self.kind, params, x, self.m,
+                                        epilogue=epilogue, y_scale=y_scale,
+                                        out_scale=out_scale, grouped=grouped,
+                                        use_pallas=use_pallas)
+        return self._apply_generic(params, x, epilogue, y_scale, out_scale,
+                                   grouped)
+
+    def _apply_generic(self, params, x, epilogue, y_scale, out_scale,
+                       grouped) -> jax.Array:
+        """Registry path for custom kinds: HD -> matvec -> epilogue as one
+        jnp graph (XLA-fused under the caller's jit)."""
+        from repro.kernels import ref as kref       # epilogue semantics
+        kd = kind_def(self.kind)
+
+        def one(p, xx):
+            v = xx
+            if "d0" in p:
+                v = transforms.hd_preprocess(xx, p["d0"], p["d1"],
+                                             use_kron=True)
+            y = kd.matvec(p, v, self.m)
+            if y_scale != 1.0:
+                y = y * jnp.asarray(y_scale, y.dtype)
+            return kref._spinner_epilogue(y, xx, epilogue, out_scale)
+
+        if grouped:
+            return jax.vmap(one)(params, x)
+        return one(params, x)
+
+    def materialize(self, params: Dict[str, jax.Array]) -> jax.Array:
+        """Dense (m, n) matrix of the whole block scale . A . [D1 H D0]."""
+        a = kind_def(self.kind).materialize(params, self.m, self.n)
+        if self.use_hd:
+            h = transforms.hadamard(self.n, a.dtype)
+            a = (a * params["d1"][None, :]) @ h * params["d0"][None, :]
+        if self.scale != 1.0:
+            a = a * jnp.asarray(self.scale, a.dtype)
+        return a
+
+    def row_gaussianity_moments(self, params) -> Tuple[jax.Array, jax.Array]:
+        """Per-row mean/var of A (each row ~ N(0, I) by Def. 1)."""
+        a = kind_def(self.kind).materialize(params, self.m, self.n)
+        return a.mean(axis=1), a.var(axis=1)
+
+
+# ---------------------------------------------------------------------------
+# SpinnerPipeline — ordered blocks + one fused nonlinearity
+# ---------------------------------------------------------------------------
+
+Params = Tuple[Dict[str, jax.Array], ...]
+
+
+@dataclass(frozen=True)
+class SpinnerPipeline:
+    """f(A_k ... A_2 A_1 x): a chain of spinner blocks + pointwise f.
+
+    ``blocks[i+1].n`` must equal ``blocks[i].m`` (validated). The
+    nonlinearity ``f`` applies ONCE, after the last block, fused into
+    that block's kernel dispatch whenever the registry maps it onto a
+    kernel epilogue.
+    """
+    blocks: Tuple[SpinnerBlock, ...] = (SpinnerBlock(),)
+    f: str = "identity"
+
+    def __post_init__(self):
+        if isinstance(self.blocks, list):         # tolerate list literals
+            object.__setattr__(self, "blocks", tuple(self.blocks))
+        if not self.blocks:
+            raise ValueError("pipeline needs at least one block")
+        for a, b in zip(self.blocks, self.blocks[1:]):
+            if b.n != a.m:
+                raise ValueError(
+                    f"block chain mismatch: block out dim {a.m} feeds "
+                    f"block in dim {b.n}")
+        nonlinearity(self.f)                      # raises on unknown f
+
+    # --- shape / accounting -------------------------------------------------
+
+    @property
+    def depth(self) -> int:
+        return len(self.blocks)
+
+    @property
+    def n_in(self) -> int:
+        return self.blocks[0].n
+
+    @property
+    def m_out(self) -> int:
+        return self.blocks[-1].m
+
+    @property
+    def out_dim(self) -> int:
+        return self.m_out * nonlinearity(self.f).out_mult
+
+    @property
+    def budget(self) -> int:
+        return sum(b.budget for b in self.blocks)
+
+    @property
+    def storage(self) -> int:
+        return sum(b.storage for b in self.blocks)
+
+    @property
+    def flops(self) -> float:
+        return sum(b.flops for b in self.blocks)
+
+    def with_f(self, f: str) -> "SpinnerPipeline":
+        """Same blocks, different fused nonlinearity."""
+        return self if f == self.f else replace(self, f=f)
+
+    # --- protocol -----------------------------------------------------------
+
+    def init(self, rng: jax.Array, dtype=jnp.float32) -> Params:
+        """Tuple of per-block param dicts (a pytree). Single-block
+        pipelines consume ``rng`` exactly like the legacy pmodel.init, so
+        fixed-seed results are reproducible across the API migration."""
+        if len(self.blocks) == 1:
+            return (self.blocks[0].init(rng, dtype),)
+        keys = jax.random.split(rng, len(self.blocks))
+        return tuple(b.init(k, dtype) for b, k in zip(self.blocks, keys))
+
+    def block_params(self, params) -> Params:
+        """Validated per-block params tuple (a bare dict is accepted for
+        1-block pipelines — the legacy single-P-model layout)."""
+        if isinstance(params, dict):              # legacy single-block dict
+            if len(self.blocks) != 1:
+                raise ValueError(
+                    f"{len(self.blocks)}-block pipeline got a single param "
+                    "dict; pass the per-block tuple from pipeline.init")
+            return (params,)
+        params = tuple(params)
+        if len(params) != len(self.blocks):
+            raise ValueError(f"expected {len(self.blocks)} per-block param "
+                             f"dicts, got {len(params)}")
+        return params
+
+    def apply(self, params: Sequence[Dict[str, jax.Array]], x: jax.Array, *,
+              y_scale: float = 1.0, out_scale: float = 1.0,
+              grouped: bool = False,
+              use_pallas: Optional[bool] = None) -> jax.Array:
+        """(..., n_in) -> (..., out_dim):  f(y_scale . A_k...A_1 x) . out_scale.
+
+        ``grouped=True``: x is (G, ..., n_in) and every param leaf carries
+        a leading group axis G (per-head pipelines run as one fused
+        dispatch per block). One spinner_project dispatch per block; the
+        nonlinearity (and both scales) fuse into the LAST block's kernel
+        whenever its registry entry maps onto a kernel epilogue — a
+        1-block pipeline is exactly the PR-2 fused hot path.
+        """
+        params = self.block_params(params)
+        nl = nonlinearity(self.f)
+        # exp's subtrahend is the PIPELINE input norm; the kernel computes
+        # it from its own input tile, valid only when that tile IS x.
+        fuse = nl.epilogue is not None and \
+            (len(self.blocks) == 1 or not nl.needs_input)
+        x0 = x
+        for i, (blk, p) in enumerate(zip(self.blocks, params)):
+            if i < len(self.blocks) - 1:
+                x = blk.apply(p, x, grouped=grouped, use_pallas=use_pallas)
+            elif fuse:
+                x = blk.apply(p, x, epilogue=nl.epilogue, y_scale=y_scale,
+                              out_scale=out_scale, grouped=grouped,
+                              use_pallas=use_pallas)
+            else:
+                y = blk.apply(p, x, y_scale=y_scale, grouped=grouped,
+                              use_pallas=use_pallas)
+                if nl.epilogue is not None:
+                    # builtin pushed out of the kernel (exp at depth > 1):
+                    # share the kernel's epilogue semantics exactly, with
+                    # the PIPELINE input supplying exp's subtrahend
+                    from repro.kernels import ref as kref
+                    x = kref._spinner_epilogue(y, x0, nl.epilogue, out_scale)
+                else:
+                    sq = None
+                    if nl.needs_input:
+                        xf = x0.astype(jnp.float32)
+                        sq = 0.5 * jnp.sum(xf * xf, axis=-1, keepdims=True)
+                    y = nl.fn(y, sq)
+                    x = y if out_scale == 1.0 \
+                        else y * jnp.asarray(out_scale, y.dtype)
+        return x
+
+    def materialize(self, params: Sequence[Dict[str, jax.Array]]) -> jax.Array:
+        """Dense (m_out, n_in) product  A_k ... A_2 A_1  (oracle; the
+        nonlinearity is NOT applied — it is pointwise on the output)."""
+        params = self.block_params(params)
+        a = self.blocks[0].materialize(params[0])
+        for blk, p in zip(self.blocks[1:], params[1:]):
+            a = blk.materialize(p) @ a
+        return a
+
+    def row_gaussianity_moments(self, params) -> Tuple[
+            Tuple[jax.Array, jax.Array], ...]:
+        """PER-BLOCK (mean, var) row diagnostics (Def. 1 applies blockwise;
+        the product of independent spinners is not row-Gaussian)."""
+        params = self.block_params(params)
+        return tuple(b.row_gaussianity_moments(p)
+                     for b, p in zip(self.blocks, params))
+
+
+
+# ---------------------------------------------------------------------------
+# zero-leaf pytree registration: specs flow through jit/vmap/tree_map
+# ---------------------------------------------------------------------------
+
+def _register_spec_pytree(cls):
+    jax.tree_util.register_pytree_node(
+        cls, lambda s: ((), s), lambda aux, _: aux)
+
+
+_register_spec_pytree(SpinnerBlock)
+_register_spec_pytree(SpinnerPipeline)
+
+
+def as_pipeline(obj) -> SpinnerPipeline:
+    """SpinnerPipeline passthrough; anything carrying an equivalent
+    ``.pipeline`` property (the legacy ``PModelSpec``) converts with a
+    ``DeprecationWarning``. The shared entry point of the features /
+    estimators migration path."""
+    if isinstance(obj, SpinnerPipeline):
+        return obj
+    pipe = getattr(obj, "pipeline", None)
+    if isinstance(pipe, SpinnerPipeline):
+        warnings.warn(
+            f"passing {type(obj).__name__} here is deprecated; pass a "
+            "spinner.SpinnerPipeline (see core/README.md migration table)",
+            DeprecationWarning, stacklevel=3)
+        return pipe
+    raise TypeError(f"expected SpinnerPipeline (or legacy PModelSpec), "
+                    f"got {type(obj).__name__}")
+
+
+# ---------------------------------------------------------------------------
+# builders
+# ---------------------------------------------------------------------------
+
+def single(kind: str = "circulant", m: int = 128, n: int = 128, *,
+           r: int = 1, use_hd: bool = True, ldr_nnz: int = 4,
+           f: str = "identity") -> SpinnerPipeline:
+    """The paper's P-model: one structured block + f."""
+    return SpinnerPipeline((SpinnerBlock(kind, m, n, r, use_hd, ldr_nnz),), f)
+
+
+def chain(blocks: Sequence[SpinnerBlock], f: str = "identity"
+          ) -> SpinnerPipeline:
+    return SpinnerPipeline(tuple(blocks), f)
+
+
+def hd_chain(kind: str = "circulant", n: int = 128, m: int = 128,
+             depth: int = 3, *, r: int = 1, ldr_nnz: int = 4,
+             use_hd: bool = True, f: str = "identity") -> SpinnerPipeline:
+    """Stacked construction  HD_k ... HD_2 HD_1  (TripleSpin at depth 3):
+    ``depth - 1`` square (n -> n) spinner blocks followed by one
+    (n -> m) block, every block carrying its own preconditioner
+    (``use_hd=False`` drops the HD step, e.g. non-pow2 dims).
+
+    The square blocks are scaled 1/sqrt(n) (variance-preserving: their
+    rows act like ~N(0, I/n) rotations), so only the FINAL block is a
+    raw row-Gaussian projection — the whole stack keeps the Def.-1
+    calibration every kernel estimator relies on."""
+    if depth < 1:
+        raise ValueError(f"depth must be >= 1, got {depth}")
+    inv = 1.0 / math.sqrt(n)
+    sq = tuple(SpinnerBlock(kind, n, n, r, use_hd, ldr_nnz, scale=inv)
+               for _ in range(depth - 1))
+    return SpinnerPipeline(
+        sq + (SpinnerBlock(kind, m, n, r, use_hd, ldr_nnz),), f)
+
+
+# ---------------------------------------------------------------------------
+# (de)serialization — checkpointable pipeline configs
+# ---------------------------------------------------------------------------
+
+_CONFIG_VERSION = 1
+
+
+def to_config(pipe: SpinnerPipeline) -> Dict[str, Any]:
+    """JSON-able dict capturing the full pipeline spec (not the params —
+    those are a pytree for the checkpoint manager)."""
+    return {"version": _CONFIG_VERSION, "f": pipe.f,
+            "blocks": [asdict(b) for b in pipe.blocks]}
+
+
+def from_config(cfg: Dict[str, Any]) -> SpinnerPipeline:
+    if cfg.get("version") != _CONFIG_VERSION:
+        raise ValueError(f"unsupported pipeline config version: "
+                         f"{cfg.get('version')!r}")
+    return SpinnerPipeline(tuple(SpinnerBlock(**b) for b in cfg["blocks"]),
+                           cfg["f"])
+
+
+def dumps(pipe: SpinnerPipeline) -> str:
+    return json.dumps(to_config(pipe), sort_keys=True)
+
+
+def loads(s: str) -> SpinnerPipeline:
+    return from_config(json.loads(s))

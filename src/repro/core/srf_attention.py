@@ -19,14 +19,14 @@ GQA is handled by the caller (q-heads grouped onto kv-heads before entry).
 from __future__ import annotations
 
 import math
+import warnings
 from dataclasses import dataclass
 from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from . import features, pmodel
-from .pmodel import PModelSpec
+from . import features, spinner
 
 
 @dataclass(frozen=True)
@@ -38,9 +38,24 @@ class SRFConfig:
     use_hd: bool = True
     r: int = 1                  # displacement rank for ldr
     chunk: int = 128            # causal chunk length
+    depth: int = 1              # spinner blocks (depth > 1: stacked d -> d
+                                # blocks before the d -> m projection)
 
     @property
-    def spec(self) -> PModelSpec:
+    def pipeline(self) -> spinner.SpinnerPipeline:
+        """The per-head embedding as a SpinnerPipeline (depth blocks);
+        leading square blocks are 1/sqrt(d)-scaled (variance-preserving,
+        see spinner.hd_chain) so softmax features stay calibrated."""
+        return spinner.hd_chain(self.kind, n=self.head_dim,
+                                m=self.n_features, depth=self.depth,
+                                r=self.r, use_hd=self.use_hd)
+
+    @property
+    def spec(self):
+        """DEPRECATED legacy 1-block spec; use ``pipeline``."""
+        warnings.warn("SRFConfig.spec is deprecated; use SRFConfig.pipeline",
+                      DeprecationWarning, stacklevel=2)
+        from .pmodel import PModelSpec
         return PModelSpec(kind=self.kind, m=self.n_features, n=self.head_dim,
                           r=self.r, use_hd=self.use_hd)
 
@@ -50,10 +65,12 @@ class SRFConfig:
 
 
 def init(rng: jax.Array, cfg: SRFConfig, n_kv_heads: int,
-         dtype=jnp.float32) -> Dict[str, jax.Array]:
-    """Per-kv-head independent P-models (leading axis = head)."""
+         dtype=jnp.float32) -> Tuple[Dict[str, jax.Array], ...]:
+    """Per-kv-head independent pipelines: a tuple of per-block param dicts,
+    every leaf with a leading head axis."""
     keys = jax.random.split(rng, n_kv_heads)
-    return jax.vmap(lambda k: pmodel.init(k, cfg.spec, dtype))(keys)
+    pipe = cfg.pipeline
+    return jax.vmap(lambda k: pipe.init(k, dtype))(keys)
 
 
 def feature_map(cfg: SRFConfig, params, x: jax.Array, is_query: bool) -> jax.Array:
@@ -61,23 +78,23 @@ def feature_map(cfg: SRFConfig, params, x: jax.Array, is_query: bool) -> jax.Arr
     folded in so phi(q).phi(k) ~ exp(q.k/sqrt(d)) (up to a global constant
     that cancels in the normalizer).
 
-    All H per-head P-models run as ONE grouped fused-spinner dispatch
-    (kernels.ops.spinner_project: HD + implicit-tile projection + f in a
-    single pass) instead of a vmap of per-head projection pipelines."""
+    All H per-head pipelines run as ONE grouped fused-spinner dispatch per
+    block (kernels.ops.spinner_project: HD + implicit-tile projection + f
+    in a single pass) instead of a vmap of per-head projection pipelines."""
     scale = cfg.head_dim ** -0.25
     b, h, l, d = x.shape
     xg = x.transpose(1, 0, 2, 3).reshape(h, b * l, d)    # head-major groups
+    pipe = cfg.pipeline
 
     if cfg.feature == "softmax_pos":
-        phi = features.phi_softmax_pos(cfg.spec, params, xg, scale=scale,
+        phi = features.phi_softmax_pos(pipe, params, xg, scale=scale,
                                        stabilize=is_query, grouped=True)
     elif cfg.feature == "trig":
-        phi = features.phi_trig(cfg.spec, params, xg * scale, grouped=True)
+        phi = features.phi_trig(pipe, params, xg * scale, grouped=True)
     elif cfg.feature == "relu":
         inv = 1.0 / math.sqrt(cfg.n_features)
-        phi = pmodel.project_fused(cfg.spec, params, xg * scale,
-                                   epilogue="relu", out_scale=inv,
-                                   grouped=True) + 1e-6 * inv
+        phi = pipe.with_f("relu").apply(params, xg * scale, out_scale=inv,
+                                        grouped=True) + 1e-6 * inv
     else:
         raise ValueError(cfg.feature)
     return phi.reshape(h, b, l, -1).transpose(1, 0, 2, 3)

@@ -127,32 +127,47 @@ _plan_cache: Dict[tuple, Tuple[int, int]] = {}
 
 
 def _spinner_vmem_bytes(kind: str, n: int, m: int, tb: int, tm: int,
-                        use_hd: bool, epilogue: str) -> int:
-    """f32-resident bytes of one spinner program (VMEM feasibility model)."""
-    elems = tb * n            # x tile
-    elems += tb * n + tb      # HD scratch + sq scratch
-    elems += tm * n           # regenerated / streamed A tile
-    elems += tb * tm * (2 if epilogue == "cos_sin" else 1)   # out tile
+                        use_hd: bool, epilogue: str,
+                        itemsize: int = 4) -> int:
+    """Resident bytes of one spinner program (VMEM feasibility model).
+
+    Input/output tiles, generators, and d0/d1 are VMEM-resident at the
+    INPUT dtype (``itemsize``). Everything the kernel COMPUTES with is
+    f32 regardless of input dtype: the HD/sq scratch, the Kronecker
+    Hadamard factors, the sandwich intermediate, the regenerated A tile
+    (the dot consumes ``tile.astype(f32)``) and the pre-epilogue y — so
+    those terms never shrink with a narrower input dtype.
+    """
+    f32 = 4
+    by = tb * n * itemsize    # x tile
+    by += (tb * n + tb) * f32                        # HD scratch + sq scratch
+    by += tm * n * f32        # regenerated / streamed A tile (f32 for the dot)
+    by += tb * tm * f32       # pre-epilogue y (f32)
+    by += tb * tm * (2 if epilogue == "cos_sin" else 1) * itemsize  # out tile
     if use_hd:
         a, b = transforms.kron_factors(n)
-        elems += a * a + b * b + 2 * n               # factors + d0/d1
-        elems += tb * n                              # sandwich intermediate
+        by += (a * a + b * b) * f32                  # hadamard factors
+        by += 2 * n * itemsize                       # d0 / d1
+        by += tb * n * f32                           # sandwich intermediate
     if kind in ("circulant", "skew_circulant"):
-        elems += 2 * n * -(-m // n)                  # doubled generators
+        by += 2 * n * -(-m // n) * itemsize          # doubled generators
     elif kind in ("toeplitz", "hankel"):
-        elems += n + m - 1
+        by += (n + m - 1) * itemsize
     # unstructured streams its (tm, n) tile — already counted above
-    return 4 * elems
+    return by
 
 
 def spinner_plan(kind: str, n: int, m: int, *, use_hd: bool = True,
-                 epilogue: str = "identity",
+                 epilogue: str = "identity", dtype=jnp.float32,
                  budget: int = _VMEM_BUDGET) -> Tuple[int, int]:
     """Pick (block_b, block_m) for the spinner kernel: sweep the candidate
     grid against the VMEM budget, preferring large row tiles (they
-    amortize grid overhead) then large batch tiles. Cached per shape, so
-    serving factories can pre-warm it (launch/steps.py)."""
-    key = (kind, n, m, use_hd, epilogue, budget)
+    amortize grid overhead) then large batch tiles. Cached per shape AND
+    per dtype — bf16 tiles are half the resident bytes of f32 tiles, so
+    the two must not share a plan (a bf16 warm-up would hand f32 an
+    over-budget block). Serving factories pre-warm it (launch/steps.py)."""
+    dt = jnp.dtype(dtype)
+    key = (kind, n, m, use_hd, epilogue, dt.name, budget)
     if key in _plan_cache:
         return _plan_cache[key]
     best = (_BLOCK_B_CANDIDATES[-1], _BLOCK_M_CANDIDATES[-1])
@@ -161,8 +176,8 @@ def spinner_plan(kind: str, n: int, m: int, *, use_hd: bool = True,
         if found:
             break
         for tb in _BLOCK_B_CANDIDATES:
-            if _spinner_vmem_bytes(kind, n, m, tb, min(tm, m),
-                                   use_hd, epilogue) <= budget:
+            if _spinner_vmem_bytes(kind, n, m, tb, min(tm, m), use_hd,
+                                   epilogue, dt.itemsize) <= budget:
                 best = (tb, tm)
                 found = True
                 break
@@ -274,7 +289,7 @@ def spinner_project(kind: str, params: Dict[str, jax.Array], x: jax.Array,
         route = "ref"
     if route != "ref" and (block_b is None or block_m is None):
         auto_b, auto_m = spinner_plan(kind, n, m, use_hd=use_hd,
-                                      epilogue=epilogue)
+                                      epilogue=epilogue, dtype=x.dtype)
         block_b = block_b or auto_b
         block_m = block_m or auto_m
     return _spinner_call(kind, g, x, m, d0, d1, h, epilogue=epilogue,

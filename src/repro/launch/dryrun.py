@@ -144,6 +144,46 @@ def run_cell(arch: str, shape: str, multi_pod: bool = False,
     return rec
 
 
+def pipeline_smoke() -> Dict:
+    """``--pipeline``: spinner-pipeline serialization round-trip smoke.
+
+    Builds a mixed-kind 3-block SpinnerPipeline, round-trips it through
+    ``spinner.dumps``/``loads`` (the checkpointable config form), and
+    proves the reloaded pipeline is spec-equal AND bit-identical under
+    ``apply`` with the same params — the invariant checkpoint restore
+    relies on.
+    """
+    from repro.core import spinner
+    t0 = time.time()
+    pipe = spinner.chain(
+        [spinner.SpinnerBlock("circulant", 128, 128),
+         spinner.SpinnerBlock("toeplitz", 128, 128),
+         spinner.SpinnerBlock("skew_circulant", 256, 128)], f="relu")
+    rec: Dict = {"cell": "pipeline_smoke", "depth": pipe.depth,
+                 "n_in": pipe.n_in, "out_dim": pipe.out_dim,
+                 "budget_t": pipe.budget, "storage_floats": pipe.storage}
+    try:
+        blob = spinner.dumps(pipe)
+        pipe2 = spinner.loads(blob)
+        params = pipe.init(jax.random.PRNGKey(0))
+        x = jax.random.normal(jax.random.PRNGKey(1), (8, pipe.n_in)) * 0.3
+        y1 = pipe.apply(params, x)
+        y2 = pipe2.apply(params, x)
+        rec["config_bytes"] = len(blob)
+        rec["roundtrip_spec_equal"] = bool(pipe2 == pipe)
+        rec["roundtrip_apply_identical"] = bool(jnp.all(y1 == y2))
+        rec["apply_finite"] = bool(jnp.all(jnp.isfinite(y1)))
+        rec["ok"] = (rec["roundtrip_spec_equal"]
+                     and rec["roundtrip_apply_identical"]
+                     and rec["apply_finite"])
+    except Exception as e:
+        rec["ok"] = False
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    rec["total_s"] = round(time.time() - t0, 2)
+    return rec
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None, choices=registry.ARCHS + [None])
@@ -160,7 +200,19 @@ def main(argv=None):
     ap.add_argument("--srf-features", type=int, default=None)
     ap.add_argument("--out", default=None, help="append-jsonl results path")
     ap.add_argument("--hlo-dir", default=None, help="dump compiled HLO here")
+    ap.add_argument("--pipeline", action="store_true",
+                    help="spinner-pipeline serialization round-trip smoke "
+                         "(no mesh/arch needed)")
     args = ap.parse_args(argv)
+
+    if args.pipeline:
+        rec = pipeline_smoke()
+        line = json.dumps(rec, default=float)
+        print(line, flush=True)
+        if args.out:
+            with open(args.out, "a") as f:
+                f.write(line + "\n")
+        return 0 if rec["ok"] else 1
 
     overrides = {}
     if args.attn:

@@ -16,24 +16,36 @@ from repro.optim import adamw, schedule
 
 
 def _prewarm_srf_spinner(cfg) -> None:
-    """Populate the fused-spinner block-size plan cache for the SRF
-    feature shapes this config will serve. The sweep itself is cheap
-    (a pure-Python candidate scan); the point is to pin the plan at
+    """Populate the fused-spinner block-size plan cache for every block of
+    the SRF feature pipeline this config will serve. The sweep itself is
+    cheap (a pure-Python candidate scan); the point is to pin the plan at
     factory time so every step dispatch sees a warm, deterministic cache
     and the chosen blocks are inspectable before the first request."""
     if getattr(cfg, "attn_impl", None) != "srf":
         return
+    import jax.numpy as _jnp
+    from repro.core import spinner
     from repro.kernels import ops as kops
     from repro.models.attention import srf_cfg
     sc = srf_cfg(cfg)
-    spec = sc.spec
+    pipe = sc.pipeline
+    dtype = _jnp.dtype(getattr(cfg, "dtype", "float32"))
     # softmax_pos: keys use the fused 'exp' epilogue; the stabilized query
     # path projects with 'identity' (overflow-safe shift applied outside).
-    epis = {"softmax_pos": ("exp", "identity"), "trig": ("cos_sin",),
+    # Nonlinearities with needs_input (exp's subtrahend is the pipeline
+    # input norm) fuse in-kernel only at depth 1 — same rule as
+    # SpinnerPipeline.apply — so deeper pipelines warm 'identity' instead.
+    last = {"softmax_pos": ("exp", "identity"), "trig": ("cos_sin",),
             "relu": ("relu",)}[sc.feature]
-    for epi in epis:
-        kops.spinner_plan(spec.kind, spec.n, spec.m, use_hd=spec.use_hd,
-                          epilogue=epi)
+    if pipe.depth > 1:
+        last = tuple(dict.fromkeys(
+            "identity" if spinner.nonlinearity(e).needs_input else e
+            for e in last))
+    for i, blk in enumerate(pipe.blocks):
+        epis = last if i == pipe.depth - 1 else ("identity",)
+        for epi in epis:
+            kops.spinner_plan(blk.kind, blk.n, blk.m, use_hd=blk.use_hd,
+                              epilogue=epi, dtype=dtype)
 
 
 @dataclass(frozen=True)

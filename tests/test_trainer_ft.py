@@ -39,6 +39,9 @@ def test_crash_resume_is_deterministic(tmp_path):
     tb = Trainer(cfg, _tcfg(tmp_path / "b"), crash_at=17)
     with pytest.raises(CrashInjected):
         tb.train()
+    # the step-10 save is async; model it as durably committed before the
+    # crash (in-process, the writer thread races the immediate "restart")
+    tb.ckpt.wait()
     # "restart the job"
     tb2 = Trainer(cfg, _tcfg(tmp_path / "b"))
     assert tb2.try_resume()
