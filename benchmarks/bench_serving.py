@@ -1,21 +1,29 @@
 """Serving benchmark: paged continuous-batching engine vs the legacy
-per-slot engine — tokens/s and time-to-first-token across cache families
-and concurrency levels.
+per-slot engine, and single-host vs mesh-sharded serving — tokens/s and
+time-to-first-token across cache families and concurrency levels.
 
 Suite mode (``python -m benchmarks.run --only serving``) runs a fast
-smoke (one family, 8 requests) so the tier-1 flow exercises the serving
-path; the full sweep (8–64 concurrent requests x all four families) runs
-via
+smoke (two families, 8 requests, one mesh cell) so the tier-1 flow
+exercises the serving path; the full sweep (8–64 concurrent requests x
+all four families) runs via
 
     PYTHONPATH=src python -m benchmarks.bench_serving --full
 
-CSV columns: name, us_per_call (wall us per generated token), derived
-(tokens/s | mean ttft ms | preemptions).
+Emits machine-readable ``BENCH_serving.json`` (``BENCH_serving_smoke.json``
+in smoke mode): paged-vs-legacy per family/concurrency, plus a 1-host vs
+simulated 8-device-mesh comparison (2 router replicas x TP=2, run in a
+subprocess so the forced host-platform device count cannot leak into
+this process). CSV columns: name, us_per_call (wall us per generated
+token), derived (tokens/s | mean ttft ms | preemptions).
 """
 from __future__ import annotations
 
+import json
+import os
+import subprocess
 import sys
 import time
+from typing import Dict, List
 
 import jax
 import numpy as np
@@ -26,6 +34,8 @@ FAMILIES = [
     ("mla", "deepseek-v2-lite-16b", {}),
     ("ssd", "mamba2-2.7b", {}),
 ]
+
+_SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
 
 def _requests(cfg, n, seed=0):
@@ -49,11 +59,15 @@ def _drive(eng, reqs):
     return wall, toks, ttft
 
 
-def _bench_pair(fam, arch, over, concurrency, seed=0):
+def _bench_pair(fam, arch, over, concurrency, seed=0) -> Dict:
+    """Paged vs legacy at one concurrency level -> one JSON record."""
+    import warnings
     from repro.configs import registry
     from repro.models import transformer as T
     from repro.serving import Engine
-    from repro.serving import legacy
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        from repro.serving import legacy
     cfg = registry.reduced(arch, **over)
     params = T.init(jax.random.PRNGKey(0), cfg)
     slots = min(concurrency, 16)
@@ -64,26 +78,140 @@ def _bench_pair(fam, arch, over, concurrency, seed=0):
     leg = legacy.Engine(cfg, params, batch_slots=slots, max_len=64)
     wall_l, toks_l, ttft_l = _drive(leg, _requests(cfg, concurrency, seed))
 
-    pre = eng.sched.stats["preemptions"]
-    yield (f"serving/{fam}/paged/c{concurrency},"
-           f"{wall_p / max(toks_p, 1) * 1e6:.0f},"
-           f"tok_s={toks_p / wall_p:.1f}|ttft_ms={ttft_p:.0f}|preempt={pre}")
-    yield (f"serving/{fam}/legacy/c{concurrency},"
-           f"{wall_l / max(toks_l, 1) * 1e6:.0f},"
-           f"tok_s={toks_l / wall_l:.1f}|ttft_ms={ttft_l:.0f}|preempt=0")
-    yield (f"serving/{fam}/speedup/c{concurrency},0,"
-           f"x{(toks_p / wall_p) / (toks_l / wall_l):.2f}")
+    return {"family": fam, "arch": arch, "concurrency": concurrency,
+            "paged": {"tok_s": round(toks_p / wall_p, 2),
+                      "ttft_ms": round(float(ttft_p), 1),
+                      "us_per_tok": round(wall_p / max(toks_p, 1) * 1e6),
+                      "preemptions": eng.sched.stats["preemptions"]},
+            "legacy": {"tok_s": round(toks_l / wall_l, 2),
+                       "ttft_ms": round(float(ttft_l), 1),
+                       "us_per_tok": round(wall_l / max(toks_l, 1) * 1e6)},
+            "speedup": round((toks_p / wall_p) / (toks_l / wall_l), 3)}
+
+
+def _pair_rows(rec: Dict) -> List[str]:
+    fam, c = rec["family"], rec["concurrency"]
+    p, l = rec["paged"], rec["legacy"]
+    return [
+        f"serving/{fam}/paged/c{c},{p['us_per_tok']},"
+        f"tok_s={p['tok_s']}|ttft_ms={p['ttft_ms']:.0f}"
+        f"|preempt={p['preemptions']}",
+        f"serving/{fam}/legacy/c{c},{l['us_per_tok']},"
+        f"tok_s={l['tok_s']}|ttft_ms={l['ttft_ms']:.0f}|preempt=0",
+        f"serving/{fam}/speedup/c{c},0,x{rec['speedup']:.2f}",
+    ]
+
+
+# ---------------------------------------------------------------------------
+# 1-host vs simulated 8-device mesh (subprocess: forced device count must
+# not leak into the calling process)
+# ---------------------------------------------------------------------------
+
+_MESH_SCRIPT = r"""
+import os, json, time
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+os.environ["JAX_PLATFORMS"] = "cpu"
+import jax, numpy as np
+from repro.configs import registry
+from repro.launch import mesh as mesh_lib
+from repro.models import transformer as T
+from repro.serving import Engine, Request, Router
+
+cfg = registry.reduced("qwen3-4b", n_layers=2)
+params = T.init(jax.random.PRNGKey(0), cfg)
+rng = np.random.default_rng(0)
+def reqs(n):
+    return [Request(uid=i, prompt=rng.integers(0, cfg.vocab,
+                    int(rng.integers(4, 20))).astype(np.int32), max_new=12)
+            for i in range(n)]
+
+def drive(eng, rs):
+    for r in rs: eng.submit(r)
+    t0 = time.time(); done = eng.run(); wall = time.time() - t0
+    return wall, sum(len(r.out_tokens) for r in done), {r.uid: r.out_tokens
+                                                        for r in done}
+
+N = 16
+rng = np.random.default_rng(0)
+single = Engine(cfg, params, batch_slots=8, max_len=64)
+w1, t1, out1 = drive(single, reqs(N))
+rng = np.random.default_rng(0)
+meshes = mesh_lib.make_serving_meshes(replicas=2, model_parallel=2)
+router = Router([Engine(cfg, params, batch_slots=8, max_len=64, mesh=m)
+                 for m in meshes])
+w2, t2, out2 = drive(router, reqs(N))
+rep = router.engines[0].cache_report()
+print("MESHJSON " + json.dumps({
+    "requests": N, "replicas": 2, "model_parallel": 2,
+    "single_host": {"tok_s": round(t1 / w1, 2), "pool_bytes":
+                    single.cache_report()["pool_bytes"]},
+    "mesh": {"tok_s": round(t2 / w2, 2),
+             "pool_bytes_per_device": rep["pool_bytes_per_device"],
+             "migrations": router.stats["migrations"]},
+    "tokens_match": out1 == out2,
+}))
+"""
+
+
+def _bench_mesh() -> Dict:
+    env = dict(os.environ, PYTHONPATH=_SRC + os.pathsep
+               + os.environ.get("PYTHONPATH", ""))
+    env.pop("XLA_FLAGS", None)
+    try:
+        out = subprocess.run([sys.executable, "-c", _MESH_SCRIPT], env=env,
+                             capture_output=True, text=True, timeout=900)
+        for line in out.stdout.splitlines():
+            if line.startswith("MESHJSON "):
+                return json.loads(line[len("MESHJSON "):])
+        return {"error": "no MESHJSON line",
+                "stderr": out.stderr[-1500:]}
+    except Exception as e:                      # keep the suite alive
+        return {"error": f"{type(e).__name__}: {e}"}
+
+
+def _mesh_rows(rec: Dict) -> List[str]:
+    if "error" in rec:
+        return [f"serving/mesh/error,0,{rec['error'][:60]}"]
+    s, m = rec["single_host"], rec["mesh"]
+    return [
+        f"serving/mesh/single_host/c{rec['requests']},0,"
+        f"tok_s={s['tok_s']}|pool_bytes={s['pool_bytes']}",
+        f"serving/mesh/router2xTP2/c{rec['requests']},0,"
+        f"tok_s={m['tok_s']}|pool_bytes_dev={m['pool_bytes_per_device']}"
+        f"|match={rec['tokens_match']}",
+    ]
 
 
 def run(full: bool = False):
-    """Suite entry point: fast smoke by default."""
+    """Suite entry point: fast smoke by default. Streams CSV rows as each
+    cell finishes (the mesh subprocess runs LAST so paged-vs-legacy
+    progress is visible while it compiles) and writes the collected JSON
+    payload at the end."""
     if full:
-        for fam, arch, over in FAMILIES:
-            for c in (8, 16, 32, 64):
-                yield from _bench_pair(fam, arch, over, c)
+        plan = [(fam, arch, over, c) for fam, arch, over in FAMILIES
+                for c in (8, 16, 32, 64)]
     else:
-        yield from _bench_pair("kv", "qwen3-4b", {}, 8)
-        yield from _bench_pair("srf", "qwen3-4b", {"attn_impl": "srf"}, 8)
+        plan = [("kv", "qwen3-4b", {}, 8),
+                ("srf", "qwen3-4b", {"attn_impl": "srf"}, 8)]
+    pairs = []
+    for fam, arch, over, c in plan:
+        rec = _bench_pair(fam, arch, over, c)
+        pairs.append(rec)
+        yield from _pair_rows(rec)
+    mesh = _bench_mesh()
+    yield from _mesh_rows(mesh)
+    payload = {
+        "bench": "serving",
+        "smoke": not full,
+        "backend": jax.default_backend(),
+        "paged_vs_legacy": pairs,
+        "mesh_vs_single_host": mesh,
+    }
+    default = "BENCH_serving.json" if full else "BENCH_serving_smoke.json"
+    path = os.environ.get("REPRO_BENCH_SERVING_JSON", default)
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
 
 
 def main(argv=None):

@@ -107,6 +107,20 @@ def paged_gather(pool: jax.Array, tables: jax.Array,
                                         interpret=(route == "interpret"))
 
 
+def paged_gather_dequant(pool: jax.Array, scales: jax.Array,
+                         tables: jax.Array, out_dtype=jnp.float32,
+                         use_pallas: Optional[bool] = None) -> jax.Array:
+    """int8 pool (N, P, D) + scales (N, P, 1), tables (R, M) ->
+    (R, M*P, D) dequantized history in ``out_dtype`` (fused: the int8
+    page never materializes at full width in HBM)."""
+    r, m = tables.shape
+    route = _route(use_pallas, r * m * pool.shape[1] * pool.shape[2])
+    if route == "ref":
+        return _ref.paged_gather_dequant_ref(pool, scales, tables, out_dtype)
+    return _pgather.paged_gather_dequant_pallas(
+        pool, scales, tables, out_dtype, interpret=(route == "interpret"))
+
+
 def srf_decode(s, z, phi_q, phi_k, v, eps: float = 1e-6,
                use_pallas: Optional[bool] = None):
     route = _route(use_pallas, s.size)               # state bytes dominate

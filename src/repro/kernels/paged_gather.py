@@ -30,6 +30,13 @@ def _gather_kernel(tables_ref, pool_ref, out_ref):
     out_ref[0, 0] = pool_ref[0]
 
 
+def _gather_dequant_kernel(tables_ref, pool_ref, scale_ref, out_ref):
+    # int8 page * f32 per-row scale, fused into the same DMA'd copy: the
+    # quantized page never round-trips through HBM at full width.
+    out_ref[0, 0] = (pool_ref[0].astype(jnp.float32)
+                     * scale_ref[0]).astype(out_ref.dtype)
+
+
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def paged_gather_pallas(pool: jax.Array, tables: jax.Array,
                         interpret: bool = True) -> jax.Array:
@@ -54,4 +61,38 @@ def paged_gather_pallas(pool: jax.Array, tables: jax.Array,
         out_shape=jax.ShapeDtypeStruct((r, m, p, d), pool.dtype),
         interpret=interpret,
     )(tables, pool)
+    return out.reshape(r, m * p, d)
+
+
+@functools.partial(jax.jit, static_argnames=("out_dtype", "interpret"))
+def paged_gather_dequant_pallas(pool: jax.Array, scales: jax.Array,
+                                tables: jax.Array,
+                                out_dtype=jnp.float32,
+                                interpret: bool = True) -> jax.Array:
+    """Fused int8 page gather + dequant.
+
+    pool: (N, P, D) int8; scales: (N, P, 1) f32 per-row (per token) scales;
+    tables: (R, M) int32 page ids -> (R, M*P, D) ``out_dtype``.
+
+    Same (R, M) grid and scalar-prefetched table as ``paged_gather_pallas``;
+    the dequant multiply rides the VMEM copy so the int8 pool is the only
+    HBM-resident form of the quantized cache.
+    """
+    n, p, d = pool.shape
+    r, m = tables.shape
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(r, m),
+        in_specs=[
+            pl.BlockSpec((1, p, d), lambda i, j, tbl: (tbl[i, j], 0, 0)),
+            pl.BlockSpec((1, p, 1), lambda i, j, tbl: (tbl[i, j], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, p, d), lambda i, j, tbl: (i, j, 0, 0)),
+    )
+    out = pl.pallas_call(
+        _gather_dequant_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((r, m, p, d), jnp.dtype(out_dtype)),
+        interpret=interpret,
+    )(tables, pool, scales)
     return out.reshape(r, m * p, d)

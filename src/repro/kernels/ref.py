@@ -174,3 +174,18 @@ def paged_gather_ref(pool: jax.Array, tables: jax.Array) -> jax.Array:
     r, m = tables.shape
     out = pool[idx]                                  # (R, M, P, D)
     return out.reshape(r, m * pool.shape[1], pool.shape[2])
+
+
+def paged_gather_dequant_ref(pool: jax.Array, scales: jax.Array,
+                             tables: jax.Array,
+                             out_dtype=jnp.float32) -> jax.Array:
+    """Reference for the fused int8 gather + dequant.
+
+    pool: (N, P, D) int8; scales: (N, P, 1) f32 per-row scales;
+    tables: (R, M) -> (R, M*P, D) ``out_dtype``.
+    """
+    n, p, d = pool.shape
+    idx = jnp.clip(tables, 0, n - 1)
+    r, m = tables.shape
+    out = pool[idx].astype(jnp.float32) * scales[idx]
+    return out.astype(out_dtype).reshape(r, m * p, d)

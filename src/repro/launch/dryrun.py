@@ -1,7 +1,16 @@
 import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-# ^ MUST precede any jax import/init: jax locks the device count on first use.
+import sys as _sys
+# MUST precede any jax import/init: jax locks the device count on first use.
 # Set here (and only here) so tests/benches still see 1 real device.
+# REPRO_DRYRUN_DEVICES is the single programmatic override (set it before
+# importing this module); without it, the CLI serve-mesh path forces a
+# realistic 8-device host instead of 512 to keep startup down. The smoke
+# itself only needs 4 devices and is correct (just slower) under 512, and
+# the grid cells are lower/compile-only, so a mesh wider than the forced
+# count still partitions — the argv sniff is a speed knob, not semantics.
+_FORCED = os.environ.get("REPRO_DRYRUN_DEVICES") or \
+    ("8" if "--serve-mesh" in _sys.argv else "512")
+os.environ["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={_FORCED}"
 
 """Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell and
 extract memory/cost/collective evidence for EXPERIMENTS.md.
@@ -184,6 +193,66 @@ def pipeline_smoke() -> Dict:
     return rec
 
 
+def serve_mesh_smoke(arch: str = "qwen3-4b") -> Dict:
+    """``--serve-mesh``: mesh-serving end-to-end smoke on the fake
+    8-device host platform.
+
+    Builds 2 router-managed engine replicas with model-axis-sharded page
+    pools (TP=2 each), serves 4 mixed-length requests end to end, and
+    checks (a) every request completes with greedy tokens identical to
+    the single-host paged engine, (b) per-device pool bytes are
+    1/model_axis of the single-host layout.
+    """
+    import numpy as np
+    from repro.launch import mesh as mesh_lib
+    from repro.serving import Engine, Request, Router
+    from repro.serving.mesh import shard as mesh_shard
+
+    t0 = time.time()
+    cfg = registry.reduced(arch, n_layers=2)
+    rec: Dict = {"cell": "serve_mesh_smoke", "arch": arch,
+                 "devices": len(jax.devices())}
+    try:
+        params = T.init(jax.random.PRNGKey(0), cfg)
+        rng = np.random.default_rng(0)
+        lens = [3, 9, 17, 6]
+        prompts = [rng.integers(0, cfg.vocab, n).astype(np.int32)
+                   for n in lens]
+
+        single = Engine(cfg, params, batch_slots=4, max_len=64)
+        for i, p in enumerate(prompts):
+            single.submit(Request(uid=i, prompt=p, max_new=6))
+        want = {r.uid: r.out_tokens for r in single.run()}
+
+        meshes = mesh_lib.make_serving_meshes(replicas=2, model_parallel=2)
+        router = Router([Engine(cfg, params, batch_slots=4, max_len=64,
+                                mesh=m) for m in meshes])
+        for i, p in enumerate(prompts):
+            router.submit(Request(uid=i, prompt=p.copy(), max_new=6))
+        got = {r.uid: r.out_tokens for r in router.run()}
+
+        rep = router.engines[0].cache_report()
+        tp = mesh_shard.paged_tp(cfg, meshes[0])
+        rec.update({
+            "replicas": 2, "model_parallel": 2, "paged_tp": tp,
+            "requests_done": len(got),
+            "tokens_match_single_host": bool(got == want),
+            "pool_bytes_single": single.cache_report()["pool_bytes"],
+            "pool_bytes_per_device": rep["pool_bytes_per_device"],
+            "router": router.describe(),
+        })
+        rec["ok"] = (got == want and len(got) == len(prompts)
+                     and tp == 2
+                     and rep["pool_bytes_per_device"] * tp
+                     == single.cache_report()["pool_bytes"])
+    except Exception as e:
+        rec["ok"] = False
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    rec["total_s"] = round(time.time() - t0, 2)
+    return rec
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None, choices=registry.ARCHS + [None])
@@ -203,10 +272,14 @@ def main(argv=None):
     ap.add_argument("--pipeline", action="store_true",
                     help="spinner-pipeline serialization round-trip smoke "
                          "(no mesh/arch needed)")
+    ap.add_argument("--serve-mesh", action="store_true",
+                    help="mesh-serving smoke: router + sharded pools on a "
+                         "fake 8-device mesh, 4 mixed-length requests e2e")
     args = ap.parse_args(argv)
 
-    if args.pipeline:
-        rec = pipeline_smoke()
+    if args.pipeline or args.serve_mesh:
+        rec = (pipeline_smoke() if args.pipeline
+               else serve_mesh_smoke(args.arch or "qwen3-4b"))
         line = json.dumps(rec, default=float)
         print(line, flush=True)
         if args.out:

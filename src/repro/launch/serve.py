@@ -1,12 +1,17 @@
-"""Serving launcher: paged continuous-batching engine.
+"""Serving launcher: paged continuous-batching engine, optionally
+mesh-sharded and router-replicated.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-4b --reduced \
         --requests 16 --prompt-len 16 --max-new 24 [--attn srf] \
-        [--policy priority] [--temperature 0.8 --top-k 40] [--legacy]
+        [--policy priority] [--temperature 0.8 --top-k 40] [--legacy] \
+        [--replicas 2] [--model-parallel 2] [--quantize-kv]
 
 ``--attn srf`` serves with the paper's SRF attention: the per-request
 cache is one constant-size O(m d) state page instead of O(L) KV pages.
 ``--legacy`` runs the old per-slot lock-step engine for comparison.
+``--replicas``/``--model-parallel`` route requests across engine
+replicas whose page pools are model-axis sharded (``serving/mesh``);
+``--quantize-kv`` stores KV pages as int8 with per-page-row scales.
 """
 from __future__ import annotations
 
@@ -18,9 +23,9 @@ import jax
 import numpy as np
 
 from repro.configs import registry
+from repro.launch import mesh as mesh_lib
 from repro.models import transformer as model_lib
-from repro.serving import Engine, Request
-from repro.serving import legacy
+from repro.serving import Engine, PagedConfig, Request, Router
 
 
 def main(argv=None):
@@ -39,19 +44,34 @@ def main(argv=None):
     ap.add_argument("--top-p", type=float, default=1.0)
     ap.add_argument("--legacy", action="store_true",
                     help="old per-slot engine (baseline)")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="router-managed engine replicas")
+    ap.add_argument("--model-parallel", type=int, default=1,
+                    help="model-axis TP width per replica (shards pools)")
+    ap.add_argument("--quantize-kv", action="store_true",
+                    help="int8 KV pages + per-page-row scales (kv family)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
     overrides = {"attn_impl": args.attn} if args.attn else {}
     cfg = registry.reduced(args.arch, **overrides)
     params = model_lib.init(jax.random.PRNGKey(args.seed), cfg)
+    paged = PagedConfig(quantize_kv=args.quantize_kv)
     if args.legacy:
+        from repro.serving import legacy
         eng = legacy.Engine(cfg, params, batch_slots=args.slots,
                             max_len=args.max_len)
+    elif args.replicas > 1 or args.model_parallel > 1:
+        meshes = mesh_lib.make_serving_meshes(args.replicas,
+                                              args.model_parallel)
+        eng = Router([Engine(cfg, params, batch_slots=args.slots,
+                             max_len=args.max_len, policy=args.policy,
+                             seed=args.seed + i, mesh=m, paged=paged)
+                      for i, m in enumerate(meshes)])
     else:
         eng = Engine(cfg, params, batch_slots=args.slots,
                      max_len=args.max_len, policy=args.policy,
-                     seed=args.seed)
+                     seed=args.seed, paged=paged)
     rng = np.random.default_rng(args.seed)
     t0 = time.time()
     for i in range(args.requests):
@@ -64,11 +84,15 @@ def main(argv=None):
     done = eng.run()
     dt = time.time() - t0
     tok = sum(len(r.out_tokens) for r in done)
-    engine = "legacy" if args.legacy else "paged"
+    engine = ("legacy" if args.legacy else
+              "router" if isinstance(eng, Router) else "paged")
     print(f"arch={args.arch} attn={cfg.attn_impl} engine={engine} "
           f"requests={len(done)} tokens={tok} wall={dt:.2f}s "
           f"tok/s={tok/dt:.1f}")
-    if not args.legacy:
+    if isinstance(eng, Router):
+        print(f"  router: {eng.describe()}")
+        print(f"  replica0 report: {eng.engines[0].cache_report()}")
+    elif not args.legacy:
         print(f"  sched: {eng.sched.stats}  report: {eng.cache_report()}")
     for r in done[:3]:
         print(f"  req{r.uid}: ttft={r.t_first - r.t_submit:.3f}s "

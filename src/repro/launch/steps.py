@@ -97,7 +97,7 @@ def make_prefill_step(cfg):
     return prefill_step
 
 
-def make_paged_step(cfg):
+def make_paged_step(cfg, mesh=None, paged=None, params_sds=None):
     """Batched paged serving step (decode: C = 1; chunked prefill: C = chunk).
 
     (params, pools, tokens (B, C), positions (B, C), q_valid (B, C),
@@ -105,12 +105,62 @@ def make_paged_step(cfg):
     entry per (B, C) shape — the engine keeps those fixed. With SRF
     attention the phi(q)/phi(k) feature maps inside run as single fused
     spinner passes; the factory pre-warms their block-size plan.
+
+    ``mesh``: mesh-sharded serving. When the family's head dims divide
+    the mesh's model axis (``serving.mesh.shard.paged_tp``), the step is
+    wrapped in a manual shard_map: q/k/v projections arrive column-
+    parallel sliced, pools arrive as the local head block, the body runs
+    ``model.paged_step`` under the shard-local config, and attention
+    stitches the per-shard head outputs with a model-axis all-gather
+    (``distributed.collectives.stitch_heads``) before contracting the
+    deliberately REPLICATED wo — that keeps the d_model reduction in
+    single-host order, so greedy tokens are bit-identical to the
+    unsharded engine (a row-parallel wo + psum re-associates the sum).
+    The paged-gather kernel then runs per-shard on the local pool slice.
+    Families that degrade to replication (mla / ssd / indivisible heads)
+    fall back to the plain body — identical work on every device, pools
+    replicated.
+
+    ``paged`` (``serving.paged_cache.PagedConfig``) only changes the
+    pool *structure* the specs are derived from (int8 scale leaves);
+    ``params_sds`` (any tree of arrays or ShapeDtypeStructs, e.g. the
+    engine's real params) supplies the parameter shapes the in_specs are
+    derived from, avoiding an abstract re-trace of ``model.init``.
     """
     _prewarm_srf_spinner(cfg)
+
     def paged_step(params, pools, tokens, positions, q_valid, tables):
         return model.paged_step(params, cfg, pools, tokens, positions,
                                 q_valid, tables)
-    return paged_step
+
+    if mesh is None:
+        return paged_step
+    from jax.sharding import PartitionSpec as P
+    from repro.distributed import collectives
+    from repro.serving import paged_cache
+    from repro.serving.mesh import shard as mesh_shard
+
+    tp = mesh_shard.paged_tp(cfg, mesh)
+    if tp <= 1:
+        return paged_step               # replication degradation: plain body
+
+    cfg_local = mesh_shard.local_cfg(cfg, tp)
+    if params_sds is None:
+        params_sds = jax.eval_shape(
+            lambda: model.init(jax.random.PRNGKey(0), cfg))
+    pspecs = mesh_shard.serving_param_specs(params_sds, cfg, mesh)
+    poolspecs = mesh_shard.pool_specs(cfg, mesh, paged)
+    rep = P()
+
+    def body(params, pools, tokens, positions, q_valid, tables):
+        return model.paged_step(params, cfg_local, pools, tokens, positions,
+                                q_valid, tables, tp_axis="model")
+
+    return collectives.axis_shard_map(
+        body, mesh,
+        in_specs=(pspecs, poolspecs, rep, rep, rep, rep),
+        out_specs=(rep, poolspecs),
+        axes=set(mesh.axis_names))
 
 
 def make_serve_step(cfg, greedy: bool = True, temperature: float = 1.0):

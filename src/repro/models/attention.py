@@ -26,6 +26,7 @@ import jax.numpy as jnp
 from repro.core import srf_attention as srf
 from repro.core.srf_attention import SRFConfig
 from repro.core.transforms import is_pow2
+from repro.distributed.collectives import stitch_heads
 from repro.kernels import ops as kops
 from . import layers
 
@@ -240,6 +241,36 @@ def _paged_hist(pool_arr: jax.Array, tables: jax.Array) -> jax.Array:
     return hist.reshape((b, tables.shape[1] * p) + pool_arr.shape[2:])
 
 
+def _paged_hist_dq(pool_arr: jax.Array, scale_arr: jax.Array,
+                   tables: jax.Array, dtype) -> jax.Array:
+    """int8 variant of :func:`_paged_hist`: (N, P, ...) int8 pages +
+    (N, P, 1) f32 scales -> (B, M*P, ...) ``dtype`` history, dequant
+    fused into the gather kernel."""
+    n, p = pool_arr.shape[:2]
+    d = 1
+    for s in pool_arr.shape[2:]:
+        d *= s
+    hist = kops.paged_gather_dequant(pool_arr.reshape(n, p, d), scale_arr,
+                                     tables, out_dtype=dtype)
+    b = tables.shape[0]
+    return hist.reshape((b, tables.shape[1] * p) + pool_arr.shape[2:])
+
+
+def _quantize_paged_kv(x: jax.Array, tp_axis: Optional[str] = None):
+    """(B, C, Hkv, hd) chunk rows -> (int8 rows, (B, C, 1) f32 scales).
+
+    One scale per cached token (= per page row). Under head-sharded TP
+    each shard sees only its local heads, so the max-abs is pmax'd over
+    the model axis — every shard then stores the same (replicated) scale
+    pool and quantization is bit-identical to the single-host layout."""
+    mx = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=(-2, -1))
+    if tp_axis is not None:
+        mx = jax.lax.pmax(mx, tp_axis)
+    s = jnp.maximum(mx / 127.0, 1e-8)[..., None]               # (B, C, 1)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / s[..., None]), -127, 127)
+    return q.astype(jnp.int8), s
+
+
 def _paged_softmax(q, k, v, scale, positions):
     """Batched chunk attention against gathered pages.
 
@@ -263,14 +294,32 @@ def _paged_softmax(q, k, v, scale, positions):
 
 def _paged_full(cfg, q, k, v, positions, ctx):
     """Full-KV paged path: scatter the chunk's k/v into pages, gather the
-    whole history, attend. Works for decode (C=1) and chunked prefill."""
+    whole history, attend. Works for decode (C=1) and chunked prefill,
+    for bf16/f32 pools and int8 pools (detected by the scale leaves;
+    dequant is fused into the gather)."""
     pool, tables, q_valid = ctx["pool"], ctx["tables"], ctx["q_valid"]
     kt = k.transpose(0, 2, 1, 3)                       # (B, C, Hkv, hd)
     vt = v.transpose(0, 2, 1, 3)
-    new_pool = {"k": _paged_scatter(pool["k"], kt, tables, positions, q_valid),
-                "v": _paged_scatter(pool["v"], vt, tables, positions, q_valid)}
-    kf = _paged_hist(new_pool["k"], tables).transpose(0, 2, 1, 3)
-    vf = _paged_hist(new_pool["v"], tables).transpose(0, 2, 1, 3)
+    if "k_scale" in pool:
+        kq, ks = _quantize_paged_kv(kt, ctx.get("tp_axis"))
+        vq, vs = _quantize_paged_kv(vt, ctx.get("tp_axis"))
+        new_pool = {
+            "k": _paged_scatter(pool["k"], kq, tables, positions, q_valid),
+            "v": _paged_scatter(pool["v"], vq, tables, positions, q_valid),
+            "k_scale": _paged_scatter(pool["k_scale"], ks, tables,
+                                      positions, q_valid),
+            "v_scale": _paged_scatter(pool["v_scale"], vs, tables,
+                                      positions, q_valid)}
+        kf = _paged_hist_dq(new_pool["k"], new_pool["k_scale"], tables,
+                            q.dtype).transpose(0, 2, 1, 3)
+        vf = _paged_hist_dq(new_pool["v"], new_pool["v_scale"], tables,
+                            q.dtype).transpose(0, 2, 1, 3)
+    else:
+        new_pool = {
+            "k": _paged_scatter(pool["k"], kt, tables, positions, q_valid),
+            "v": _paged_scatter(pool["v"], vt, tables, positions, q_valid)}
+        kf = _paged_hist(new_pool["k"], tables).transpose(0, 2, 1, 3)
+        vf = _paged_hist(new_pool["v"], tables).transpose(0, 2, 1, 3)
     scale = 1.0 / math.sqrt(cfg.head_dim)
     out = _paged_softmax(q, kf.astype(q.dtype), vf.astype(q.dtype), scale,
                          positions)
@@ -355,6 +404,11 @@ def attention(p, cfg, x: jax.Array, positions: jax.Array, mode: str,
                                        cache["q_valid"])
         else:
             out, new_pool = _paged_full(cfg, q, k, v, positions, cache)
+        if cache.get("tp_axis"):
+            # stitch the local head block back to the full head axis; the
+            # replicated-wo contraction then reduces in single-host order
+            # (greedy tokens stay bit-identical to the unsharded engine)
+            out = stitch_heads(out, cache["tp_axis"])
         return _merge_heads(out) @ p["wo"], new_pool
     if cfg.attn_impl == "srf":
         out, cache = _srf_paths(p, cfg, q, k, v, mode, cache)
@@ -488,6 +542,8 @@ def _mla_attention(p, cfg, x, positions, mode, cache):
             phi_k = srf.feature_map(sc, p["srf"], k, is_query=False)
             out, new_pool = _paged_srf(sc, pool, tables, phi_q, phi_k, v,
                                        q_valid)
+            if cache.get("tp_axis"):
+                out = stitch_heads(out, cache["tp_axis"])
             return _merge_heads(out) @ p["wo"], new_pool
         new_pool = {
             "c": _paged_scatter(pool["c"], c_new, tables, positions, q_valid),

@@ -38,7 +38,8 @@ def moe_init(rng, cfg, dtype) -> Dict:
     return p
 
 
-def moe_apply(p, cfg, x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+def moe_apply(p, cfg, x: jax.Array, valid=None
+              ) -> Tuple[jax.Array, jax.Array]:
     """x: (B, L, d) -> (out, aux_loss).
 
     Dispatch is GROUP-LOCAL (groups = batch rows, the GShard trick): slot
@@ -51,6 +52,12 @@ def moe_apply(p, cfg, x: jax.Array) -> Tuple[jax.Array, jax.Array]:
     forces XLA to all-reduce the whole buffer across data shards:
     3.2 TB/device/step on moonshot train_4k — measured, EXPERIMENTS.md
     §Perf-hillclimb.)
+
+    ``valid``: optional (B, L) bool — tokens marked False are EXCLUDED
+    from dispatch entirely (no slot, no capacity use, zero gate). The
+    paged serving step passes its q_valid mask: padded chunk-tail rows
+    otherwise compete for per-expert capacity and shift real tokens'
+    second-choice slots, making outputs depend on batch padding.
     """
     b, l, d = x.shape
     e, k = cfg.moe_experts, cfg.moe_top_k
@@ -61,17 +68,23 @@ def moe_apply(p, cfg, x: jax.Array) -> Tuple[jax.Array, jax.Array]:
     probs = jax.nn.softmax(logits, axis=-1)
     gates, idx = jax.lax.top_k(probs, k)                     # (B, L, k)
     gates = gates / jnp.sum(gates, axis=-1, keepdims=True)
+    if valid is not None:
+        gates = gates * valid[..., None].astype(gates.dtype)
 
     # positions within each group, sequential over the k routing slots
     pos = []
     base = jnp.zeros((b, e), jnp.int32)
     for j in range(k):
         oh = jax.nn.one_hot(idx[:, :, j], e, dtype=jnp.int32)   # (B, L, E)
+        if valid is not None:
+            oh = oh * valid[..., None].astype(oh.dtype)
         before = jnp.cumsum(oh, axis=1) - oh + base[:, None, :]
         pos.append(jnp.sum(before * oh, axis=-1))               # (B, L)
         base = base + jnp.sum(oh, axis=1)
     pos = jnp.stack(pos, axis=2)                                # (B, L, k)
     keep = pos < cap
+    if valid is not None:
+        keep = keep & valid[..., None]
     safe_pos = jnp.where(keep, pos, cap)                        # OOB -> drop
 
     # INDEX dispatch: scatter int32 token ids into the slot map (tiny —

@@ -345,7 +345,8 @@ def prefill(params, cfg, batch: Dict, cache: Dict) -> Tuple[jax.Array, Dict]:
 
 def paged_step(params, cfg, pools: List, tokens: jax.Array,
                positions: jax.Array, q_valid: jax.Array,
-               tables: jax.Array) -> Tuple[jax.Array, List]:
+               tables: jax.Array, tp_axis: Optional[str] = None
+               ) -> Tuple[jax.Array, List]:
     """One batched step against pooled paged caches (serving hot path).
 
     tokens: (B, C) int32 — C = 1 for batched decode, C = prefill chunk
@@ -357,6 +358,14 @@ def paged_step(params, cfg, pools: List, tokens: jax.Array,
     Layers scan over (stacked params, stacked per-layer pools); tables /
     positions are loop constants, so the whole step stays one jit'd
     program regardless of batch composition.
+
+    ``tp_axis``: set when running per-shard inside the mesh-serving
+    shard_map (``launch.steps.make_paged_step(mesh=...)``): ``cfg`` is
+    then the shard-local view (head counts divided), the pools hold the
+    local head block, and attention all-gathers its per-shard head
+    outputs over the named mesh axis (``collectives.stitch_heads``)
+    before the replicated-wo contraction. Everything outside attention
+    is replicated.
     """
     dt = _dtype(cfg)
     x = layers.embed(params["embed"], tokens).astype(dt)
@@ -367,18 +376,20 @@ def paged_step(params, cfg, pools: List, tokens: jax.Array,
         def body(x, inp):
             lp, lpool = inp
             y, new_lpool = _paged_layer(lp, cfg, kind, x, positions,
-                                        q_valid, lpool, tables)
+                                        q_valid, lpool, tables, tp_axis)
             return y, new_lpool
         x, new_pool = jax.lax.scan(body, x, (seg_params, seg_pool))
         new_pools.append(new_pool)
     return _logits(params, cfg, x), new_pools
 
 
-def _paged_layer(p, cfg, kind: str, x, positions, q_valid, lpool, tables
-                 ) -> Tuple[jax.Array, Dict]:
+def _paged_layer(p, cfg, kind: str, x, positions, q_valid, lpool, tables,
+                 tp_axis: Optional[str] = None) -> Tuple[jax.Array, Dict]:
     """Single-layer paged step (mirrors ``layer_apply`` for serving)."""
     h = layers.rmsnorm(p["ln1"], x, cfg.norm_eps)
     if kind == "ssm":
+        if tp_axis is not None:     # ssd pools always replicate (shard.py)
+            raise ValueError("tp_axis is not supported for ssm layers")
         y, new_pool = ssm.paged_ssm_step(p["ssm"], cfg, h, q_valid, lpool,
                                          tables[:, 0])
         return x + y, new_pool
@@ -386,11 +397,15 @@ def _paged_layer(p, cfg, kind: str, x, positions, q_valid, lpool, tables
         raise ValueError(f"paged serving unsupported for layer kind {kind!r}")
     a, new_pool = attention.attention(
         p["attn"], cfg, h, positions, "paged",
-        {"pool": lpool, "tables": tables, "q_valid": q_valid})
+        {"pool": lpool, "tables": tables, "q_valid": q_valid,
+         "tp_axis": tp_axis})
     x = x + a
     h2 = layers.rmsnorm(p["ln2"], x, cfg.norm_eps)
     if kind == "moe":
-        y, _ = moe.moe_apply(p["moe"], cfg, h2)
+        # q_valid keeps padded chunk-tail tokens out of expert capacity:
+        # without it real tokens' slot positions (and thus drops) depend
+        # on batch padding, breaking cross-replica determinism
+        y, _ = moe.moe_apply(p["moe"], cfg, h2, valid=q_valid)
     else:
         y = layers.mlp(p["mlp"], h2)
     return x + y, new_pool

@@ -1,12 +1,17 @@
 """Paged serving subsystem: block allocator, pooled caches per family,
-continuous-batching scheduler, batched sampler, and the Engine on top.
+continuous-batching scheduler, batched sampler, the Engine on top, and
+the mesh layer (``serving/mesh/``) that shards page pools over a device
+mesh and routes requests across engine replicas.
 
-See ``serving/README.md`` for the block-table layout and the
+See ``serving/README.md`` for the block-table layout, the
 bytes-per-token comparison across cache families (full KV vs MLA-latent
-vs the paper's SRF state vs SSD). ``serving.legacy`` keeps the old
-per-slot engine as the benchmark baseline.
+vs the paper's SRF state vs SSD), and the mesh-mode pool layout /
+router policy / snapshot-overlap notes. ``serving.legacy`` keeps the
+old per-slot engine as the benchmark baseline (deprecated; its import
+warns).
 """
 from .blocks import BlockAllocator, BlockTable          # noqa: F401
 from .engine import Engine, Request                     # noqa: F401
-from .paged_cache import family_for, init_pools         # noqa: F401
+from .paged_cache import PagedConfig, family_for, init_pools  # noqa: F401
 from .scheduler import SchedConfig, Scheduler           # noqa: F401
+from .mesh import Router, RouterConfig                  # noqa: F401

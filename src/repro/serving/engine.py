@@ -74,23 +74,47 @@ class Engine:
     ``batch_slots`` and ``max_len`` keep the old engine's constructor
     contract (tests, examples); pass ``sched=SchedConfig(...)`` to size
     the pool explicitly (e.g. tight pools to exercise preemption).
+
+    ``mesh``: mesh-sharded serving — pools laid out with model-axis
+    NamedSharding on the head/feature dim, attention params sliced to
+    match, and the step shard_map-wrapped (``serving/mesh/shard.py`` owns
+    the layout contract; ``launch.steps.make_paged_step`` builds the
+    step). ``paged=PagedConfig(quantize_kv=True)`` stores KV pages as
+    int8 with per-page-row scales (kv family only).
+
+    Copy-on-preempt snapshots are asynchronous: eviction enqueues the
+    device-side page slice and the non-blocking host transfer, the next
+    decode step overlaps the copy (the step donates its pool buffers, so
+    the engine fences pending slices with ``block_until_ready`` first),
+    and the transfer is only awaited when the victim swaps back in.
     """
 
     def __init__(self, cfg, params, batch_slots: int = 4,
                  max_len: int = 512, sched: Optional[SchedConfig] = None,
-                 policy: str = "fcfs", seed: int = 0):
+                 policy: str = "fcfs", seed: int = 0, mesh=None,
+                 paged: Optional[paged_cache.PagedConfig] = None):
         self.cfg = cfg
-        self.params = params
         self.family = paged_cache.family_for(cfg)
+        self.mesh = mesh
+        self.paged = paged or paged_cache.PagedConfig()
         if sched is None:
             sched = _default_sched(cfg, batch_slots, max_len,
                                    self.family.constant_state, policy)
         self.sched_cfg = sched
         self.sched = Scheduler(sched, self.family.constant_state)
         self.pools = paged_cache.init_pools(cfg, sched.num_pages,
-                                            sched.page_size)
-        self._step = jax.jit(step_lib.make_paged_step(cfg))
+                                            sched.page_size, mesh=mesh,
+                                            paged=self.paged)
+        if mesh is not None:
+            from .mesh import shard as mesh_shard
+            params = mesh_shard.place_params(params, cfg, mesh)
+        self.params = params
+        self._step = jax.jit(
+            step_lib.make_paged_step(cfg, mesh=mesh, paged=self.paged,
+                                     params_sds=params),
+            donate_argnums=(1,))
         self._rng = jax.random.PRNGKey(seed)
+        self._pending_snaps: List[paged_cache.PendingSnapshot] = []
         self.stats: Dict[str, float] = {
             "tokens": 0, "requests": 0, "prefill_steps": 0,
             "decode_steps": 0, "preemptions": 0}
@@ -118,11 +142,19 @@ class Engine:
         """One scheduler iteration: admit, then one prefill-chunk step if
         any sequence is still prefilling, else one batched decode step.
         Returns False when nothing could run (allocator exhausted)."""
-        restored = self.sched.admit()
-        for seq in restored:
-            self.pools = paged_cache.restore_page_rows(
-                self.pools, seq.table.pages, seq.snapshot)
-            self.sched.restored(seq)
+        admitted = self.sched.admit()
+        fresh_pages: List[int] = []
+        for seq in admitted:
+            if seq.snapshot is not None:
+                self.pools = paged_cache.restore_page_rows(
+                    self.pools, seq.table.pages, seq.snapshot)
+                self.sched.restored(seq)
+            elif self.family.constant_state:
+                # constant-state pages are accumulators: a reused slot
+                # must start from zero, not the previous request's state
+                fresh_pages.extend(seq.table.pages)
+        if fresh_pages:
+            self.pools = paged_cache.zero_page_rows(self.pools, fresh_pages)
         work = self.sched.prefill_work()
         if work:
             self._prefill_step(work)
@@ -130,7 +162,25 @@ class Engine:
         ready = self.sched.decode_ready()
         if ready:
             return self._decode_step(ready)
-        return bool(restored)
+        return bool(admitted)
+
+    # -- snapshot fencing ----------------------------------------------------
+
+    def _fence_snapshots(self) -> None:
+        """The jit'd step donates the pool buffers; make sure every pending
+        copy-on-preempt slice has executed before they are reused. This
+        waits on the *device* compute only — the device->host transfer
+        keeps streaming underneath the next step."""
+        if self._pending_snaps:
+            for snap in self._pending_snaps:
+                snap.fence()
+            self._pending_snaps.clear()
+
+    def _run_step(self, tokens, pos, qv, tables):
+        self._fence_snapshots()
+        return self._step(self.params, self.pools, jnp.asarray(tokens),
+                          jnp.asarray(pos), jnp.asarray(qv),
+                          jnp.asarray(tables))
 
     # -- sampling -----------------------------------------------------------
 
@@ -174,9 +224,7 @@ class Engine:
             if seq.prefill_done:
                 finishing[i] = seq
                 last_row[i] = n - 1
-        logits, self.pools = self._step(
-            self.params, self.pools, jnp.asarray(tokens), jnp.asarray(pos),
-            jnp.asarray(qv), jnp.asarray(tables))
+        logits, self.pools = self._run_step(tokens, pos, qv, tables)
         rows = jnp.take_along_axis(
             logits[:, :, : self.cfg.vocab],
             jnp.asarray(last_row)[:, None, None], axis=1)[:, 0]
@@ -193,7 +241,9 @@ class Engine:
     # -- decode -------------------------------------------------------------
 
     def _evict(self, victim: Sequence) -> None:
-        snap = paged_cache.pool_page_rows(self.pools, victim.table.pages)
+        snap = paged_cache.snapshot_page_rows_async(self.pools,
+                                                    victim.table.pages)
+        self._pending_snaps.append(snap)
         self.sched.evicted(victim, snap)
         self.stats["preemptions"] += 1
 
@@ -222,9 +272,7 @@ class Engine:
             pos[i, 0] = seq.table.length
             qv[i, 0] = True
             tables[i] = seq.table.padded(m)
-        logits, self.pools = self._step(
-            self.params, self.pools, jnp.asarray(tokens), jnp.asarray(pos),
-            jnp.asarray(qv), jnp.asarray(tables))
+        logits, self.pools = self._run_step(tokens, pos, qv, tables)
         toks = self._sample_rows(logits[:, 0, : self.cfg.vocab], batch, b)
         now = time.time()
         for i, seq in enumerate(batch):
@@ -251,10 +299,26 @@ class Engine:
 
     # -- introspection ------------------------------------------------------
 
+    @property
+    def free_pages(self) -> int:
+        return self.sched.alloc.free_pages
+
+    @property
+    def usable_pages(self) -> int:
+        """Pool pages available to requests (page 0 is the null page)."""
+        return max(self.sched_cfg.num_pages - 1, 1)
+
+    @property
+    def free_fraction(self) -> float:
+        """Fraction of the usable pool currently free (router pressure)."""
+        return self.free_pages / self.usable_pages
+
     def cache_report(self, max_len: Optional[int] = None) -> Dict[str, float]:
         ml = max_len or (self.sched_cfg.table_width * self.sched_cfg.page_size)
         return {"family": self.family.name,
                 "bytes_per_token_per_layer":
-                    self.family.bytes_per_token(self.cfg, ml),
+                    self.family.bytes_per_token(self.cfg, ml, self.paged),
                 "pool_bytes": paged_cache.pool_bytes(self.pools),
+                "pool_bytes_per_device":
+                    paged_cache.pool_bytes_per_device(self.pools),
                 "free_pages": self.sched.alloc.free_pages}

@@ -15,6 +15,7 @@ For simplicity slots share a common max_len; prefill runs per-request
 from __future__ import annotations
 
 import time
+import warnings
 from typing import Dict, List, Optional
 
 import jax
@@ -24,6 +25,13 @@ import numpy as np
 from repro.launch import steps as step_lib
 from repro.models import transformer as model_lib
 from .engine import Request
+
+warnings.warn(
+    "repro.serving.legacy is deprecated; use the paged engine "
+    "(repro.serving.Engine — continuous batching over pooled paged "
+    "caches, mesh-shardable via Engine(mesh=...)). The per-slot "
+    "lock-step engine is kept only as the benchmark baseline.",
+    DeprecationWarning, stacklevel=2)
 
 
 class Engine:

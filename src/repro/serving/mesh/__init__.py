@@ -1,0 +1,12 @@
+"""Mesh-sharded paged serving: distributed page pools, a cross-host
+request router, and the shard_map-wrapped paged decode step.
+
+``shard.py`` owns the layout contract (which pool/param dims go on the
+mesh's ``model`` axis, and when a family degrades to replication);
+``router.py`` spreads requests across per-host ``Engine`` replicas by
+free-page pressure and migrates waiting requests off saturated hosts.
+The shard_map step itself is built by ``launch.steps.make_paged_step``
+so the engine keeps a single step-factory entry point.
+"""
+from .router import Router, RouterConfig                 # noqa: F401
+from .shard import paged_tp, pool_specs, serving_param_specs  # noqa: F401

@@ -1,0 +1,192 @@
+"""Cross-host request router over paged-serving engine replicas.
+
+Each replica is one :class:`~repro.serving.engine.Engine` — on a real
+deployment one host (or one model-parallel mesh slice of hosts), in
+tests a device-subset mesh of the forced host platform. The router is
+pure host-side control plane, mirroring the scheduler/engine split one
+level up: engines own device state, the router decides *which* engine a
+request lives on.
+
+Placement policy: free-page **pressure**. A request is admitted to the
+replica whose pool has the most free pages per queued demand (each
+waiting request discounts its page need from the replica's headroom), so
+short bursts spread instead of piling onto replica 0. While draining,
+the router also *migrates* waiting requests off saturated replicas —
+any sequence still in a replica's admission queue holds no device pages
+(fresh requests trivially; evicted ones only a host-side snapshot), so
+moving it is a scheduler hand-off (``Scheduler.release_waiting`` /
+``adopt``), never a device copy.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional
+
+from ..engine import Engine, Request
+from ..scheduler import Sequence
+
+
+@dataclass(frozen=True)
+class RouterConfig:
+    migrate: bool = True
+    # a replica is "saturated" when its discounted headroom is below this
+    # fraction of the pool while another replica has at least twice the
+    # absolute headroom — the hysteresis keeps requests from ping-ponging.
+    saturation: float = 0.125
+    migrate_per_round: int = 4       # bound control-plane work per step
+
+
+class Router:
+    """Spread requests across engine replicas; migrate under pressure."""
+
+    def __init__(self, engines: List[Engine],
+                 cfg: Optional[RouterConfig] = None):
+        if not engines:
+            raise ValueError("router needs >= 1 engine replica")
+        fam = engines[0].family.name
+        if any(e.family.name != fam for e in engines):
+            raise ValueError("router replicas must serve one cache family")
+        self.engines = list(engines)
+        self.cfg = cfg or RouterConfig()
+        self.home: Dict[int, int] = {}       # request uid -> replica index
+        self.stats: Dict[str, float] = {"submitted": 0, "migrations": 0,
+                                        "steps": 0}
+
+    # -- pressure ------------------------------------------------------------
+
+    def _demand_pages(self, eng: Engine, seq: Sequence) -> int:
+        """Pages the sequence will need at admission on this replica."""
+        if seq.snapshot is not None:
+            return max(len(seq.snapshot_pages), 1)
+        return eng.sched._pages_for(max(seq.prompt_len, 1))
+
+    def _headroom(self, eng: Engine) -> int:
+        """Free pages minus the queued demand already bound for ``eng``."""
+        queued = sum(self._demand_pages(eng, s) for s in eng.sched.waiting)
+        return eng.free_pages - queued
+
+    def pressure(self) -> List[int]:
+        return [self._headroom(e) for e in self.engines]
+
+    # -- submission ----------------------------------------------------------
+
+    def submit(self, req: Request) -> int:
+        """Route to the replica with the most discounted headroom that can
+        hold the request at all; returns the replica index."""
+        hr = self.pressure()
+        for idx in sorted(range(len(self.engines)), key=lambda i: -hr[i]):
+            eng = self.engines[idx]
+            if not eng.sched.fits(req):
+                continue
+            eng.submit(req)
+            self.home[req.uid] = idx
+            self.stats["submitted"] += 1
+            return idx
+        raise ValueError(
+            f"request uid={req.uid} fits no replica "
+            f"(prompt={len(req.prompt)} + max_new={req.max_new})")
+
+    # -- migration -----------------------------------------------------------
+
+    @staticmethod
+    def _pool_signature(eng: Engine):
+        """Per-segment (leaf name, dtype, page-row shape) — everything a
+        snapshot scatter must agree on except the pool's page COUNT."""
+        return tuple(
+            tuple(sorted((k, str(v.dtype), v.shape[:1] + v.shape[2:])
+                         for k, v in seg.items()))
+            for seg in eng.pools)
+
+    def _can_place(self, src: Engine, dst: Engine, seq: Sequence) -> bool:
+        """Whether ``seq`` can be adopted by ``dst``. A preemption
+        snapshot scatters page rows verbatim, so the full page geometry —
+        page_size AND pool leaf structure/dtype/row shape (int8 vs fp
+        pools, bf16 vs f32 configs) — must match exactly; heterogeneous
+        pools can still serve together, but snapshot-carrying sequences
+        are pinned to like-shaped replicas. Any non-constant-state
+        sequence must also fit the destination's token capacity."""
+        dc = dst.sched_cfg
+        if seq.snapshot is not None:
+            if src.sched_cfg.page_size != dc.page_size:
+                return False
+            if len(seq.snapshot_pages) > dc.table_width:
+                return False
+            if self._pool_signature(src) != self._pool_signature(dst):
+                return False
+        return dst.sched.fits(seq.req)
+
+    def migrate(self) -> int:
+        """Move waiting sequences from saturated replicas to roomy ones.
+        Returns how many were moved this round."""
+        if not self.cfg.migrate or len(self.engines) < 2:
+            return 0
+        moved = 0
+        for src_i, src in enumerate(self.engines):
+            if moved >= self.cfg.migrate_per_round:
+                break
+            src_hr = self._headroom(src)
+            if src_hr >= self.cfg.saturation * src.usable_pages:
+                continue
+            # saturated: offload the tail of the waiting queue (the head
+            # is closest to admission here; the tail pays the wait)
+            for seq in sorted(src.sched.waiting, key=src.sched._rank,
+                              reverse=True):
+                if moved >= self.cfg.migrate_per_round:
+                    break
+                hr = self.pressure()
+                dst_i = max(range(len(self.engines)), key=lambda i: hr[i])
+                dst = self.engines[dst_i]
+                if dst_i == src_i or hr[dst_i] < max(2 * src_hr, 1):
+                    break                    # nowhere meaningfully roomier
+                if hr[dst_i] < self._demand_pages(dst, seq) or \
+                        not self._can_place(src, dst, seq):
+                    continue                 # THIS seq doesn't fit; smaller
+                                             # ones behind it still might
+                src.sched.release_waiting(seq)
+                dst.sched.adopt(seq)
+                self.home[seq.req.uid] = dst_i
+                self.stats["migrations"] += 1
+                moved += 1
+                src_hr = self._headroom(src)
+        return moved
+
+    # -- driving -------------------------------------------------------------
+
+    @property
+    def has_work(self) -> bool:
+        return any(e.sched.has_work for e in self.engines)
+
+    def step(self) -> bool:
+        """One round: each busy replica takes one engine step, then one
+        migration pass. Returns whether anything progressed."""
+        progressed = False
+        for eng in self.engines:
+            if eng.sched.has_work:
+                progressed = eng.step() or progressed
+        if self.migrate() > 0:
+            progressed = True
+        self.stats["steps"] += 1
+        return progressed
+
+    def run(self) -> List[Request]:
+        """Drain all submitted requests; returns the completed ones."""
+        tracked = [s.req for e in self.engines
+                   for s in e.sched.waiting + e.sched.running]
+        stall = 0
+        while self.has_work:
+            progressed = self.step()
+            stall = 0 if progressed else stall + 1
+            if stall > 2 + len(self.engines):
+                free = [e.free_pages for e in self.engines]
+                raise RuntimeError(
+                    f"router stalled: no replica can place the remaining "
+                    f"requests (free pages per replica: {free})")
+        return [r for r in tracked if r.done]
+
+    def describe(self) -> Dict:
+        return {"replicas": len(self.engines),
+                "free_pages": [e.free_pages for e in self.engines],
+                "free_fraction": [round(e.free_fraction, 3)
+                                  for e in self.engines],
+                "per_engine_stats": [dict(e.stats) for e in self.engines],
+                **{k: v for k, v in self.stats.items()}}

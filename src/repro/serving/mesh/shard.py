@@ -1,0 +1,166 @@
+"""Pool / parameter layout for mesh-sharded paged serving.
+
+The contract mirrors ``distributed/sharding.py``'s dense-cache rules:
+the *model* axis shards the head (or feature) dim of every pool family,
+and any dim that does not divide the axis DEGRADES to replication — the
+framework never refuses a config for divisibility. Page *tables* stay
+host-local (they are scheduler bookkeeping; only the pools are device
+state).
+
+Per-family layout (leaf shapes carry a leading layer axis L):
+
+=========  =========================================  ==================
+family     pool leaf (global shape)                   model-axis dim
+=========  =========================================  ==================
+``kv``     k/v        (L, N, P, Hkv, hd)              3 (kv heads)
+           k/v_scale  (L, N, P, 1)    [int8 pools]    replicated (tiny)
+``srf``    s          (L, N, Hq, m, dv)               2 (q heads)
+           z          (L, N, Hq, m)                   2 (q heads)
+``mla``    c / kpe    (L, N, P, lora|rope)            replicated (the
+                                                      latent IS the
+                                                      compressed form)
+``ssd``    conv / ssm (L, N, ...)                     replicated (O(1)
+                                                      constant state)
+=========  =========================================  ==================
+
+Head-sharded pools only work when the q/kv head counts divide the model
+axis AND the attention projections are sliced the same way (column-
+parallel wq/wk/wv, row-parallel wo — the Megatron split), so
+``paged_tp`` is the single gate: it returns the effective tensor-
+parallel width (1 = fully replicated serving) and every other helper
+derives from it.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, List
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.distributed import sharding as S
+
+
+def paged_tp(cfg, mesh) -> int:
+    """Effective model-axis TP width for paged serving.
+
+    The mesh's ``model`` axis size when the serving family shards (kv /
+    srf with dividing head counts), else 1 — the replication-degradation
+    contract of ``distributed/sharding.py`` applied to page pools. The
+    whole layout degrades at once: a partially sharded attention (pools
+    split but projections whole) cannot run per-shard.
+    """
+    tp = S.axis_size(mesh, "model")
+    if tp <= 1:
+        return 1
+    from repro.serving import paged_cache
+    fam = paged_cache.family_for(cfg).name
+    if fam not in ("kv", "srf"):
+        return 1                       # mla latents / ssd states: replicate
+    if cfg.n_heads % tp or cfg.n_kv_heads % tp:
+        return 1
+    if fam == "srf":
+        n_pm = cfg.n_heads if cfg.is_mla else cfg.n_kv_heads
+        if n_pm % tp:                  # per-head P-model param stacks
+            return 1
+    return tp
+
+
+# ---------------------------------------------------------------------------
+# pool specs
+# ---------------------------------------------------------------------------
+
+def _pool_leaf_spec(name: str, ndim: int, fam: str, tp: int) -> P:
+    ent = [None] * ndim
+    if tp > 1:
+        if fam == "kv" and name in ("k", "v") and ndim == 5:
+            ent[3] = "model"                       # (L, N, P, Hkv, hd)
+        elif fam == "srf" and name in ("s", "z") and ndim >= 4:
+            ent[2] = "model"                       # (L, N, Hq, ...)
+    return P(*ent)
+
+
+def pool_specs(cfg, mesh, paged=None) -> List[Dict]:
+    """PartitionSpec pytree matching ``paged_cache.init_pools`` output."""
+    from repro.models import transformer as model_lib
+    from repro.serving import paged_cache
+    fam = paged_cache.family_for(cfg)
+    tp = paged_tp(cfg, mesh)
+    one = jax.eval_shape(
+        lambda: fam.layer_pool(cfg, 2, 2, paged))
+    seg_spec = {k: _pool_leaf_spec(k, v.ndim + 1, fam.name, tp)
+                for k, v in one.items()}
+    return [dict(seg_spec) for _ in model_lib.segments(cfg)]
+
+
+def place_pools(pools: List[Dict], cfg, mesh, paged=None) -> List[Dict]:
+    """Lay freshly initialized pools out on the mesh (NamedSharding)."""
+    specs = pool_specs(cfg, mesh, paged)
+    return [jax.tree.map(
+                lambda a, s: jax.device_put(a, NamedSharding(mesh, s)), p, sp)
+            for p, sp in zip(pools, specs)]
+
+
+# ---------------------------------------------------------------------------
+# param specs (serving flavor: TP on attention only)
+# ---------------------------------------------------------------------------
+
+_STACKED = re.compile(r"^segments/\d+/")
+
+# column parallel only: slice the output (head-block) dim of q/k/v (and
+# the MLA up-projections) so each shard computes its own heads. wo stays
+# REPLICATED on purpose: the step all-gathers the per-shard head blocks
+# (collectives.stitch_heads) and contracts the full wo locally, which
+# reduces d_model in exactly the single-host order — greedy tokens stay
+# bit-identical, where a row-parallel wo + psum re-associates the sum.
+# MLP / embed / head / norms stay replicated too: serving batches are
+# small, attention state is what scales.
+_COL = re.compile(r"(attn|cross)/(wq|wk|wv|wuk|wuv)$")
+_BIAS = re.compile(r"attn/(bq|bk|bv)$")
+_SRF = re.compile(r"attn/srf/")
+
+
+def _serving_rule(path: str, shape, tp: int) -> P:
+    ent = [None] * len(shape)
+    if tp <= 1:
+        return P(*ent)
+    if _COL.search(path) and len(shape) == 2 and shape[1] % tp == 0:
+        ent[1] = "model"
+    elif _BIAS.search(path) and len(shape) == 1 and shape[0] % tp == 0:
+        ent[0] = "model"
+    elif _SRF.search(path) and len(shape) >= 1 and shape[0] % tp == 0:
+        ent[0] = "model"               # per-kv-head P-model param stacks
+    return P(*ent)
+
+
+def serving_param_specs(params, cfg, mesh) -> Dict:
+    """Param specs for the shard_map'd paged step: attention projections
+    sliced over 'model' (per-shard heads match the per-shard pool heads),
+    everything else replicated. Fully replicated when ``paged_tp`` is 1.
+    """
+    tp = paged_tp(cfg, mesh)
+
+    def f(path, x):
+        ps = S._path_str(path)
+        if _STACKED.match(ps):
+            inner = _serving_rule(ps, x.shape[1:], tp)
+            return P(None, *inner)
+        return _serving_rule(ps, x.shape, tp)
+    return jax.tree_util.tree_map_with_path(f, params)
+
+
+def place_params(params, cfg, mesh) -> Dict:
+    specs = serving_param_specs(params, cfg, mesh)
+    return jax.tree.map(
+        lambda a, s: jax.device_put(a, NamedSharding(mesh, s)), params, specs)
+
+
+def local_cfg(cfg, tp: int):
+    """The per-shard view of the model config inside the shard_map body:
+    head counts divided by the TP width (q_dim/kv_dim are derived, so the
+    sliced wq/wk/wv/wo shapes line up automatically)."""
+    if tp <= 1:
+        return cfg
+    import dataclasses
+    return dataclasses.replace(cfg, n_heads=cfg.n_heads // tp,
+                               n_kv_heads=cfg.n_kv_heads // tp)

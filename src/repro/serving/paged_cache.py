@@ -24,7 +24,8 @@ scanned together with the stacked layer params (see
 """
 from __future__ import annotations
 
-from typing import Dict, List, Protocol, Tuple
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Protocol, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -32,6 +33,19 @@ import numpy as np
 
 from repro.core.transforms import is_pow2
 from repro.models import transformer as model_lib
+
+
+@dataclass(frozen=True)
+class PagedConfig:
+    """Pool-layout knobs orthogonal to the scheduler's SchedConfig.
+
+    ``quantize_kv``: store KV pages as int8 with f32 per-page-row (one per
+    cached token) scales — halves (bf16) or quarters (f32) the dominant
+    pool bytes; dequant is fused into the paged-gather kernel. Only the
+    ``kv`` family quantizes (MLA latents are already compressed, srf/ssd
+    states are constant-size).
+    """
+    quantize_kv: bool = False
 
 
 # ---------------------------------------------------------------------------
@@ -43,10 +57,12 @@ class CacheFamily(Protocol):
     name: str
     constant_state: bool     # True: one fixed-size page per request
 
-    def layer_pool(self, cfg, num_pages: int, page_size: int) -> Dict:
+    def layer_pool(self, cfg, num_pages: int, page_size: int,
+                   paged: Optional[PagedConfig] = None) -> Dict:
         """Single-layer pool pytree (leading axis = num_pages/slots)."""
 
-    def bytes_per_token(self, cfg, max_len: int) -> float:
+    def bytes_per_token(self, cfg, max_len: int,
+                        paged: Optional[PagedConfig] = None) -> float:
         """Decode-state bytes per cached token per layer (docs/stats)."""
 
 
@@ -58,11 +74,19 @@ class KVFamily:
     name = "kv"
     constant_state = False
 
-    def layer_pool(self, cfg, num_pages, page_size):
+    def layer_pool(self, cfg, num_pages, page_size, paged=None):
         shp = (num_pages, page_size, cfg.n_kv_heads, cfg.head_dim)
+        if paged is not None and paged.quantize_kv:
+            sshp = (num_pages, page_size, 1)
+            return {"k": jnp.zeros(shp, jnp.int8),
+                    "v": jnp.zeros(shp, jnp.int8),
+                    "k_scale": jnp.zeros(sshp, jnp.float32),
+                    "v_scale": jnp.zeros(sshp, jnp.float32)}
         return {"k": jnp.zeros(shp, _dt(cfg)), "v": jnp.zeros(shp, _dt(cfg))}
 
-    def bytes_per_token(self, cfg, max_len):
+    def bytes_per_token(self, cfg, max_len, paged=None):
+        if paged is not None and paged.quantize_kv:
+            return 2 * (cfg.n_kv_heads * cfg.head_dim + 4)   # int8 + f32 scale
         return 2 * cfg.n_kv_heads * cfg.head_dim * _dt(cfg).itemsize
 
 
@@ -70,11 +94,11 @@ class MLAFamily:
     name = "mla"
     constant_state = False
 
-    def layer_pool(self, cfg, num_pages, page_size):
+    def layer_pool(self, cfg, num_pages, page_size, paged=None):
         return {"c": jnp.zeros((num_pages, page_size, cfg.mla_kv_lora), _dt(cfg)),
                 "kpe": jnp.zeros((num_pages, page_size, cfg.mla_qk_rope), _dt(cfg))}
 
-    def bytes_per_token(self, cfg, max_len):
+    def bytes_per_token(self, cfg, max_len, paged=None):
         return (cfg.mla_kv_lora + cfg.mla_qk_rope) * _dt(cfg).itemsize
 
 
@@ -86,13 +110,13 @@ class SRFFamily:
         from repro.models.attention import srf_cfg
         return srf_cfg(cfg).feat_dim
 
-    def layer_pool(self, cfg, num_pages, page_size):
+    def layer_pool(self, cfg, num_pages, page_size, paged=None):
         m = self._feat_dim(cfg)
         dv = cfg.mla_v_dim if cfg.is_mla else cfg.head_dim
         return {"s": jnp.zeros((num_pages, cfg.n_heads, m, dv), _dt(cfg)),
                 "z": jnp.zeros((num_pages, cfg.n_heads, m), _dt(cfg))}
 
-    def bytes_per_token(self, cfg, max_len):
+    def bytes_per_token(self, cfg, max_len, paged=None):
         m = self._feat_dim(cfg)
         dv = cfg.mla_v_dim if cfg.is_mla else cfg.head_dim
         total = cfg.n_heads * m * (dv + 1) * _dt(cfg).itemsize
@@ -103,13 +127,13 @@ class SSDFamily:
     name = "ssd"
     constant_state = True
 
-    def layer_pool(self, cfg, num_pages, page_size):
+    def layer_pool(self, cfg, num_pages, page_size, paged=None):
         cd = cfg.d_inner + 2 * cfg.ssm_state
         return {"conv": jnp.zeros((num_pages, cfg.ssm_conv - 1, cd), _dt(cfg)),
                 "ssm": jnp.zeros((num_pages, cfg.ssm_heads, cfg.ssm_state,
                                   cfg.ssm_head_dim), jnp.float32)}
 
-    def bytes_per_token(self, cfg, max_len):
+    def bytes_per_token(self, cfg, max_len, paged=None):
         cd = cfg.d_inner + 2 * cfg.ssm_state
         total = ((cfg.ssm_conv - 1) * cd * _dt(cfg).itemsize
                  + cfg.ssm_heads * cfg.ssm_state * cfg.ssm_head_dim * 4)
@@ -139,33 +163,102 @@ def family_for(cfg) -> CacheFamily:
 # pool container
 # ---------------------------------------------------------------------------
 
-def init_pools(cfg, num_pages: int, page_size: int) -> List[Dict]:
+def init_pools(cfg, num_pages: int, page_size: int, mesh=None,
+               paged: Optional[PagedConfig] = None) -> List[Dict]:
     """One pool pytree per model segment, leading axis = layer count.
 
     All layers of a segment share shapes, so the per-layer pools are
-    stacked and scanned with the stacked layer params."""
+    stacked and scanned with the stacked layer params.
+
+    ``mesh``: lay the pools out with model-axis ``NamedSharding`` on the
+    head/feature dim (``serving.mesh.shard.pool_specs``), degrading to
+    replication whenever the dim does not divide — the same contract as
+    ``distributed/sharding.py``. The page *tables* stay host-local either
+    way (they are scheduler bookkeeping, not device state)."""
     fam = family_for(cfg)
     pools = []
     for kind, count in model_lib.segments(cfg):
-        one = fam.layer_pool(cfg, num_pages, page_size)
+        one = fam.layer_pool(cfg, num_pages, page_size, paged)
         pools.append(jax.tree.map(
             lambda a: jnp.broadcast_to(a[None], (count,) + a.shape), one))
+    if mesh is not None:
+        from .mesh import shard as mesh_shard
+        pools = mesh_shard.place_pools(pools, cfg, mesh, paged)
     return pools
 
 
 def pool_page_rows(pools: List[Dict], page_ids: List[int]) -> List[Dict]:
     """Copy-on-preempt snapshot: pull the given pages of every layer pool
-    to host memory (numpy) so they can be restored after eviction."""
+    to host memory (numpy) so they can be restored after eviction.
+    Synchronous (blocks on the transfer); the engine's hot path uses
+    :func:`snapshot_page_rows_async` instead."""
     idx = np.asarray(page_ids, np.int32)
     return [jax.tree.map(lambda a: np.asarray(a[:, idx]), p) for p in pools]
 
 
-def restore_page_rows(pools: List[Dict], page_ids: List[int],
-                      snap: List[Dict]) -> List[Dict]:
-    """Inverse of :func:`pool_page_rows`: scatter a snapshot back into
-    (freshly allocated) pages. Returns the updated pools."""
+class PendingSnapshot:
+    """Copy-on-preempt snapshot whose device->host transfer overlaps the
+    next decode step.
+
+    Eviction enqueues the page-row slice (a device computation producing
+    fresh buffers, so later in-place pool updates and donation cannot
+    clobber it) and immediately kicks off the non-blocking host transfer
+    (``copy_to_host_async``). The decode loop continues; ``to_host``
+    fences with ``jax.block_until_ready`` only when the snapshot is
+    actually needed (swap-in), by which time the bytes have usually
+    already streamed over."""
+
+    def __init__(self, slices: List[Dict]):
+        self._dev: Optional[List[Dict]] = slices
+        self._host: Optional[List[Dict]] = None
+        for leaf in jax.tree.leaves(slices):
+            try:
+                leaf.copy_to_host_async()
+            except AttributeError:      # non-jax leaf (already host)
+                pass
+
+    def fence(self) -> None:
+        """Block until the device-side slice has executed (the source pool
+        buffers are then dead to this snapshot — safe to donate)."""
+        if self._dev is not None:
+            jax.block_until_ready(self._dev)
+
+    def to_host(self) -> List[Dict]:
+        if self._host is None:
+            self._host = [jax.tree.map(np.asarray, p) for p in self._dev]
+            self._dev = None
+        return self._host
+
+
+def snapshot_page_rows_async(pools: List[Dict],
+                             page_ids: List[int]) -> PendingSnapshot:
+    """Async copy-on-preempt: returns a :class:`PendingSnapshot` whose
+    host transfer overlaps subsequent decode steps."""
     idx = jnp.asarray(page_ids, jnp.int32)
-    return [jax.tree.map(lambda a, s: a.at[:, idx].set(jnp.asarray(s)), p, sn)
+    return PendingSnapshot([jax.tree.map(lambda a: a[:, idx], p)
+                            for p in pools])
+
+
+def zero_page_rows(pools: List[Dict], page_ids: List[int]) -> List[Dict]:
+    """Reset the given pages of every layer pool to zero. Needed when a
+    freed page is re-issued to a fresh request of a constant-state family
+    (srf/ssd): those pages are running accumulators, so stale content is
+    not masked out downstream the way an unwritten KV row is."""
+    idx = jnp.asarray(page_ids, jnp.int32)
+    return [jax.tree.map(lambda a: a.at[:, idx].set(jnp.zeros((), a.dtype)), p)
+            for p in pools]
+
+
+def restore_page_rows(pools: List[Dict], page_ids: List[int],
+                      snap) -> List[Dict]:
+    """Inverse of :func:`pool_page_rows`: scatter a snapshot back into
+    (freshly allocated) pages. Accepts either the synchronous host-array
+    form or a :class:`PendingSnapshot`. Returns the updated pools."""
+    if isinstance(snap, PendingSnapshot):
+        snap = snap.to_host()
+    idx = jnp.asarray(page_ids, jnp.int32)
+    return [jax.tree.map(lambda a, s: a.at[:, idx].set(
+                jnp.asarray(s, dtype=a.dtype)), p, sn)
             for p, sn in zip(pools, snap)]
 
 
@@ -182,3 +275,20 @@ def apply_moves(pools: List[Dict], moves: Dict[int, int]) -> List[Dict]:
 def pool_bytes(pools: List[Dict]) -> int:
     return sum(int(np.prod(x.shape)) * x.dtype.itemsize
                for x in jax.tree.leaves(pools))
+
+
+def pool_bytes_per_device(pools: List[Dict]) -> int:
+    """Bytes one device holds: the per-shard slice for sharded leaves,
+    the full leaf for replicated ones (GLOBAL shape / axis product only
+    shrinks dims the NamedSharding actually splits)."""
+    total = 0
+    for x in jax.tree.leaves(pools):
+        shard_shape = x.shape
+        sharding = getattr(x, "sharding", None)
+        if sharding is not None:
+            try:
+                shard_shape = sharding.shard_shape(x.shape)
+            except Exception:
+                pass
+        total += int(np.prod(shard_shape)) * x.dtype.itemsize
+    return total

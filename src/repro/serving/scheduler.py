@@ -76,14 +76,22 @@ class Scheduler:
 
     # -- submission / admission --------------------------------------------
 
+    def fits(self, req) -> bool:
+        """Whether this scheduler's pool geometry can ever hold the
+        request (the admission capacity rule; shared with the router so
+        the two cannot drift)."""
+        if self.constant_state:
+            return True
+        return len(req.prompt) + req.max_new <= \
+            self.cfg.table_width * self.cfg.page_size
+
     def submit(self, req) -> Sequence:
         if len(req.prompt) == 0:
             raise ValueError("empty prompt (need >= 1 token to prefill)")
-        need = len(req.prompt) + req.max_new
-        cap = (self.cfg.table_width * self.cfg.page_size
-               if not self.constant_state else float("inf"))
-        if need > cap:
-            raise ValueError(f"request needs {need} tokens > capacity {cap}")
+        if not self.fits(req):
+            cap = self.cfg.table_width * self.cfg.page_size
+            raise ValueError(f"request needs {len(req.prompt) + req.max_new} "
+                             f"tokens > capacity {cap}")
         seq = Sequence(req=req, arrival=self._arrivals)
         self._arrivals += 1
         self.waiting.append(seq)
@@ -96,9 +104,12 @@ class Scheduler:
 
     def admit(self) -> List[Sequence]:
         """Move waiting sequences into the running set while pages last.
-        Returns newly admitted sequences that carry a preemption snapshot
-        (the engine must swap their pages back in)."""
-        restored = []
+        Returns ALL newly admitted sequences; the engine must swap pages
+        back in for those carrying a preemption snapshot and zero the
+        (possibly previously used) pages of fresh constant-state admits —
+        srf/ssd states are accumulators, so a stale page is live garbage,
+        not masked-out history like a stale KV row."""
+        admitted = []
         for seq in sorted(self.waiting, key=self._rank):
             if len(self.running) >= self.cfg.max_batch:
                 break
@@ -113,9 +124,8 @@ class Scheduler:
             self.waiting.remove(seq)
             self.running.append(seq)
             self.stats["admitted"] += 1
-            if seq.snapshot is not None:
-                restored.append(seq)
-        return restored
+            admitted.append(seq)
+        return admitted
 
     # -- prefill ------------------------------------------------------------
 
@@ -169,6 +179,23 @@ class Scheduler:
         self.alloc.free(seq.table.pages)
         seq.table.pages = []
         self.running.remove(seq)
+
+    # -- cross-replica migration (serving.mesh.router) ----------------------
+
+    def release_waiting(self, seq: Sequence) -> None:
+        """Detach a waiting sequence so another replica can adopt it.
+        Waiting sequences hold no pages (fresh or evicted-with-snapshot),
+        so nothing device-side needs to move with them."""
+        self.waiting.remove(seq)
+
+    def adopt(self, seq: Sequence) -> None:
+        """Take over a sequence released by another replica's scheduler.
+        Prefill progress and any preemption snapshot travel with it (the
+        snapshot is host memory and pool shapes match across replicas);
+        arrival is restamped so local FCFS ordering stays coherent."""
+        seq.arrival = self._arrivals
+        self._arrivals += 1
+        self.waiting.append(seq)
 
     def defrag(self):
         """Compact live pages to the low end of the pool. Returns the

@@ -1,0 +1,316 @@
+"""Mesh-sharded paged serving: layout/degradation rules, router placement
+and migration logic (host-side, single device), int8 paged KV pools, and
+an 8-device (forced host platform) subprocess end-to-end run — all four
+cache families served by 2 router-managed sharded replicas with greedy
+outputs matching the single-host paged engine, plus scheduler
+preemption/eviction and router migration under sharded pools."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import numpy as np
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs import registry
+from repro.models import transformer as T
+from repro.serving import (Engine, PagedConfig, Request, Router,
+                           RouterConfig, SchedConfig)
+from repro.serving.mesh import shard as mesh_shard
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _fake_mesh(width):
+    devs = np.array(jax.devices() * width)[:width].reshape(1, width)
+    return Mesh(devs, ("data", "model"))
+
+
+# ---------------------------------------------------------------------------
+# layout rules (no multi-device needed: specs are pure functions)
+# ---------------------------------------------------------------------------
+
+def test_paged_tp_gates_by_family_and_divisibility():
+    cfg_kv = registry.reduced("qwen3-4b")            # 4 q / 2 kv heads
+    assert mesh_shard.paged_tp(cfg_kv, _fake_mesh(2)) == 2
+    assert mesh_shard.paged_tp(cfg_kv, _fake_mesh(4)) == 1   # 2 kv heads % 4
+    cfg_srf = registry.reduced("qwen3-4b", attn_impl="srf")
+    assert mesh_shard.paged_tp(cfg_srf, _fake_mesh(2)) == 2
+    cfg_mla = registry.reduced("deepseek-v2-lite-16b")
+    assert mesh_shard.paged_tp(cfg_mla, _fake_mesh(2)) == 1  # latents replicate
+    cfg_ssd = registry.reduced("mamba2-2.7b")
+    assert mesh_shard.paged_tp(cfg_ssd, _fake_mesh(2)) == 1
+
+
+def test_pool_specs_shard_head_dim_only():
+    mesh = _fake_mesh(2)
+    cfg = registry.reduced("qwen3-4b")
+    specs = mesh_shard.pool_specs(cfg, mesh)
+    assert specs[0]["k"] == P(None, None, None, "model", None)
+    assert specs[0]["v"] == P(None, None, None, "model", None)
+    # int8 layout: values shard, the tiny per-row scales replicate
+    specs_q = mesh_shard.pool_specs(cfg, mesh, PagedConfig(quantize_kv=True))
+    assert specs_q[0]["k"] == P(None, None, None, "model", None)
+    assert specs_q[0]["k_scale"] == P(None, None, None, None)
+    cfg_srf = registry.reduced("qwen3-4b", attn_impl="srf")
+    specs_s = mesh_shard.pool_specs(cfg_srf, mesh)
+    assert specs_s[0]["s"] == P(None, None, "model", None, None)
+    assert specs_s[0]["z"] == P(None, None, "model", None)
+    # degradation: everything replicated
+    cfg_mla = registry.reduced("deepseek-v2-lite-16b")
+    for s in mesh_shard.pool_specs(cfg_mla, mesh)[0].values():
+        assert all(e is None for e in s)
+
+
+def test_serving_param_specs_attention_only():
+    mesh = _fake_mesh(2)
+    cfg = registry.reduced("qwen3-4b", n_layers=2)
+    params = jax.eval_shape(lambda: T.init(jax.random.PRNGKey(0), cfg))
+    specs = mesh_shard.serving_param_specs(params, cfg, mesh)
+    seg = specs["segments"][0]
+    assert seg["attn"]["wq"] == P(None, None, "model")   # stacked + col
+    assert seg["attn"]["wk"] == P(None, None, "model")
+    # wo REPLICATED by design (bit-identical greedy; see shard.py)
+    assert seg["attn"]["wo"] == P(None, None, None)
+    assert seg["mlp"]["wi"] == P(None, None, None)       # mlp replicated
+    assert all(e is None for e in specs["embed"]["tok"])
+
+
+# ---------------------------------------------------------------------------
+# int8 paged KV (single device)
+# ---------------------------------------------------------------------------
+
+def test_int8_paged_kv_close_to_fp_and_smaller():
+    cfg = registry.reduced("qwen3-4b", n_layers=2)
+    params = T.init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab, int(rng.integers(4, 20)))
+               .astype(np.int32) for _ in range(8)]
+
+    def drive(paged):
+        eng = Engine(cfg, params, batch_slots=8, max_len=64, paged=paged)
+        for i, p in enumerate(prompts):
+            eng.submit(Request(uid=i, prompt=p.copy(), max_new=8))
+        done = eng.run()
+        return {r.uid: r.out_tokens for r in done}, eng.cache_report()
+
+    out_fp, rep_fp = drive(None)
+    out_q, rep_q = drive(PagedConfig(quantize_kv=True))
+    assert len(out_q) == 8
+    # int8 pool (+ scales) is smaller than the f32 pool
+    assert rep_q["pool_bytes"] < 0.5 * rep_fp["pool_bytes"]
+    assert rep_q["bytes_per_token_per_layer"] < \
+        rep_fp["bytes_per_token_per_layer"]
+    # quantization is lossy; greedy tokens still mostly agree on a
+    # random-init reduced model (sanity that dequant is wired right)
+    agree = sum(a == b for u in out_fp
+                for a, b in zip(out_fp[u], out_q[u]))
+    total = sum(len(v) for v in out_fp.values())
+    assert agree / total > 0.5, (agree, total)
+
+
+def test_int8_quantize_kv_only_affects_kv_family():
+    from repro.serving import paged_cache
+    cfg = registry.reduced("mamba2-2.7b")
+    pools = paged_cache.init_pools(cfg, 4, 8,
+                                   paged=PagedConfig(quantize_kv=True))
+    assert "k_scale" not in pools[0]
+
+
+# ---------------------------------------------------------------------------
+# router logic (single device, no mesh: pure host-side control plane)
+# ---------------------------------------------------------------------------
+
+def test_router_spreads_by_free_page_pressure():
+    cfg = registry.reduced("qwen3-4b", n_layers=2)
+    params = T.init(jax.random.PRNGKey(0), cfg)
+    engines = [Engine(cfg, params, batch_slots=4, max_len=64)
+               for _ in range(2)]
+    router = Router(engines)
+    for i in range(8):
+        router.submit(Request(uid=i, prompt=np.arange(1, 6, dtype=np.int32),
+                              max_new=4))
+    homes = [router.home[i] for i in range(8)]
+    assert set(homes) == {0, 1}                  # both replicas used
+    done = router.run()
+    assert len(done) == 8
+    assert all(e.stats["requests"] > 0 for e in engines)
+
+
+def test_router_migrates_waiting_off_saturated_replica():
+    cfg = registry.reduced("qwen3-4b", n_layers=2)
+    params = T.init(jax.random.PRNGKey(0), cfg)
+    # replica 0: tiny pool (1 request at a time); replica 1: roomy
+    tight = SchedConfig(max_batch=1, prefill_batch=1, prefill_chunk=8,
+                        page_size=8, num_pages=3, table_width=2)
+    roomy = SchedConfig(max_batch=4, prefill_batch=4, prefill_chunk=8,
+                        page_size=8, num_pages=33, table_width=2)
+    e0 = Engine(cfg, params, sched=tight)
+    e1 = Engine(cfg, params, sched=roomy)
+    router = Router([e0, e1], RouterConfig(migrate=True))
+    # submit straight into replica 0's queue to create a local backlog
+    # (bypassing placement, as if the pressure estimate had been stale)
+    for i in range(5):
+        e0.submit(Request(uid=i, prompt=np.arange(1, 7, dtype=np.int32),
+                          max_new=4))
+        router.home[i] = 0
+    done = router.run()
+    assert len(done) == 5
+    assert router.stats["migrations"] > 0
+    assert e1.stats["requests"] > 0              # migrated work really ran
+    assert all(len(r.out_tokens) == 4 for r in done)
+
+
+def test_migrated_outputs_match_unmigrated():
+    cfg = registry.reduced("qwen3-4b", n_layers=2)
+    params = T.init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, cfg.vocab, int(rng.integers(3, 12)))
+               .astype(np.int32) for _ in range(5)]
+
+    solo = Engine(cfg, params, batch_slots=4, max_len=64)
+    for i, p in enumerate(prompts):
+        solo.submit(Request(uid=i, prompt=p.copy(), max_new=5))
+    want = {r.uid: r.out_tokens for r in solo.run()}
+
+    tight = SchedConfig(max_batch=1, prefill_batch=1, prefill_chunk=8,
+                        page_size=8, num_pages=3, table_width=2)
+    e0 = Engine(cfg, params, sched=tight)
+    e1 = Engine(cfg, params, batch_slots=4, max_len=64)
+    router = Router([e0, e1])
+    for i, p in enumerate(prompts):
+        e0.submit(Request(uid=i, prompt=p.copy(), max_new=5))
+        router.home[i] = 0
+    got = {r.uid: r.out_tokens for r in router.run()}
+    assert router.stats["migrations"] > 0
+    assert got == want
+
+
+# ---------------------------------------------------------------------------
+# 8-device subprocess: sharded pools end to end
+# ---------------------------------------------------------------------------
+
+_SUBPROC = textwrap.dedent("""
+    import os, json
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    os.environ["JAX_PLATFORMS"] = "cpu"
+    import jax, numpy as np
+    from repro.configs import registry
+    from repro.launch import mesh as mesh_lib
+    from repro.models import transformer as T
+    from repro.serving import (Engine, PagedConfig, Request, Router,
+                               SchedConfig)
+    from repro.serving.mesh import shard as mesh_shard
+
+    FAMS = [("kv", "qwen3-4b", {}),
+            ("srf", "qwen3-4b", {"attn_impl": "srf"}),
+            ("mla", "deepseek-v2-lite-16b", {}),
+            ("ssd", "mamba2-2.7b", {})]
+    rng = np.random.default_rng(0)
+    for fam, arch, over in FAMS:
+        cfg = registry.reduced(arch, n_layers=2, **over)
+        params = T.init(jax.random.PRNGKey(0), cfg)
+        spec = [(int(rng.integers(2, 20)), int(rng.integers(3, 8)))
+                for _ in range(16)]
+        prompts = [rng.integers(0, cfg.vocab, pl).astype(np.int32)
+                   for pl, _ in spec]
+
+        single = Engine(cfg, params, batch_slots=8, max_len=64)
+        for i, ((pl, mn), p) in enumerate(zip(spec, prompts)):
+            single.submit(Request(uid=i, prompt=p, max_new=mn))
+        want = {r.uid: r.out_tokens for r in single.run()}
+
+        meshes = mesh_lib.make_serving_meshes(replicas=2, model_parallel=2)
+        router = Router([Engine(cfg, params, batch_slots=8, max_len=64,
+                                mesh=m) for m in meshes])
+        for i, ((pl, mn), p) in enumerate(zip(spec, prompts)):
+            router.submit(Request(uid=i, prompt=p.copy(), max_new=mn))
+        got = {r.uid: r.out_tokens for r in router.run()}
+
+        assert got == want, f"{fam}: token mismatch"
+        assert len(got) == 16, fam
+        assert all(e.stats["requests"] > 0 for e in router.engines), fam
+        tp = mesh_shard.paged_tp(cfg, meshes[0])
+        pbd = router.engines[0].cache_report()["pool_bytes_per_device"]
+        pb = single.cache_report()["pool_bytes"]
+        if tp > 1:                      # kv / srf shard; mla / ssd exempt
+            assert pbd * tp == pb, (fam, pbd, pb)
+        else:
+            assert pbd == pb, (fam, pbd, pb)
+        print(f"FAM_OK {fam} tp={tp}")
+
+    # preemption/eviction with sharded pools: tight pool forces evictions,
+    # copy-on-preempt (async snapshots) + swap-in stays bit-exact
+    cfg = registry.reduced("qwen3-4b", n_layers=2)
+    params = T.init(jax.random.PRNGKey(0), cfg)
+    mesh = mesh_lib.make_serving_meshes(replicas=1, model_parallel=2)[0]
+    prompts = [rng.integers(0, cfg.vocab, 3).astype(np.int32)
+               for _ in range(4)]
+    def drive(s, m):
+        e = Engine(cfg, params, batch_slots=4, max_len=16, sched=s, mesh=m)
+        for i, p in enumerate(prompts):
+            e.submit(Request(uid=i, prompt=p.copy(), max_new=10))
+        d = e.run()
+        return {r.uid: r.out_tokens for r in d}, e.stats["preemptions"]
+    tight = SchedConfig(max_batch=4, prefill_batch=2, prefill_chunk=4,
+                        page_size=4, num_pages=9, table_width=4)
+    roomy = SchedConfig(max_batch=4, prefill_batch=2, prefill_chunk=4,
+                        page_size=4, num_pages=33, table_width=4)
+    out_tight, n_pre = drive(tight, mesh)
+    out_roomy, _ = drive(roomy, None)
+    assert n_pre > 0, "pool not tight enough to force preemption"
+    assert out_tight == out_roomy
+    print("PREEMPT_OK", n_pre)
+
+    # int8 pools under sharding: quantized values shard on the head dim,
+    # the pmax'd scales replicate — greedy tokens bit-match the
+    # single-host int8 engine
+    pc = PagedConfig(quantize_kv=True)
+    q_ref = Engine(cfg, params, batch_slots=4, max_len=16, paged=pc)
+    q_sh = Engine(cfg, params, batch_slots=4, max_len=16, paged=pc,
+                  mesh=mesh)
+    for i, p in enumerate(prompts):
+        q_ref.submit(Request(uid=i, prompt=p.copy(), max_new=6))
+        q_sh.submit(Request(uid=i, prompt=p.copy(), max_new=6))
+    qw = {r.uid: r.out_tokens for r in q_ref.run()}
+    qg = {r.uid: r.out_tokens for r in q_sh.run()}
+    assert qg == qw, "int8 sharded tokens diverge from single host"
+    assert q_sh.cache_report()["pool_bytes_per_device"] < \
+        q_ref.cache_report()["pool_bytes"]
+    print("INT8_MESH_OK")
+
+    # router migration with sharded replicas: a single-slot replica with a
+    # fresh-request backlog drains through the roomy one, outputs unchanged
+    # (page geometries differ, so the router's _can_place gate keeps any
+    # snapshot-carrying sequence home and migrates the fresh ones)
+    meshes = mesh_lib.make_serving_meshes(replicas=2, model_parallel=2)
+    slot1 = SchedConfig(max_batch=1, prefill_batch=1, prefill_chunk=4,
+                        page_size=4, num_pages=5, table_width=4)
+    e0 = Engine(cfg, params, sched=slot1, mesh=meshes[0])
+    e1 = Engine(cfg, params, batch_slots=4, max_len=16, mesh=meshes[1])
+    router = Router([e0, e1])
+    for i, p in enumerate(prompts):
+        e0.submit(Request(uid=i, prompt=p.copy(), max_new=10))
+        router.home[i] = 0
+    got = {r.uid: r.out_tokens for r in router.run()}
+    assert got == out_roomy
+    assert router.stats["migrations"] > 0
+    assert e1.stats["requests"] > 0
+    print("MIGRATE_OK", router.stats["migrations"])
+""")
+
+
+@pytest.mark.slow
+def test_mesh_serving_subprocess_end_to_end():
+    env = dict(os.environ, PYTHONPATH=SRC)
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", _SUBPROC], env=env,
+                         capture_output=True, text=True, timeout=900)
+    tail = out.stdout + out.stderr[-3000:]
+    for fam in ("kv", "srf", "mla", "ssd"):
+        assert f"FAM_OK {fam}" in out.stdout, tail
+    assert "PREEMPT_OK" in out.stdout, tail
+    assert "INT8_MESH_OK" in out.stdout, tail
+    assert "MIGRATE_OK" in out.stdout, tail

@@ -80,6 +80,28 @@ def test_paged_gather_kernel_matches_ref(shape):
     np.testing.assert_allclose(np.asarray(got_ref), np.asarray(want))
 
 
+@pytest.mark.parametrize("shape", [(6, 4, 8), (10, 8, 16)])
+def test_paged_gather_dequant_kernel_matches_ref(shape):
+    n, p, d = shape
+    pool = jax.random.randint(jax.random.PRNGKey(0), (n, p, d), -127, 128,
+                              jnp.int8)
+    scales = jax.random.uniform(jax.random.PRNGKey(1), (n, p, 1),
+                                jnp.float32, 0.01, 0.1)
+    tables = jax.random.randint(jax.random.PRNGKey(2), (3, 4), 0, n)
+    want = ref.paged_gather_dequant_ref(pool, scales, tables)
+    got = ops.paged_gather_dequant(pool, scales, tables, use_pallas=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want))
+    got_ref = ops.paged_gather_dequant(pool, scales, tables,
+                                       use_pallas=False)
+    np.testing.assert_allclose(np.asarray(got_ref), np.asarray(want))
+    # manual dequant oracle
+    idx = np.asarray(tables)
+    oracle = np.asarray(pool).astype(np.float32)[idx] * \
+        np.asarray(scales)[idx]
+    np.testing.assert_allclose(
+        np.asarray(want), oracle.reshape(3, 4 * p, d))
+
+
 # ---------------------------------------------------------------------------
 # engine end-to-end per family
 # ---------------------------------------------------------------------------
