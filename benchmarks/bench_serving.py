@@ -3,9 +3,10 @@ per-slot engine, and single-host vs mesh-sharded serving — tokens/s and
 time-to-first-token across cache families and concurrency levels.
 
 Suite mode (``python -m benchmarks.run --only serving``) runs a fast
-smoke (two families, 8 requests, one mesh cell) so the tier-1 flow
-exercises the serving path; the full sweep (8–64 concurrent requests x
-all four families) runs via
+smoke (kv/srf plus the mixed-geometry hybrid and enc-dec plans, 8
+requests, one mesh cell) so the tier-1 flow exercises the serving path;
+the full sweep (8–64 concurrent requests x all six families, hybrid and
+enc-dec included) runs via
 
     PYTHONPATH=src python -m benchmarks.bench_serving --full
 
@@ -33,19 +34,27 @@ FAMILIES = [
     ("srf", "qwen3-4b", {"attn_impl": "srf"}),
     ("mla", "deepseek-v2-lite-16b", {}),
     ("ssd", "mamba2-2.7b", {}),
+    ("hybrid", "hymba-1.5b", {}),
+    ("encdec", "seamless-m4t-large-v2", {}),
 ]
 
 _SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
 
 def _requests(cfg, n, seed=0):
+    from repro.models import frontends
     from repro.serving import Request
     rng = np.random.default_rng(seed)
-    return [Request(uid=i,
-                    prompt=rng.integers(0, cfg.vocab,
-                                        int(rng.integers(4, 20))
-                                        ).astype(np.int32),
-                    max_new=12) for i in range(n)]
+    out = []
+    for i in range(n):
+        enc = (frontends.synthetic_audio_features(rng, cfg)
+               if cfg.is_encdec else None)
+        out.append(Request(uid=i,
+                           prompt=rng.integers(0, cfg.vocab,
+                                               int(rng.integers(4, 20))
+                                               ).astype(np.int32),
+                           max_new=12, enc_emb=enc))
+    return out
 
 
 def _drive(eng, reqs):
@@ -191,8 +200,13 @@ def run(full: bool = False):
         plan = [(fam, arch, over, c) for fam, arch, over in FAMILIES
                 for c in (8, 16, 32, 64)]
     else:
+        # smoke covers the structured-feature family plus one mixed-
+        # geometry plan each: hybrid (kv pages + ssd slots) and enc-dec
+        # (kv pages + encoder-memory slots)
         plan = [("kv", "qwen3-4b", {}, 8),
-                ("srf", "qwen3-4b", {"attn_impl": "srf"}, 8)]
+                ("srf", "qwen3-4b", {"attn_impl": "srf"}, 8),
+                ("hybrid", "hymba-1.5b", {}, 8),
+                ("encdec", "seamless-m4t-large-v2", {}, 8)]
     pairs = []
     for fam, arch, over, c in plan:
         rec = _bench_pair(fam, arch, over, c)

@@ -12,7 +12,9 @@ import time
 
 SUITES = ["coherence", "speed", "fused", "pipeline", "compression",
           "srf_attention", "kernel_quality",
-          "serving"]   # serving/fused/pipeline run fast smoke modes
+          "serving"]   # serving/fused/pipeline run fast smoke modes;
+                       # serving smoke covers kv/srf plus the hybrid and
+                       # enc-dec mixed-geometry plans end to end
 
 
 def main(argv=None):

@@ -6,9 +6,15 @@ mesh-sharded and router-replicated.
         [--policy priority] [--temperature 0.8 --top-k 40] [--legacy] \
         [--replicas 2] [--model-parallel 2] [--quantize-kv]
 
+Every registry family serves through the paged engine — dense/moe/mla,
+ssm (constant-state slots), hybrid (kv pages + ssd slots), enc-dec
+(synthetic frontend features are generated per request and encoded once
+at admission) and the vlm/audio frontend archs.
+
 ``--attn srf`` serves with the paper's SRF attention: the per-request
 cache is one constant-size O(m d) state page instead of O(L) KV pages.
-``--legacy`` runs the old per-slot lock-step engine for comparison.
+``--legacy`` runs the old per-slot lock-step engine (the test oracle)
+for comparison.
 ``--replicas``/``--model-parallel`` route requests across engine
 replicas whose page pools are model-axis sharded (``serving/mesh``);
 ``--quantize-kv`` stores KV pages as int8 with per-page-row scales.
@@ -77,10 +83,15 @@ def main(argv=None):
     for i in range(args.requests):
         prompt = rng.integers(0, cfg.vocab,
                               args.prompt_len).astype(np.int32)
+        enc = None
+        if cfg.is_encdec:
+            from repro.models import frontends
+            enc = frontends.synthetic_audio_features(rng, cfg)
         eng.submit(Request(uid=i, prompt=prompt, max_new=args.max_new,
                            priority=int(rng.integers(0, 3)),
                            temperature=args.temperature,
-                           top_k=args.top_k, top_p=args.top_p))
+                           top_k=args.top_k, top_p=args.top_p,
+                           enc_emb=enc))
     done = eng.run()
     dt = time.time() - t0
     tok = sum(len(r.out_tokens) for r in done)

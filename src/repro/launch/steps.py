@@ -97,11 +97,26 @@ def make_prefill_step(cfg):
     return prefill_step
 
 
+def make_encode_step(cfg):
+    """Enc-dec encoder pass: (params, enc_emb (B, E, feat)) -> memory
+    (B, E, d_model). The paged engine runs this once per request at
+    admission (batch 1 — bit-identical to the legacy per-slot prefill)
+    and caches the result in the read-only encoder-memory pool."""
+    def encode_step(params, enc_emb):
+        return model.encode_memory(params, cfg, enc_emb)
+    return encode_step
+
+
 def make_paged_step(cfg, mesh=None, paged=None, params_sds=None):
     """Batched paged serving step (decode: C = 1; chunked prefill: C = chunk).
 
     (params, pools, tokens (B, C), positions (B, C), q_valid (B, C),
-    tables (B, M)) -> (logits (B, C, V_padded), pools'). One jit cache
+    tables (B, M), slots (B,)) -> (logits (B, C, V_padded), pools').
+    ``pools`` is the full container from ``serving.paged_cache``
+    (paged-domain pages + constant-state slots + optional enc-dec
+    memory); ``slots`` indexes the slot-domain pools and the memory pool
+    (0 = null slot for padded rows) and threads the per-request encoder
+    memory through to the cross-attending decoder layers. One jit cache
     entry per (B, C) shape — the engine keeps those fixed. With SRF
     attention the phi(q)/phi(k) feature maps inside run as single fused
     spinner passes; the factory pre-warms their block-size plan.
@@ -129,9 +144,9 @@ def make_paged_step(cfg, mesh=None, paged=None, params_sds=None):
     """
     _prewarm_srf_spinner(cfg)
 
-    def paged_step(params, pools, tokens, positions, q_valid, tables):
+    def paged_step(params, pools, tokens, positions, q_valid, tables, slots):
         return model.paged_step(params, cfg, pools, tokens, positions,
-                                q_valid, tables)
+                                q_valid, tables, slots)
 
     if mesh is None:
         return paged_step
@@ -152,13 +167,13 @@ def make_paged_step(cfg, mesh=None, paged=None, params_sds=None):
     poolspecs = mesh_shard.pool_specs(cfg, mesh, paged)
     rep = P()
 
-    def body(params, pools, tokens, positions, q_valid, tables):
+    def body(params, pools, tokens, positions, q_valid, tables, slots):
         return model.paged_step(params, cfg_local, pools, tokens, positions,
-                                q_valid, tables, tp_axis="model")
+                                q_valid, tables, slots, tp_axis="model")
 
     return collectives.axis_shard_map(
         body, mesh,
-        in_specs=(pspecs, poolspecs, rep, rep, rep, rep),
+        in_specs=(pspecs, poolspecs, rep, rep, rep, rep, rep),
         out_specs=(rep, poolspecs),
         axes=set(mesh.axis_names))
 

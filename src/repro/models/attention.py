@@ -326,16 +326,16 @@ def _paged_full(cfg, q, k, v, positions, ctx):
     return out, new_pool
 
 
-def _paged_srf(sc, pool, tables, phi_q, phi_k, v, q_valid):
+def _paged_srf(sc, pool, slots, phi_q, phi_k, v, q_valid):
     """SRF paged path: the state is one constant-size page per request
-    (the paper's O(m d) object) at slot ``tables[:, 0]``.
+    (the paper's O(m d) object) at the request's slot in the slot-domain
+    pool (``serving.paged_cache``).
 
     Chunked prefill processes C tokens causally against the carried
     state; decode (C=1) routes through the fused srf_decode kernel.
     Invalid chunk rows have phi_k/v zeroed, which makes their state
     contribution an exact no-op."""
     b, h, c, m = phi_q.shape
-    slots = tables[:, 0]
     s = pool["s"][slots]                               # (B, Hq, m, dv)
     z = pool["z"][slots]
     valid = q_valid[:, None, :, None].astype(phi_k.dtype)
@@ -399,7 +399,7 @@ def attention(p, cfg, x: jax.Array, positions: jax.Array, mode: str,
             phi_q = phi_q.reshape(b_, hq_, l_, -1)
             phi_k = _repeat_kv(srf.feature_map(sc, p["srf"], k,
                                                is_query=False), g)
-            out, new_pool = _paged_srf(sc, cache["pool"], cache["tables"],
+            out, new_pool = _paged_srf(sc, cache["pool"], cache["slots"],
                                        phi_q, phi_k, _repeat_kv(v, g),
                                        cache["q_valid"])
         else:
@@ -540,8 +540,8 @@ def _mla_attention(p, cfg, x, positions, mode, cache):
             sc = srf_cfg(cfg)
             phi_q = srf.feature_map(sc, p["srf"], q, is_query=True)
             phi_k = srf.feature_map(sc, p["srf"], k, is_query=False)
-            out, new_pool = _paged_srf(sc, pool, tables, phi_q, phi_k, v,
-                                       q_valid)
+            out, new_pool = _paged_srf(sc, pool, cache["slots"], phi_q,
+                                       phi_k, v, q_valid)
             if cache.get("tp_axis"):
                 out = stitch_heads(out, cache["tp_axis"])
             return _merge_heads(out) @ p["wo"], new_pool
@@ -618,4 +618,21 @@ def cross_attention(p, cfg, x: jax.Array, memory: jax.Array) -> jax.Array:
     k = _split_heads(memory @ p["wk"], cfg.n_kv_heads, cfg.head_dim)
     v = _split_heads(memory @ p["wv"], cfg.n_kv_heads, cfg.head_dim)
     out = _softmax_attn(q, k, v, 1.0 / math.sqrt(cfg.head_dim), causal=False)
+    return _merge_heads(out) @ p["wo"]
+
+
+def paged_cross_attention(p, cfg, x: jax.Array, memory: jax.Array,
+                          tp_axis: Optional[str] = None) -> jax.Array:
+    """Cross-attention for the paged engine: ``memory`` rows are the
+    per-request encoder memories gathered from the read-only memory pool.
+    Same math as :func:`cross_attention` per batch row (bit-identical to
+    the legacy engine's per-slot path); under head-sharded TP the local
+    head block is stitched back before the replicated-wo contraction —
+    the same bit-exactness trick as self-attention (shard.py)."""
+    q = _split_heads(x @ p["wq"], cfg.n_heads, cfg.head_dim)
+    k = _split_heads(memory @ p["wk"], cfg.n_kv_heads, cfg.head_dim)
+    v = _split_heads(memory @ p["wv"], cfg.n_kv_heads, cfg.head_dim)
+    out = _softmax_attn(q, k, v, 1.0 / math.sqrt(cfg.head_dim), causal=False)
+    if tp_axis:
+        out = stitch_heads(out, tp_axis)
     return _merge_heads(out) @ p["wo"]

@@ -10,12 +10,22 @@ from typing import Dict
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from . import layers
 
 # feature dims of the precomputed stub embeddings
 AUDIO_FEAT_DIM = 160     # fbank-ish frame features
 VISION_FEAT_DIM = 1176   # 14x14x2x3 qwen2-vl patchify
+
+
+def synthetic_audio_features(rng: np.random.Generator, cfg) -> np.ndarray:
+    """One request's synthetic (enc_len, AUDIO_FEAT_DIM) frontend frames —
+    the shared generator behind the serving launcher, benchmarks, and the
+    parity tests (one definition, so every consumer draws the same
+    distribution from the same rng stream)."""
+    return (rng.standard_normal((cfg.enc_len, AUDIO_FEAT_DIM))
+            * 0.2).astype(np.float32)
 
 def frontend_init(rng, cfg, dtype) -> Dict:
     if cfg.frontend == "audio_stub":

@@ -45,6 +45,27 @@ def segments(cfg) -> List[Tuple[str, int]]:
     return [("dense", cfg.n_layers)]
 
 
+def _layer_plan(cfg) -> List[Tuple[str, int, Tuple[str, ...]]]:
+    """Serving-state plan: per segment ``(kind, count, components)``.
+
+    ``components`` names the decode-state objects EVERY layer of the
+    segment owns — ``"attn"`` (kv / mla pages or the srf constant state,
+    resolved by ``serving.paged_cache.attn_family_for``) and/or ``"ssm"``
+    (the ssd constant state). Hybrid layers own both; the enc-dec
+    encoder memory is model-level (one pool, not per layer) and is keyed
+    off ``cfg.is_encdec`` by the pool plan instead."""
+    plan = []
+    for kind, count in segments(cfg):
+        if kind == "ssm":
+            comps: Tuple[str, ...] = ("ssm",)
+        elif kind == "hybrid":
+            comps = ("attn", "ssm")
+        else:
+            comps = ("attn",)
+        plan.append((kind, count, comps))
+    return plan
+
+
 def layer_init(rng, cfg, kind: str, dtype) -> Dict:
     keys = jax.random.split(rng, 8)
     d = cfg.d_model
@@ -243,19 +264,29 @@ def run_segment(stacked, cfg, kind: str, x, positions, mode: str,
 # embedding / inputs
 # ---------------------------------------------------------------------------
 
+def encode_memory(params, cfg, enc_emb: jax.Array) -> jax.Array:
+    """Run the encoder once: (B, enc_len, feat) -> (B, enc_len, d_model).
+    Shared by training/prefill (``embed_inputs``) and the paged engine,
+    which encodes per request at admission and caches the result in the
+    read-only encoder-memory pool — the computation (and its bits) is the
+    same either way."""
+    dt = _dtype(cfg)
+    enc_x = frontends.frontend_apply(params["frontend"], cfg,
+                                     enc_emb).astype(dt)
+    b, s, _ = enc_x.shape
+    enc_pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    enc_x, _, _ = run_segment(params["encoder"], cfg, "dense", enc_x,
+                              enc_pos, "encoder")
+    return layers.rmsnorm(params["enc_norm"], enc_x, cfg.norm_eps)
+
+
 def embed_inputs(params, cfg, batch: Dict, decode: bool = False):
     """-> (x, positions, pos3, memory). Handles vlm/audio stubs + encdec."""
     dt = _dtype(cfg)
     pos3 = batch.get("pos3")
     memory = None
     if cfg.is_encdec:
-        enc_x = frontends.frontend_apply(params["frontend"], cfg,
-                                         batch["enc_emb"]).astype(dt)
-        b, s, _ = enc_x.shape
-        enc_pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
-        enc_x, _, _ = run_segment(params["encoder"], cfg, "dense", enc_x,
-                                  enc_pos, "encoder")
-        memory = layers.rmsnorm(params["enc_norm"], enc_x, cfg.norm_eps)
+        memory = encode_memory(params, cfg, batch["enc_emb"])
     tokens = batch["tokens"]
     x = layers.embed(params["embed"], tokens).astype(dt)
     if cfg.frontend == "vision_stub" and not decode and "vision_emb" in batch:
@@ -343,63 +374,99 @@ def prefill(params, cfg, batch: Dict, cache: Dict) -> Tuple[jax.Array, Dict]:
     return logits, out
 
 
-def paged_step(params, cfg, pools: List, tokens: jax.Array,
+def paged_step(params, cfg, pools: Dict, tokens: jax.Array,
                positions: jax.Array, q_valid: jax.Array,
-               tables: jax.Array, tp_axis: Optional[str] = None
-               ) -> Tuple[jax.Array, List]:
+               tables: jax.Array, slots: jax.Array,
+               tp_axis: Optional[str] = None) -> Tuple[jax.Array, Dict]:
     """One batched step against pooled paged caches (serving hot path).
 
     tokens: (B, C) int32 — C = 1 for batched decode, C = prefill chunk
     for chunked prefill; both run through the same code. positions: (B, C)
     absolute positions; q_valid: (B, C) validity (False rows/tails are
-    padding); tables: (B, M) page ids into the pools (see
-    ``serving.paged_cache``). Returns (logits (B, C, V_padded), pools').
+    padding); tables: (B, M) page ids into the paged-domain pools;
+    slots: (B,) slot ids into the constant-state pools and the enc-dec
+    memory pool (0 = null slot for padded rows). ``pools`` is the full
+    container from ``serving.paged_cache.init_pools`` ({"paged", "slot"}
+    per-segment lists + optional "memory"). Returns
+    (logits (B, C, V_padded), pools').
 
-    Layers scan over (stacked params, stacked per-layer pools); tables /
-    positions are loop constants, so the whole step stays one jit'd
-    program regardless of batch composition.
+    Layers scan over (stacked params, stacked per-layer pools of BOTH
+    domains — hybrid layers carry a kv sub-pool and an ssd sub-pool
+    side by side); tables / positions are loop constants, so the whole
+    step stays one jit'd program regardless of batch composition. For
+    enc-dec the per-request encoder memory is gathered ONCE from the
+    memory pool (paged-gather with a width-1 table of slot ids) and
+    cross-attended by every decoder layer.
 
     ``tp_axis``: set when running per-shard inside the mesh-serving
     shard_map (``launch.steps.make_paged_step(mesh=...)``): ``cfg`` is
     then the shard-local view (head counts divided), the pools hold the
     local head block, and attention all-gathers its per-shard head
     outputs over the named mesh axis (``collectives.stitch_heads``)
-    before the replicated-wo contraction. Everything outside attention
-    is replicated.
+    before the replicated-wo contraction. Everything outside (self and
+    cross) attention — including the ssd half of hybrid layers — is
+    replicated: each shard repeats the identical constant-state update.
     """
     dt = _dtype(cfg)
     x = layers.embed(params["embed"], tokens).astype(dt)
     x = hooks.constrain(x, "activation")
-    new_pools = []
-    for seg_params, seg_pool, (kind, _) in zip(params["segments"], pools,
-                                               segments(cfg)):
+    memory = None
+    mem_pool = pools.get("memory")
+    if mem_pool is not None:
+        memory = attention._paged_hist(mem_pool, slots[:, None]).astype(dt)
+    new_paged, new_slot = [], []
+    for seg_params, pseg, sseg, (kind, _) in zip(
+            params["segments"], pools["paged"], pools["slot"], segments(cfg)):
         def body(x, inp):
-            lp, lpool = inp
-            y, new_lpool = _paged_layer(lp, cfg, kind, x, positions,
-                                        q_valid, lpool, tables, tp_axis)
-            return y, new_lpool
-        x, new_pool = jax.lax.scan(body, x, (seg_params, seg_pool))
-        new_pools.append(new_pool)
-    return _logits(params, cfg, x), new_pools
+            lp, lpp, lsp = inp
+            y, npp, nsp = _paged_layer(lp, cfg, kind, x, positions, q_valid,
+                                       lpp, lsp, tables, slots, memory,
+                                       tp_axis)
+            return y, (npp, nsp)
+        x, (np_, ns_) = jax.lax.scan(body, x, (seg_params, pseg, sseg))
+        new_paged.append(np_)
+        new_slot.append(ns_)
+    out_pools = {"paged": new_paged, "slot": new_slot}
+    if mem_pool is not None:
+        out_pools["memory"] = mem_pool        # read-only: pass through
+    return _logits(params, cfg, x), out_pools
 
 
-def _paged_layer(p, cfg, kind: str, x, positions, q_valid, lpool, tables,
-                 tp_axis: Optional[str] = None) -> Tuple[jax.Array, Dict]:
-    """Single-layer paged step (mirrors ``layer_apply`` for serving)."""
+def _paged_layer(p, cfg, kind: str, x, positions, q_valid, lpaged, lslot,
+                 tables, slots, memory=None, tp_axis: Optional[str] = None
+                 ) -> Tuple[jax.Array, Optional[Dict], Optional[Dict]]:
+    """Single-layer paged step (mirrors ``layer_apply`` for serving).
+    -> (x, new_paged_pools, new_slot_pools), each keyed by component."""
     h = layers.rmsnorm(p["ln1"], x, cfg.norm_eps)
     if kind == "ssm":
         if tp_axis is not None:     # ssd pools always replicate (shard.py)
-            raise ValueError("tp_axis is not supported for ssm layers")
-        y, new_pool = ssm.paged_ssm_step(p["ssm"], cfg, h, q_valid, lpool,
-                                         tables[:, 0])
-        return x + y, new_pool
-    if kind in ("hybrid", "dense_cross"):
-        raise ValueError(f"paged serving unsupported for layer kind {kind!r}")
-    a, new_pool = attention.attention(
-        p["attn"], cfg, h, positions, "paged",
-        {"pool": lpool, "tables": tables, "q_valid": q_valid,
-         "tp_axis": tp_axis})
+            raise ValueError("tp_axis is not supported for pure ssm stacks")
+        y, new_ssm = ssm.paged_ssm_step(p["ssm"], cfg, h, q_valid,
+                                        lslot["ssm"], slots)
+        return x + y, None, {"ssm": new_ssm}
+    attn_in_slot = cfg.attn_impl == "srf"   # srf state is a constant slot
+    ctx = {"pool": (lslot if attn_in_slot else lpaged)["attn"],
+           "tables": tables, "slots": slots, "q_valid": q_valid,
+           "tp_axis": tp_axis}
+    a, new_attn = attention.attention(p["attn"], cfg, h, positions, "paged",
+                                      ctx)
+    if kind == "hybrid":
+        s, new_ssm = ssm.paged_ssm_step(p["ssm"], cfg, h, q_valid,
+                                        lslot["ssm"], slots)
+        fused = 0.5 * (layers.rmsnorm(p["fuse_na"], a, cfg.norm_eps)
+                       + layers.rmsnorm(p["fuse_ns"], s, cfg.norm_eps))
+        x = x + fused
+        x = x + layers.mlp(p["mlp"], layers.rmsnorm(p["ln2"], x, cfg.norm_eps))
+        new_s = {"ssm": new_ssm}
+        if attn_in_slot:
+            new_s["attn"] = new_attn
+            return x, None, new_s
+        return x, {"attn": new_attn}, new_s
     x = x + a
+    if kind == "dense_cross" and memory is not None:
+        x = x + attention.paged_cross_attention(
+            p["cross"], cfg, layers.rmsnorm(p["ln_x"], x, cfg.norm_eps),
+            memory, tp_axis)
     h2 = layers.rmsnorm(p["ln2"], x, cfg.norm_eps)
     if kind == "moe":
         # q_valid keeps padded chunk-tail tokens out of expert capacity:
@@ -408,7 +475,10 @@ def _paged_layer(p, cfg, kind: str, x, positions, q_valid, lpool, tables,
         y, _ = moe.moe_apply(p["moe"], cfg, h2, valid=q_valid)
     else:
         y = layers.mlp(p["mlp"], h2)
-    return x + y, new_pool
+    x = x + y
+    if attn_in_slot:
+        return x, None, {"attn": new_attn}
+    return x, {"attn": new_attn}, None
 
 
 def decode_step(params, cfg, cache: Dict, tokens: jax.Array,

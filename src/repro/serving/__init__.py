@@ -12,6 +12,7 @@ warns).
 """
 from .blocks import BlockAllocator, BlockTable          # noqa: F401
 from .engine import Engine, Request                     # noqa: F401
-from .paged_cache import PagedConfig, family_for, init_pools  # noqa: F401
+from .paged_cache import (PagedConfig, PoolPlan, family_for,  # noqa: F401
+                          init_pools, plan_for)
 from .scheduler import SchedConfig, Scheduler           # noqa: F401
 from .mesh import Router, RouterConfig                  # noqa: F401

@@ -1,17 +1,20 @@
 """Page/block bookkeeping for the paged serving cache (host-side control
 plane; no jax here).
 
-The pool of cache pages is a fixed device allocation (see
-``paged_cache``); this module hands out *page ids* into that pool and
-tracks which request owns which pages. One allocator serves every cache
-family: full-KV and MLA-latent requests take ``ceil(len / page_size)``
-pages, SRF and SSD requests take exactly one constant-size page (the
-paper's O(m d) decode state — that uniformity is what lets all four
-families share the same block-table machinery).
+The pools are fixed device allocations (see ``paged_cache``); this
+module hands out ids into them and tracks which request owns what. The
+scheduler runs one :class:`BlockAllocator` per index domain: the *paged*
+domain, where full-KV and MLA-latent requests take
+``ceil(len / page_size)`` growable pages tracked in a per-request
+:class:`BlockTable`, and the *slot* domain (page_size 1), where
+constant-size states — the paper's O(m d) SRF state, the SSD state, the
+enc-dec encoder memory — take exactly one slot for the request's whole
+lifetime. A mixed-geometry request (hybrid, enc-dec) owns both.
 
-Page 0 is reserved as the *null page*: padded batch rows point their
-block tables at it, so scatters from inactive rows land in scratch
-memory instead of corrupting live requests.
+Id 0 is reserved in both domains as the *null page/slot*: padded batch
+rows point their block tables (and slot vector) at it, so scatters from
+inactive rows land in scratch memory instead of corrupting live
+requests.
 """
 from __future__ import annotations
 
@@ -91,10 +94,9 @@ class BlockTable:
             raise ValueError(f"{len(self.pages)} pages > table width {width}")
         return self.pages + [NULL_PAGE] * (width - len(self.pages))
 
-    def pages_needed(self, new_length: int, page_size: int,
-                     constant_state: bool) -> int:
-        """How many NEW pages must be allocated to grow to ``new_length``."""
-        if constant_state:
-            return 1 - len(self.pages)
+    def pages_needed(self, new_length: int, page_size: int) -> int:
+        """How many NEW pages must be allocated to grow to ``new_length``.
+        (Paged-domain only: constant-size states live in the slot domain
+        and never grow — see the scheduler's plan handling.)"""
         want = -(-new_length // page_size)        # ceil
         return max(0, want - len(self.pages))

@@ -1,8 +1,9 @@
 """Paged continuous-batching serving engine.
 
-Replaces the per-slot lock-step engine (now ``serving.legacy``): all
-requests share one pooled, pre-allocated cache (``paged_cache``) indexed
-through per-request block tables (``blocks``), a scheduler handles
+Replaces the per-slot lock-step engine (now ``serving.legacy``, kept as
+a test oracle / benchmark baseline): all requests share pooled,
+pre-allocated caches (``paged_cache``) indexed through per-request block
+tables and constant-state slots (``blocks``), a scheduler handles
 admission / chunked prefill / preemption (``scheduler``), prefill and
 decode both run as single batched jit steps (``transformer.paged_step``),
 and sampling is temperature / top-k / top-p (``sampler``) with greedy as
@@ -10,14 +11,16 @@ the deterministic default.
 
 Why paged: full-KV and MLA caches grow O(L) and are pooled in fixed-size
 pages; the paper's SRF attention state (and the SSD state) is O(m d) —
-one constant-size page per request — so the same engine serves all four
-families and the structured-feature families admit far more concurrent
-requests from the same pool bytes.
+one constant-size slot per request. EVERY registry family serves through
+this engine: dense/moe (kv or mla pages), ssm (ssd slots), hybrid (kv
+pages AND ssd slots per layer), enc-dec (kv pages + a read-only
+encoder-memory slot written once at admission), and the vlm/audio
+frontend archs (their decode path is plain kv).
 
 Step shapes are fixed (max_batch x 1 decode, prefill_batch x chunk
 prefill), so the engine compiles exactly two programs regardless of
 traffic; inactive batch rows are masked and their writes land in the
-reserved null page.
+reserved null page / null slot.
 """
 from __future__ import annotations
 
@@ -45,6 +48,7 @@ class Request:
     temperature: float = 0.0         # 0 = greedy (deterministic)
     top_k: int = 0                   # 0 = disabled
     top_p: float = 1.0
+    enc_emb: Optional[np.ndarray] = None  # (enc_len, feat) enc-dec input
     out_tokens: List[int] = field(default_factory=list)
     done: bool = False
     t_submit: float = 0.0
@@ -52,28 +56,29 @@ class Request:
     t_done: float = 0.0
 
 
-def _default_sched(cfg, batch_slots: int, max_len: int,
-                   constant_state: bool, policy: str) -> SchedConfig:
+def _default_sched(cfg, batch_slots: int, max_len: int, plan,
+                   policy: str) -> SchedConfig:
     page = 16 if max_len >= 64 else 8
-    width = max(1, -(-max_len // page))
-    if constant_state:
-        # one slot per concurrent request + headroom for swapped admits
+    if not plan.has_paged:
+        # constant-state only: the slot domain is the whole geometry
         return SchedConfig(max_batch=batch_slots, prefill_batch=batch_slots,
                            prefill_chunk=min(32, max(8, page)),
-                           page_size=page, num_pages=2 * batch_slots + 1,
-                           table_width=1, policy=policy)
+                           page_size=page, num_pages=2, table_width=1,
+                           num_slots=batch_slots + 1, policy=policy)
+    width = max(1, -(-max_len // page))
     return SchedConfig(max_batch=batch_slots, prefill_batch=batch_slots,
                        prefill_chunk=min(32, 2 * page), page_size=page,
                        num_pages=2 * batch_slots * width + 1,
-                       table_width=width, policy=policy)
+                       table_width=width, num_slots=batch_slots + 1,
+                       policy=policy)
 
 
 class Engine:
-    """Continuous batching over a paged cache pool.
+    """Continuous batching over paged cache pools.
 
     ``batch_slots`` and ``max_len`` keep the old engine's constructor
     contract (tests, examples); pass ``sched=SchedConfig(...)`` to size
-    the pool explicitly (e.g. tight pools to exercise preemption).
+    the pools explicitly (e.g. tight pools to exercise preemption).
 
     ``mesh``: mesh-sharded serving — pools laid out with model-axis
     NamedSharding on the head/feature dim, attention params sliced to
@@ -82,11 +87,18 @@ class Engine:
     step). ``paged=PagedConfig(quantize_kv=True)`` stores KV pages as
     int8 with per-page-row scales (kv family only).
 
+    Enc-dec: every :class:`Request` must carry ``enc_emb`` (the frontend
+    features); the engine runs the encoder exactly once per request at
+    admission (batch-1, bit-identical to the legacy per-slot prefill) and
+    caches the result in the read-only encoder-memory pool at the
+    request's slot — decode steps gather it and cross-attend.
+
     Copy-on-preempt snapshots are asynchronous: eviction enqueues the
-    device-side page slice and the non-blocking host transfer, the next
-    decode step overlaps the copy (the step donates its pool buffers, so
-    the engine fences pending slices with ``block_until_ready`` first),
-    and the transfer is only awaited when the victim swaps back in.
+    device-side page+slot slice and the non-blocking host transfer, the
+    next decode step overlaps the copy (the step donates its pool
+    buffers, so the engine fences pending slices with
+    ``block_until_ready`` first), and the transfer is only awaited when
+    the victim swaps back in.
     """
 
     def __init__(self, cfg, params, batch_slots: int = 4,
@@ -94,17 +106,18 @@ class Engine:
                  policy: str = "fcfs", seed: int = 0, mesh=None,
                  paged: Optional[paged_cache.PagedConfig] = None):
         self.cfg = cfg
-        self.family = paged_cache.family_for(cfg)
+        self.plan = paged_cache.plan_for(cfg)
         self.mesh = mesh
         self.paged = paged or paged_cache.PagedConfig()
         if sched is None:
-            sched = _default_sched(cfg, batch_slots, max_len,
-                                   self.family.constant_state, policy)
+            sched = _default_sched(cfg, batch_slots, max_len, self.plan,
+                                   policy)
         self.sched_cfg = sched
-        self.sched = Scheduler(sched, self.family.constant_state)
+        self.sched = Scheduler(sched, self.plan)
         self.pools = paged_cache.init_pools(cfg, sched.num_pages,
-                                            sched.page_size, mesh=mesh,
-                                            paged=self.paged)
+                                            sched.page_size,
+                                            num_slots=self.sched.num_slots,
+                                            mesh=mesh, paged=self.paged)
         if mesh is not None:
             from .mesh import shard as mesh_shard
             params = mesh_shard.place_params(params, cfg, mesh)
@@ -113,6 +126,8 @@ class Engine:
             step_lib.make_paged_step(cfg, mesh=mesh, paged=self.paged,
                                      params_sds=params),
             donate_argnums=(1,))
+        self._encode = (jax.jit(step_lib.make_encode_step(cfg))
+                        if cfg.is_encdec else None)
         self._rng = jax.random.PRNGKey(seed)
         self._pending_snaps: List[paged_cache.PendingSnapshot] = []
         self.stats: Dict[str, float] = {
@@ -122,6 +137,10 @@ class Engine:
     # -- public API ---------------------------------------------------------
 
     def submit(self, req: Request) -> None:
+        if self.cfg.is_encdec and req.enc_emb is None:
+            raise ValueError(
+                "enc-dec serving needs Request.enc_emb (frontend features "
+                f"({self.cfg.enc_len}, feat)); request uid={req.uid} has none")
         req.t_submit = time.time()
         self.sched.submit(req)
 
@@ -135,7 +154,8 @@ class Engine:
             if stall > 2:
                 raise RuntimeError(
                     "scheduler stalled: pool too small for the remaining "
-                    f"requests (free={self.sched.alloc.free_pages} pages)")
+                    f"requests (free={self.sched.alloc.free_pages} pages, "
+                    f"{self.sched.free_slots} slots)")
         return [r for r in tracked if r.done]
 
     def step(self) -> bool:
@@ -143,18 +163,26 @@ class Engine:
         any sequence is still prefilling, else one batched decode step.
         Returns False when nothing could run (allocator exhausted)."""
         admitted = self.sched.admit()
-        fresh_pages: List[int] = []
+        fresh: List[Sequence] = []
         for seq in admitted:
             if seq.snapshot is not None:
                 self.pools = paged_cache.restore_page_rows(
-                    self.pools, seq.table.pages, seq.snapshot)
+                    self.pools, seq.table.pages, self._slot_ids(seq),
+                    seq.snapshot)
                 self.sched.restored(seq)
-            elif self.family.constant_state:
-                # constant-state pages are accumulators: a reused slot
+            elif seq.slot is not None:
+                # constant-state slots are accumulators: a reused slot
                 # must start from zero, not the previous request's state
-                fresh_pages.extend(seq.table.pages)
-        if fresh_pages:
-            self.pools = paged_cache.zero_page_rows(self.pools, fresh_pages)
+                fresh.append(seq)
+        if fresh:
+            # the enc-dec memory rows are fully overwritten by the encoder
+            # below, so their zeroing is skipped (one whole-pool write
+            # saved per admission burst)
+            self.pools = paged_cache.zero_slot_rows(
+                self.pools, [s.slot for s in fresh],
+                zero_memory=self._encode is None)
+            if self._encode is not None:
+                self._write_memories(fresh)
         work = self.sched.prefill_work()
         if work:
             self._prefill_step(work)
@@ -163,6 +191,28 @@ class Engine:
         if ready:
             return self._decode_step(ready)
         return bool(admitted)
+
+    @staticmethod
+    def _slot_ids(seq: Sequence) -> List[int]:
+        return [seq.slot] if seq.slot is not None else []
+
+    # -- enc-dec memory ------------------------------------------------------
+
+    def _write_memories(self, seqs: List[Sequence]) -> None:
+        """Run the encoder once per freshly admitted request and cache the
+        results in the read-only memory pool. Encoding stays batch-1 per
+        request (bit-identical to the legacy per-slot prefill); the row
+        writes are batched into ONE whole-pool update per admission."""
+        mems = [self._encode(self.params, jnp.asarray(s.req.enc_emb)[None])[0]
+                for s in seqs]
+        idx = jnp.asarray([s.slot for s in seqs], jnp.int32)
+        new = self.pools["memory"].at[idx].set(
+            jnp.stack(mems).astype(self.pools["memory"].dtype))
+        if self.mesh is not None:
+            from jax.sharding import NamedSharding, PartitionSpec
+            new = jax.device_put(
+                new, NamedSharding(self.mesh, PartitionSpec()))
+        self.pools["memory"] = new
 
     # -- snapshot fencing ----------------------------------------------------
 
@@ -176,11 +226,11 @@ class Engine:
                 snap.fence()
             self._pending_snaps.clear()
 
-    def _run_step(self, tokens, pos, qv, tables):
+    def _run_step(self, tokens, pos, qv, tables, slots):
         self._fence_snapshots()
         return self._step(self.params, self.pools, jnp.asarray(tokens),
                           jnp.asarray(pos), jnp.asarray(qv),
-                          jnp.asarray(tables))
+                          jnp.asarray(tables), jnp.asarray(slots))
 
     # -- sampling -----------------------------------------------------------
 
@@ -207,6 +257,7 @@ class Engine:
         pos = np.zeros((b, c), np.int32)
         qv = np.zeros((b, c), bool)
         tables = np.zeros((b, m), np.int32)
+        slots = np.zeros((b,), np.int32)
         last_row = np.zeros((b,), np.int32)
         finishing: List[Optional[Sequence]] = [None] * b
         for i, seq in enumerate(work):
@@ -219,12 +270,13 @@ class Engine:
             pos[i] = start + np.arange(c)
             qv[i, :n] = True
             tables[i] = seq.table.padded(m)
+            slots[i] = seq.slot or 0
             seq.prefill_pos += n
             seq.table.length = seq.prefill_pos
             if seq.prefill_done:
                 finishing[i] = seq
                 last_row[i] = n - 1
-        logits, self.pools = self._run_step(tokens, pos, qv, tables)
+        logits, self.pools = self._run_step(tokens, pos, qv, tables, slots)
         rows = jnp.take_along_axis(
             logits[:, :, : self.cfg.vocab],
             jnp.asarray(last_row)[:, None, None], axis=1)[:, 0]
@@ -241,8 +293,8 @@ class Engine:
     # -- decode -------------------------------------------------------------
 
     def _evict(self, victim: Sequence) -> None:
-        snap = paged_cache.snapshot_page_rows_async(self.pools,
-                                                    victim.table.pages)
+        snap = paged_cache.snapshot_page_rows_async(
+            self.pools, victim.table.pages, self._slot_ids(victim))
         self._pending_snaps.append(snap)
         self.sched.evicted(victim, snap)
         self.stats["preemptions"] += 1
@@ -267,12 +319,14 @@ class Engine:
         pos = np.zeros((b, 1), np.int32)
         qv = np.zeros((b, 1), bool)
         tables = np.zeros((b, m), np.int32)
+        slots = np.zeros((b,), np.int32)
         for i, seq in enumerate(batch):
             tokens[i, 0] = seq.req.out_tokens[-1]
             pos[i, 0] = seq.table.length
             qv[i, 0] = True
             tables[i] = seq.table.padded(m)
-        logits, self.pools = self._run_step(tokens, pos, qv, tables)
+            slots[i] = seq.slot or 0
+        logits, self.pools = self._run_step(tokens, pos, qv, tables, slots)
         toks = self._sample_rows(logits[:, 0, : self.cfg.vocab], batch, b)
         now = time.time()
         for i, seq in enumerate(batch):
@@ -304,21 +358,37 @@ class Engine:
         return self.sched.alloc.free_pages
 
     @property
+    def free_slots(self) -> int:
+        return self.sched.free_slots
+
+    @property
     def usable_pages(self) -> int:
-        """Pool pages available to requests (page 0 is the null page)."""
+        """Paged-domain pages available to requests (page 0 is null)."""
         return max(self.sched_cfg.num_pages - 1, 1)
 
     @property
+    def usable_slots(self) -> int:
+        """Slot-domain slots available to requests (slot 0 is null)."""
+        return max(self.sched.num_slots - 1, 1)
+
+    @property
     def free_fraction(self) -> float:
-        """Fraction of the usable pool currently free (router pressure)."""
-        return self.free_pages / self.usable_pages
+        """Fraction of the BINDING pool currently free (router pressure):
+        the minimum over the domains this plan actually allocates from."""
+        fr = []
+        if self.plan.has_paged:
+            fr.append(self.free_pages / self.usable_pages)
+        if self.sched.slot_alloc is not None:
+            fr.append(self.free_slots / self.usable_slots)
+        return min(fr) if fr else 1.0
 
     def cache_report(self, max_len: Optional[int] = None) -> Dict[str, float]:
         ml = max_len or (self.sched_cfg.table_width * self.sched_cfg.page_size)
-        return {"family": self.family.name,
+        return {"family": self.plan.name,
                 "bytes_per_token_per_layer":
-                    self.family.bytes_per_token(self.cfg, ml, self.paged),
+                    self.plan.bytes_per_token(self.cfg, ml, self.paged),
                 "pool_bytes": paged_cache.pool_bytes(self.pools),
                 "pool_bytes_per_device":
                     paged_cache.pool_bytes_per_device(self.pools),
-                "free_pages": self.sched.alloc.free_pages}
+                "free_pages": self.sched.alloc.free_pages,
+                "free_slots": self.sched.free_slots}

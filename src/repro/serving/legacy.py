@@ -1,13 +1,20 @@
-"""Legacy per-slot serving engine (kept as the benchmark baseline).
+"""Legacy per-slot serving engine — TEST ORACLE ONLY (and the benchmark
+baseline ``bench_serving`` measures the paged engine against).
 
-The paged engine in ``serving.engine`` replaces this; ``bench_serving``
-measures the two head-to-head.
+The paged engine in ``serving.engine`` serves every registry family;
+nothing routes here in production (``launch/serve.py`` keeps a
+``--legacy`` flag purely for A/B runs). The per-slot loop survives
+because its simplicity makes it a trustworthy independent
+implementation: the cross-engine parity matrix
+(``tests/test_engine_parity.py``) pins the paged engine's greedy decode
+bit-exactly to this one for every config family.
 
 Requests enter a queue; free slots are filled by prefilling the prompt
 into that slot's cache region. All active slots decode in lock-step with
 one jit'd serve_step per token (the standard continuous-batching loop,
 single-host flavor). Works with every cache family — full KV, MLA latent,
-SRF state (the paper's O(m d) cache), SSD state.
+SRF state (the paper's O(m d) cache), SSD state, hybrid, enc-dec (each
+:class:`Request` may carry its own ``enc_emb`` frontend features).
 
 For simplicity slots share a common max_len; prefill runs per-request
 (batch-1) and writes into the slot. Greedy decoding; EOS or max_new stops.
@@ -59,6 +66,8 @@ class Engine:
             if self.active[i] is None and self.queue:
                 req = self.queue.pop(0)
                 batch = {"tokens": jnp.asarray(req.prompt[None, :])}
+                if getattr(req, "enc_emb", None) is not None:
+                    batch["enc_emb"] = jnp.asarray(req.enc_emb)[None]
                 if extra_batch:
                     batch.update(extra_batch)
                 cache = model_lib.init_serve_cache(self.cfg, 1, self.max_len)

@@ -22,6 +22,8 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Dict, List, Optional
 
+import jax
+
 from ..engine import Engine, Request
 from ..scheduler import Sequence
 
@@ -43,9 +45,9 @@ class Router:
                  cfg: Optional[RouterConfig] = None):
         if not engines:
             raise ValueError("router needs >= 1 engine replica")
-        fam = engines[0].family.name
-        if any(e.family.name != fam for e in engines):
-            raise ValueError("router replicas must serve one cache family")
+        fam = engines[0].plan.name
+        if any(e.plan.name != fam for e in engines):
+            raise ValueError("router replicas must serve one pool plan")
         self.engines = list(engines)
         self.cfg = cfg or RouterConfig()
         self.home: Dict[int, int] = {}       # request uid -> replica index
@@ -55,15 +57,28 @@ class Router:
     # -- pressure ------------------------------------------------------------
 
     def _demand_pages(self, eng: Engine, seq: Sequence) -> int:
-        """Pages the sequence will need at admission on this replica."""
+        """Paged-domain pages the sequence needs at admission on this
+        replica (slot-only plans: count the one slot instead, so pressure
+        still reflects real demand)."""
+        if not eng.plan.has_paged:
+            return 1
         if seq.snapshot is not None:
             return max(len(seq.snapshot_pages), 1)
         return eng.sched._pages_for(max(seq.prompt_len, 1))
 
     def _headroom(self, eng: Engine) -> int:
-        """Free pages minus the queued demand already bound for ``eng``."""
-        queued = sum(self._demand_pages(eng, s) for s in eng.sched.waiting)
-        return eng.free_pages - queued
+        """Free capacity minus the queued demand already bound for
+        ``eng`` — the minimum over the domains the plan allocates from
+        (pages for kv/mla state, slots for constant state): a hybrid
+        replica with free pages but no free slots is still full."""
+        hs = []
+        if eng.plan.has_paged:
+            queued = sum(self._demand_pages(eng, s)
+                         for s in eng.sched.waiting)
+            hs.append(eng.free_pages - queued)
+        if eng.sched.slot_alloc is not None:
+            hs.append(eng.free_slots - len(eng.sched.waiting))
+        return min(hs)
 
     def pressure(self) -> List[int]:
         return [self._headroom(e) for e in self.engines]
@@ -89,13 +104,39 @@ class Router:
     # -- migration -----------------------------------------------------------
 
     @staticmethod
+    def _capacity(eng: Engine) -> int:
+        """Units backing ``_headroom`` for saturation thresholds: the
+        SMALLEST domain the plan allocates from, matching _headroom's
+        min-over-domains — scaling a slot-bound headroom (<= usable
+        slots) against the much larger page count would classify every
+        mixed-geometry replica as permanently saturated."""
+        caps = []
+        if eng.plan.has_paged:
+            caps.append(eng.usable_pages)
+        if eng.sched.slot_alloc is not None:
+            caps.append(eng.usable_slots)
+        return min(caps)
+
+    @staticmethod
     def _pool_signature(eng: Engine):
-        """Per-segment (leaf name, dtype, page-row shape) — everything a
-        snapshot scatter must agree on except the pool's page COUNT."""
-        return tuple(
-            tuple(sorted((k, str(v.dtype), v.shape[:1] + v.shape[2:])
-                         for k, v in seg.items()))
-            for seg in eng.pools)
+        """Per-domain, per-segment (leaf path, dtype, page-row shape) —
+        everything a snapshot scatter must agree on except the pools'
+        page/slot COUNTS. The enc-dec memory row shape is included (the
+        snapshot carries the encoded memory)."""
+        def seg_sig(seg, axis):
+            if seg is None:
+                return None
+            leaves = jax.tree_util.tree_flatten_with_path(seg)[0]
+            return tuple(sorted(
+                (jax.tree_util.keystr(kp), str(v.dtype),
+                 v.shape[:axis] + v.shape[axis + 1:])
+                for kp, v in leaves))
+        sig = tuple(tuple(seg_sig(s, 1) for s in eng.pools[dom])
+                    for dom in ("paged", "slot"))
+        mem = eng.pools.get("memory")
+        if mem is not None:
+            sig += ((str(mem.dtype), mem.shape[1:]),)
+        return sig
 
     def _can_place(self, src: Engine, dst: Engine, seq: Sequence) -> bool:
         """Whether ``seq`` can be adopted by ``dst``. A preemption
@@ -125,7 +166,7 @@ class Router:
             if moved >= self.cfg.migrate_per_round:
                 break
             src_hr = self._headroom(src)
-            if src_hr >= self.cfg.saturation * src.usable_pages:
+            if src_hr >= self.cfg.saturation * self._capacity(src):
                 continue
             # saturated: offload the tail of the waiting queue (the head
             # is closest to admission here; the tail pays the wait)
@@ -177,10 +218,10 @@ class Router:
             progressed = self.step()
             stall = 0 if progressed else stall + 1
             if stall > 2 + len(self.engines):
-                free = [e.free_pages for e in self.engines]
+                free = [(e.free_pages, e.free_slots) for e in self.engines]
                 raise RuntimeError(
                     f"router stalled: no replica can place the remaining "
-                    f"requests (free pages per replica: {free})")
+                    f"requests (free (pages, slots) per replica: {free})")
         return [r for r in tracked if r.done]
 
     def describe(self) -> Dict:

@@ -14,14 +14,23 @@ family     pool leaf (global shape)                   model-axis dim
 =========  =========================================  ==================
 ``kv``     k/v        (L, N, P, Hkv, hd)              3 (kv heads)
            k/v_scale  (L, N, P, 1)    [int8 pools]    replicated (tiny)
-``srf``    s          (L, N, Hq, m, dv)               2 (q heads)
-           z          (L, N, Hq, m)                   2 (q heads)
+``srf``    s          (L, S, Hq, m, dv)               2 (q heads)
+           z          (L, S, Hq, m)                   2 (q heads)
 ``mla``    c / kpe    (L, N, P, lora|rope)            replicated (the
                                                       latent IS the
                                                       compressed form)
-``ssd``    conv / ssm (L, N, ...)                     replicated (O(1)
+``ssd``    conv / ssm (L, S, ...)                     replicated (O(1)
                                                       constant state)
+``mem``    enc memory (S, enc_len, d_model)           replicated (read-
+                                                      only, d_model dim)
 =========  =========================================  ==================
+
+Mixed-geometry plans compose these rules per component: a hybrid layer's
+kv sub-pool shards on Hkv while its ssd sub-pool replicates (each shard
+repeats the identical constant-state update inside the shard_map body);
+an enc-dec model shards its self-attention kv pages and replicates the
+encoder-memory pool, with the cross-attention projections column-sliced
+like the self-attention ones.
 
 Head-sharded pools only work when the q/kv head counts divide the model
 axis AND the attention projections are sliced the same way (column-
@@ -44,22 +53,23 @@ from repro.distributed import sharding as S
 def paged_tp(cfg, mesh) -> int:
     """Effective model-axis TP width for paged serving.
 
-    The mesh's ``model`` axis size when the serving family shards (kv /
-    srf with dividing head counts), else 1 — the replication-degradation
-    contract of ``distributed/sharding.py`` applied to page pools. The
-    whole layout degrades at once: a partially sharded attention (pools
-    split but projections whole) cannot run per-shard.
+    The mesh's ``model`` axis size when the plan's ATTENTION component
+    shards (kv / srf with dividing head counts), else 1 — the
+    replication-degradation contract of ``distributed/sharding.py``
+    applied to page pools. The whole layout degrades at once: a partially
+    sharded attention (pools split but projections whole) cannot run
+    per-shard. Pure-SSM stacks and MLA latents always replicate.
     """
     tp = S.axis_size(mesh, "model")
     if tp <= 1:
         return 1
     from repro.serving import paged_cache
-    fam = paged_cache.family_for(cfg).name
-    if fam not in ("kv", "srf"):
-        return 1                       # mla latents / ssd states: replicate
+    plan = paged_cache.plan_for(cfg)
+    if plan.attn_family not in ("kv", "srf"):
+        return 1                       # mla latents / pure ssm: replicate
     if cfg.n_heads % tp or cfg.n_kv_heads % tp:
         return 1
-    if fam == "srf":
+    if plan.attn_family == "srf":
         n_pm = cfg.n_heads if cfg.is_mla else cfg.n_kv_heads
         if n_pm % tp:                  # per-head P-model param stacks
             return 1
@@ -70,35 +80,45 @@ def paged_tp(cfg, mesh) -> int:
 # pool specs
 # ---------------------------------------------------------------------------
 
-def _pool_leaf_spec(name: str, ndim: int, fam: str, tp: int) -> P:
+def _pool_leaf_spec(fam: str, name: str, ndim: int, tp: int) -> P:
     ent = [None] * ndim
     if tp > 1:
         if fam == "kv" and name in ("k", "v") and ndim == 5:
             ent[3] = "model"                       # (L, N, P, Hkv, hd)
         elif fam == "srf" and name in ("s", "z") and ndim >= 4:
-            ent[2] = "model"                       # (L, N, Hq, ...)
+            ent[2] = "model"                       # (L, S, Hq, ...)
     return P(*ent)
 
 
-def pool_specs(cfg, mesh, paged=None) -> List[Dict]:
-    """PartitionSpec pytree matching ``paged_cache.init_pools`` output."""
-    from repro.models import transformer as model_lib
+def pool_specs(cfg, mesh, paged=None) -> Dict:
+    """PartitionSpec pytree matching ``paged_cache.init_pools`` output
+    (the {"paged", "slot"[, "memory"]} container, per-component specs)."""
     from repro.serving import paged_cache
-    fam = paged_cache.family_for(cfg)
+    plan = paged_cache.plan_for(cfg)
     tp = paged_tp(cfg, mesh)
-    one = jax.eval_shape(
-        lambda: fam.layer_pool(cfg, 2, 2, paged))
-    seg_spec = {k: _pool_leaf_spec(k, v.ndim + 1, fam.name, tp)
-                for k, v in one.items()}
-    return [dict(seg_spec) for _ in model_lib.segments(cfg)]
+    specs: Dict = {"paged": [], "slot": []}
+    for kind, count, comps in plan.segments:
+        pseg: Dict = {}
+        sseg: Dict = {}
+        for comp, fam_name in comps:
+            fam = paged_cache.FAMILIES[fam_name]
+            one = jax.eval_shape(
+                lambda f=fam: f.layer_pool(cfg, 2, 2, paged))
+            d = {k: _pool_leaf_spec(fam_name, k, v.ndim + 1, tp)
+                 for k, v in one.items()}
+            (sseg if fam.constant_state else pseg)[comp] = d
+        specs["paged"].append(pseg or None)
+        specs["slot"].append(sseg or None)
+    if plan.has_memory:
+        specs["memory"] = P()
+    return specs
 
 
-def place_pools(pools: List[Dict], cfg, mesh, paged=None) -> List[Dict]:
+def place_pools(pools: Dict, cfg, mesh, paged=None) -> Dict:
     """Lay freshly initialized pools out on the mesh (NamedSharding)."""
     specs = pool_specs(cfg, mesh, paged)
-    return [jax.tree.map(
-                lambda a, s: jax.device_put(a, NamedSharding(mesh, s)), p, sp)
-            for p, sp in zip(pools, specs)]
+    return jax.tree.map(
+        lambda a, s: jax.device_put(a, NamedSharding(mesh, s)), pools, specs)
 
 
 # ---------------------------------------------------------------------------
@@ -107,14 +127,15 @@ def place_pools(pools: List[Dict], cfg, mesh, paged=None) -> List[Dict]:
 
 _STACKED = re.compile(r"^segments/\d+/")
 
-# column parallel only: slice the output (head-block) dim of q/k/v (and
-# the MLA up-projections) so each shard computes its own heads. wo stays
-# REPLICATED on purpose: the step all-gathers the per-shard head blocks
-# (collectives.stitch_heads) and contracts the full wo locally, which
-# reduces d_model in exactly the single-host order — greedy tokens stay
-# bit-identical, where a row-parallel wo + psum re-associates the sum.
-# MLP / embed / head / norms stay replicated too: serving batches are
-# small, attention state is what scales.
+# column parallel only: slice the output (head-block) dim of q/k/v (both
+# self- and cross-attention, and the MLA up-projections) so each shard
+# computes its own heads. wo stays REPLICATED on purpose: the step
+# all-gathers the per-shard head blocks (collectives.stitch_heads) and
+# contracts the full wo locally, which reduces d_model in exactly the
+# single-host order — greedy tokens stay bit-identical, where a
+# row-parallel wo + psum re-associates the sum. MLP / SSM / embed / head
+# / norms and the whole enc-dec ENCODER stay replicated too: serving
+# batches are small, attention state is what scales.
 _COL = re.compile(r"(attn|cross)/(wq|wk|wv|wuk|wuv)$")
 _BIAS = re.compile(r"attn/(bq|bk|bv)$")
 _SRF = re.compile(r"attn/srf/")
@@ -142,6 +163,8 @@ def serving_param_specs(params, cfg, mesh) -> Dict:
 
     def f(path, x):
         ps = S._path_str(path)
+        if ps.startswith("encoder/") or ps.startswith("enc_norm"):
+            return P(*([None] * x.ndim))   # encoder runs outside the step
         if _STACKED.match(ps):
             inner = _serving_rule(ps, x.shape[1:], tp)
             return P(None, *inner)
@@ -158,7 +181,8 @@ def place_params(params, cfg, mesh) -> Dict:
 def local_cfg(cfg, tp: int):
     """The per-shard view of the model config inside the shard_map body:
     head counts divided by the TP width (q_dim/kv_dim are derived, so the
-    sliced wq/wk/wv/wo shapes line up automatically)."""
+    sliced wq/wk/wv/wo — and cross-attention — shapes line up
+    automatically; SSM dims derive from d_model and stay whole)."""
     if tp <= 1:
         return cfg
     import dataclasses

@@ -1,6 +1,6 @@
 """Pooled, pre-allocated decode caches behind one ``CacheFamily`` protocol.
 
-Four families share the allocator and the batched decode step:
+Four per-layer families share the allocator and the batched decode step:
 
 =========  ==============================================  ===============
 family     page contents (per layer)                       state growth
@@ -14,13 +14,26 @@ family     page contents (per layer)                       state growth
            + SSM state (num_slots, nh, ns, hd)             O(1) constant
 =========  ==============================================  ===============
 
-``kv``/``mla`` grow one page per ``page_size`` tokens; ``srf``/``ssd``
-are the paper's constant-size decode states stored as a *single* page
-("slot") per request — the multi-block structured construction keeps
-that layout uniform across head counts, so the same block table indexes
-all four. Pools carry a leading layer axis per model segment and are
-scanned together with the stacked layer params (see
-``transformer.paged_step``).
+``kv``/``mla`` grow one page per ``page_size`` tokens and live in the
+*paged* index domain (page ids from the scheduler's main allocator);
+``srf``/``ssd`` are the paper's constant-size decode states, one fixed
+"slot" per request in the *slot* index domain (slot ids from a separate,
+much smaller allocator). A model mixes domains freely: a hybrid layer
+owns a kv sub-pool AND an ssd sub-pool (``transformer._layer_plan``
+names the components per layer kind), and an enc-dec model adds a
+model-level read-only *encoder-memory* pool — one slot per request,
+written once at admission (the encoder runs exactly once per request)
+and cross-attended by every decoder layer via the paged-gather kernel.
+
+The full pool container is one pytree::
+
+    {"paged": [per-segment {component: {leaf: (L, num_pages, ...)}} | None],
+     "slot":  [per-segment {component: {leaf: (L, num_slots, ...)}} | None],
+     "memory": (num_slots, enc_len, d_model)}      # enc-dec only
+
+Segments mirror ``transformer.segments``; all layers of a segment share
+shapes, so per-layer pools are stacked on a leading layer axis and
+scanned together with the stacked layer params (``transformer.paged_step``).
 """
 from __future__ import annotations
 
@@ -31,7 +44,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.transforms import is_pow2
 from repro.models import transformer as model_lib
 
 
@@ -144,14 +156,8 @@ FAMILIES = {f.name: f for f in (KVFamily(), MLAFamily(), SRFFamily(),
                                 SSDFamily())}
 
 
-def family_for(cfg) -> CacheFamily:
-    """Resolve the cache family a config serves with."""
-    if cfg.is_encdec or cfg.family == "hybrid" or cfg.frontend != "none":
-        raise ValueError(
-            f"paged serving does not support family={cfg.family!r} / "
-            f"frontend={cfg.frontend!r} yet (use serving.legacy.Engine)")
-    if cfg.family == "ssm":
-        return FAMILIES["ssd"]
+def attn_family_for(cfg) -> CacheFamily:
+    """The cache family of the (self-)attention component."""
     if cfg.attn_impl == "srf":
         return FAMILIES["srf"]
     if cfg.is_mla:
@@ -160,40 +166,153 @@ def family_for(cfg) -> CacheFamily:
 
 
 # ---------------------------------------------------------------------------
+# pool plan: which families a config's layers need, per index domain
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class PoolPlan:
+    """Resolved pool geometry of one config.
+
+    ``segments`` mirrors ``transformer._layer_plan``: per decoder segment
+    ``(layer_kind, layer_count, ((component, family_name), ...))``.
+    ``paged_family`` is the O(L) component ("kv"/"mla") if any layer has
+    one; ``slot_families`` are the constant-state components ("srf"/"ssd");
+    ``has_memory`` marks the enc-dec encoder-memory pool. Every request
+    holds ``ceil(len/page_size)`` pages in the paged domain (when
+    ``has_paged``) plus exactly one slot in the slot domain (when
+    ``needs_slot``).
+    """
+    name: str
+    segments: Tuple[Tuple[str, int, Tuple[Tuple[str, str], ...]], ...]
+    paged_family: Optional[str]
+    attn_family: Optional[str]
+    slot_families: Tuple[str, ...]
+    has_memory: bool
+
+    @property
+    def has_paged(self) -> bool:
+        return self.paged_family is not None
+
+    @property
+    def needs_slot(self) -> bool:
+        return bool(self.slot_families) or self.has_memory
+
+    @property
+    def constant_state(self) -> bool:
+        """Per-request state does not grow with generated length."""
+        return not self.has_paged
+
+    def bytes_per_token(self, cfg, max_len: int,
+                        paged: Optional[PagedConfig] = None) -> float:
+        """Per-layer decode-state bytes per token, summed over the state
+        components one (deepest) layer owns; the enc-dec memory slot is
+        amortized over ``max_len`` like the other constant states."""
+        fams = set()
+        for _, _, comps in self.segments:
+            fams |= {f for _, f in comps}
+        total = sum(FAMILIES[f].bytes_per_token(cfg, max_len, paged)
+                    for f in sorted(fams))
+        if self.has_memory:
+            total += cfg.enc_len * cfg.d_model * _dt(cfg).itemsize / max_len
+        return total
+
+
+def plan_for(cfg) -> PoolPlan:
+    """Resolve the pool plan for a config — every registry family serves."""
+    segs = []
+    paged_fam = None
+    attn_fam = None
+    slot_fams: List[str] = []
+    for kind, count, comps in model_lib._layer_plan(cfg):
+        resolved = []
+        for comp in comps:
+            fam = attn_family_for(cfg) if comp == "attn" else FAMILIES["ssd"]
+            resolved.append((comp, fam.name))
+            if comp == "attn":
+                attn_fam = fam.name
+            if fam.constant_state:
+                if fam.name not in slot_fams:
+                    slot_fams.append(fam.name)
+            else:
+                paged_fam = fam.name
+        segs.append((kind, count, tuple(resolved)))
+    parts = []
+    if paged_fam:
+        parts.append(paged_fam)
+    parts += [f for f in slot_fams if f not in parts]
+    if cfg.is_encdec:
+        parts.append("mem")
+    return PoolPlan(name="+".join(parts), segments=tuple(segs),
+                    paged_family=paged_fam, attn_family=attn_fam,
+                    slot_families=tuple(slot_fams),
+                    has_memory=cfg.is_encdec)
+
+
+def family_for(cfg) -> CacheFamily:
+    """The config's PRIMARY cache family (compat shim over ``plan_for``):
+    the attention component's family for attention-bearing stacks, ssd
+    for pure SSM. No config is rejected — hybrid / enc-dec / frontend
+    families all serve through the paged engine (their full geometry is
+    the :class:`PoolPlan`, which mixed-domain callers should use)."""
+    plan = plan_for(cfg)
+    if plan.attn_family is not None:
+        return FAMILIES[plan.attn_family]
+    return FAMILIES[plan.slot_families[0]]
+
+
+# ---------------------------------------------------------------------------
 # pool container
 # ---------------------------------------------------------------------------
 
-def init_pools(cfg, num_pages: int, page_size: int, mesh=None,
-               paged: Optional[PagedConfig] = None) -> List[Dict]:
-    """One pool pytree per model segment, leading axis = layer count.
+def init_pools(cfg, num_pages: int, page_size: int, num_slots: int = 0,
+               mesh=None, paged: Optional[PagedConfig] = None) -> Dict:
+    """Build the full pool pytree (see module docstring for the layout).
 
-    All layers of a segment share shapes, so the per-layer pools are
-    stacked and scanned with the stacked layer params.
+    ``num_pages`` sizes the paged domain, ``num_slots`` the slot domain
+    (constant states + enc-dec memory; slot 0 is the null slot padded
+    batch rows write into). All layers of a segment share shapes, so the
+    per-layer pools are stacked and scanned with the stacked layer params.
 
     ``mesh``: lay the pools out with model-axis ``NamedSharding`` on the
     head/feature dim (``serving.mesh.shard.pool_specs``), degrading to
     replication whenever the dim does not divide — the same contract as
     ``distributed/sharding.py``. The page *tables* stay host-local either
     way (they are scheduler bookkeeping, not device state)."""
-    fam = family_for(cfg)
-    pools = []
-    for kind, count in model_lib.segments(cfg):
-        one = fam.layer_pool(cfg, num_pages, page_size, paged)
-        pools.append(jax.tree.map(
-            lambda a: jnp.broadcast_to(a[None], (count,) + a.shape), one))
+    plan = plan_for(cfg)
+    if plan.needs_slot:
+        num_slots = max(num_slots, 2)
+    pools: Dict = {"paged": [], "slot": []}
+    for kind, count, comps in plan.segments:
+        pseg: Dict = {}
+        sseg: Dict = {}
+        for comp, fam_name in comps:
+            fam = FAMILIES[fam_name]
+            n = num_slots if fam.constant_state else num_pages
+            one = fam.layer_pool(cfg, n, page_size, paged)
+            stacked = jax.tree.map(
+                lambda a: jnp.broadcast_to(a[None], (count,) + a.shape), one)
+            (sseg if fam.constant_state else pseg)[comp] = stacked
+        pools["paged"].append(pseg or None)
+        pools["slot"].append(sseg or None)
+    if plan.has_memory:
+        pools["memory"] = jnp.zeros((num_slots, cfg.enc_len, cfg.d_model),
+                                    _dt(cfg))
     if mesh is not None:
         from .mesh import shard as mesh_shard
         pools = mesh_shard.place_pools(pools, cfg, mesh, paged)
     return pools
 
 
-def pool_page_rows(pools: List[Dict], page_ids: List[int]) -> List[Dict]:
-    """Copy-on-preempt snapshot: pull the given pages of every layer pool
-    to host memory (numpy) so they can be restored after eviction.
-    Synchronous (blocks on the transfer); the engine's hot path uses
-    :func:`snapshot_page_rows_async` instead."""
-    idx = np.asarray(page_ids, np.int32)
-    return [jax.tree.map(lambda a: np.asarray(a[:, idx]), p) for p in pools]
+def _map_segs(segs, fn):
+    return [None if s is None else jax.tree.map(fn, s) for s in segs]
+
+
+def _slice_pools(pools: Dict, page_idx, slot_idx) -> Dict:
+    out = {"paged": _map_segs(pools["paged"], lambda a: a[:, page_idx]),
+           "slot": _map_segs(pools["slot"], lambda a: a[:, slot_idx])}
+    if "memory" in pools:
+        out["memory"] = pools["memory"][slot_idx]
+    return out
 
 
 class PendingSnapshot:
@@ -208,9 +327,9 @@ class PendingSnapshot:
     actually needed (swap-in), by which time the bytes have usually
     already streamed over."""
 
-    def __init__(self, slices: List[Dict]):
-        self._dev: Optional[List[Dict]] = slices
-        self._host: Optional[List[Dict]] = None
+    def __init__(self, slices):
+        self._dev = slices
+        self._host = None
         for leaf in jax.tree.leaves(slices):
             try:
                 leaf.copy_to_host_async()
@@ -223,61 +342,94 @@ class PendingSnapshot:
         if self._dev is not None:
             jax.block_until_ready(self._dev)
 
-    def to_host(self) -> List[Dict]:
+    def to_host(self):
         if self._host is None:
-            self._host = [jax.tree.map(np.asarray, p) for p in self._dev]
+            self._host = jax.tree.map(np.asarray, self._dev)
             self._dev = None
         return self._host
 
 
-def snapshot_page_rows_async(pools: List[Dict],
-                             page_ids: List[int]) -> PendingSnapshot:
-    """Async copy-on-preempt: returns a :class:`PendingSnapshot` whose
-    host transfer overlaps subsequent decode steps."""
-    idx = jnp.asarray(page_ids, jnp.int32)
-    return PendingSnapshot([jax.tree.map(lambda a: a[:, idx], p)
-                            for p in pools])
+def snapshot_page_rows_async(pools: Dict, page_ids: List[int],
+                             slot_ids: List[int]) -> PendingSnapshot:
+    """Async copy-on-preempt over BOTH index domains (and the memory row
+    for enc-dec): returns a :class:`PendingSnapshot` whose host transfer
+    overlaps subsequent decode steps."""
+    return PendingSnapshot(_slice_pools(pools,
+                                        jnp.asarray(page_ids, jnp.int32),
+                                        jnp.asarray(slot_ids, jnp.int32)))
 
 
-def zero_page_rows(pools: List[Dict], page_ids: List[int]) -> List[Dict]:
-    """Reset the given pages of every layer pool to zero. Needed when a
-    freed page is re-issued to a fresh request of a constant-state family
-    (srf/ssd): those pages are running accumulators, so stale content is
-    not masked out downstream the way an unwritten KV row is."""
-    idx = jnp.asarray(page_ids, jnp.int32)
-    return [jax.tree.map(lambda a: a.at[:, idx].set(jnp.zeros((), a.dtype)), p)
-            for p in pools]
+def pool_page_rows(pools: Dict, page_ids: List[int],
+                   slot_ids: List[int]) -> Dict:
+    """Synchronous snapshot (numpy); the engine's hot path uses
+    :func:`snapshot_page_rows_async` instead."""
+    snap = _slice_pools(pools, np.asarray(page_ids, np.int32),
+                        np.asarray(slot_ids, np.int32))
+    return jax.tree.map(np.asarray, snap)
 
 
-def restore_page_rows(pools: List[Dict], page_ids: List[int],
-                      snap) -> List[Dict]:
-    """Inverse of :func:`pool_page_rows`: scatter a snapshot back into
-    (freshly allocated) pages. Accepts either the synchronous host-array
-    form or a :class:`PendingSnapshot`. Returns the updated pools."""
+def zero_slot_rows(pools: Dict, slot_ids: List[int],
+                   zero_memory: bool = True) -> Dict:
+    """Reset the given slots of every constant-state pool (and the memory
+    pool) to zero. Needed when a freed slot is re-issued to a fresh
+    request: srf/ssd states are running accumulators, so stale content is
+    live garbage, not masked-out history like an unwritten KV row.
+    ``zero_memory=False`` skips the enc-dec memory pool — the engine
+    passes it when the encoder is about to overwrite those rows anyway."""
+    idx = jnp.asarray(slot_ids, jnp.int32)
+    out = {"paged": pools["paged"],
+           "slot": _map_segs(pools["slot"],
+                             lambda a: a.at[:, idx].set(
+                                 jnp.zeros((), a.dtype)))}
+    if "memory" in pools:
+        out["memory"] = (pools["memory"].at[idx].set(
+            jnp.zeros((), pools["memory"].dtype)) if zero_memory
+            else pools["memory"])
+    return out
+
+
+def restore_page_rows(pools: Dict, page_ids: List[int], slot_ids: List[int],
+                      snap) -> Dict:
+    """Inverse of the snapshot: scatter saved rows back into (freshly
+    allocated) pages/slots. Accepts either the synchronous host form or a
+    :class:`PendingSnapshot`. Returns the updated pools."""
     if isinstance(snap, PendingSnapshot):
         snap = snap.to_host()
-    idx = jnp.asarray(page_ids, jnp.int32)
-    return [jax.tree.map(lambda a, s: a.at[:, idx].set(
-                jnp.asarray(s, dtype=a.dtype)), p, sn)
-            for p, sn in zip(pools, snap)]
+    pidx = jnp.asarray(page_ids, jnp.int32)
+    sidx = jnp.asarray(slot_ids, jnp.int32)
+
+    def scat(idx):
+        return lambda a, s: a.at[:, idx].set(jnp.asarray(s, dtype=a.dtype))
+
+    out = {"paged": [None if p is None else jax.tree.map(scat(pidx), p, sn)
+                     for p, sn in zip(pools["paged"], snap["paged"])],
+           "slot": [None if p is None else jax.tree.map(scat(sidx), p, sn)
+                    for p, sn in zip(pools["slot"], snap["slot"])]}
+    if "memory" in pools:
+        out["memory"] = pools["memory"].at[sidx].set(
+            jnp.asarray(snap["memory"], dtype=pools["memory"].dtype))
+    return out
 
 
-def apply_moves(pools: List[Dict], moves: Dict[int, int]) -> List[Dict]:
-    """Apply a defrag plan {old: new} to every layer pool."""
+def apply_moves(pools: Dict, moves: Dict[int, int]) -> Dict:
+    """Apply a defrag plan {old: new} to every paged-domain pool (slots
+    never fragment: one per request)."""
     if not moves:
         return pools
     src = jnp.asarray(list(moves.keys()), jnp.int32)
     dst = jnp.asarray(list(moves.values()), jnp.int32)
-    return [jax.tree.map(lambda a: a.at[:, dst].set(a[:, src]), p)
-            for p in pools]
+    out = dict(pools)
+    out["paged"] = _map_segs(pools["paged"],
+                             lambda a: a.at[:, dst].set(a[:, src]))
+    return out
 
 
-def pool_bytes(pools: List[Dict]) -> int:
+def pool_bytes(pools) -> int:
     return sum(int(np.prod(x.shape)) * x.dtype.itemsize
                for x in jax.tree.leaves(pools))
 
 
-def pool_bytes_per_device(pools: List[Dict]) -> int:
+def pool_bytes_per_device(pools) -> int:
     """Bytes one device holds: the per-shard slice for sharded leaves,
     the full leaf for replicated ones (GLOBAL shape / axis product only
     shrinks dims the NamedSharding actually splits)."""

@@ -11,6 +11,15 @@ evicted: its pages are snapshotted to host memory (copy-on-preempt),
 freed, and the sequence re-enters the admission queue to be swapped back
 in later — no work is lost.
 
+Page accounting is MIXED-GEOMETRY per request, driven by the config's
+:class:`~repro.serving.paged_cache.PoolPlan`: the *paged* domain holds
+``ceil(len / page_size)`` growable pages (kv / mla attention state), the
+*slot* domain holds exactly one constant-size slot (srf / ssd states and
+the enc-dec encoder memory). A dense model uses pages only, a pure
+SSM/SRF model slots only, and a hybrid or enc-dec request owns both — a
+request is admitted only when BOTH domains can supply it, and eviction /
+completion returns both.
+
 The scheduler is pure host-side bookkeeping; the engine owns device
 state and tells the scheduler what happened.
 """
@@ -28,8 +37,11 @@ class SchedConfig:
     prefill_batch: int = 4      # prefill rows per step
     prefill_chunk: int = 16     # tokens per prefill chunk
     page_size: int = 16
-    num_pages: int = 64         # pool pages incl. reserved null page
+    num_pages: int = 64         # paged-domain pages incl. reserved null page
     table_width: int = 8        # M: max pages per request
+    num_slots: int = 0          # slot-domain slots incl. reserved null slot
+                                # (0: derive max_batch + 1; unused when the
+                                # plan has no constant-state component)
     policy: str = "fcfs"        # fcfs | priority
 
 
@@ -39,8 +51,9 @@ class Sequence:
     req: object                       # serving.engine.Request
     arrival: int
     table: BlockTable = field(default_factory=BlockTable)
+    slot: Optional[int] = None        # constant-state slot id (plan.needs_slot)
     prefill_pos: int = 0              # prompt tokens already cached
-    snapshot: Optional[list] = None   # host pages while preempted
+    snapshot: Optional[object] = None  # host pages while preempted
     snapshot_pages: List[int] = field(default_factory=list)
 
     @property
@@ -53,10 +66,18 @@ class Sequence:
 
 
 class Scheduler:
-    def __init__(self, cfg: SchedConfig, constant_state: bool):
+    """``plan`` is the config's :class:`~repro.serving.paged_cache.PoolPlan`
+    (anything exposing ``has_paged`` / ``needs_slot`` works)."""
+
+    def __init__(self, cfg: SchedConfig, plan):
         self.cfg = cfg
-        self.constant_state = constant_state
+        self.plan = plan
         self.alloc = BlockAllocator(cfg.num_pages, cfg.page_size)
+        self.num_slots = 0
+        self.slot_alloc: Optional[BlockAllocator] = None
+        if plan.needs_slot:
+            self.num_slots = max(cfg.num_slots or (cfg.max_batch + 1), 2)
+            self.slot_alloc = BlockAllocator(self.num_slots, 1)
         self.waiting: List[Sequence] = []
         self.running: List[Sequence] = []
         self._arrivals = 0
@@ -79,8 +100,9 @@ class Scheduler:
     def fits(self, req) -> bool:
         """Whether this scheduler's pool geometry can ever hold the
         request (the admission capacity rule; shared with the router so
-        the two cannot drift)."""
-        if self.constant_state:
+        the two cannot drift). Slot-domain state is constant-size, so
+        only the paged component bounds the token budget."""
+        if not self.plan.has_paged:
             return True
         return len(req.prompt) + req.max_new <= \
             self.cfg.table_width * self.cfg.page_size
@@ -98,17 +120,18 @@ class Scheduler:
         return seq
 
     def _pages_for(self, n_tokens: int) -> int:
-        if self.constant_state:
-            return 1
+        if not self.plan.has_paged:
+            return 0
         return max(1, -(-n_tokens // self.cfg.page_size))
 
     def admit(self) -> List[Sequence]:
-        """Move waiting sequences into the running set while pages last.
+        """Move waiting sequences into the running set while BOTH domains
+        can supply them (pages for the prompt, one constant-state slot).
         Returns ALL newly admitted sequences; the engine must swap pages
         back in for those carrying a preemption snapshot and zero the
-        (possibly previously used) pages of fresh constant-state admits —
-        srf/ssd states are accumulators, so a stale page is live garbage,
-        not masked-out history like a stale KV row."""
+        (possibly previously used) slots of fresh admits — srf/ssd states
+        are accumulators, so a stale slot is live garbage, not masked-out
+        history like a stale KV row."""
         admitted = []
         for seq in sorted(self.waiting, key=self._rank):
             if len(self.running) >= self.cfg.max_batch:
@@ -120,6 +143,12 @@ class Scheduler:
             pages = self.alloc.alloc(n)
             if pages is None:
                 break                    # head-of-line blocks (no starvation)
+            if self.slot_alloc is not None:
+                slot = self.slot_alloc.alloc(1)
+                if slot is None:
+                    self.alloc.free(pages)
+                    break                # slot domain exhausted: same rule
+                seq.slot = slot[0]
             seq.table.pages = pages
             self.waiting.remove(seq)
             self.running.append(seq)
@@ -143,9 +172,12 @@ class Scheduler:
         """Ensure ``seq`` has a page for its next token. Returns
         (ok, victim): when the pool is exhausted the chosen victim must be
         evicted by the engine (its pages snapshotted + freed) before the
-        decode step; ``ok`` is False if seq itself must stall this step."""
+        decode step; ``ok`` is False if seq itself must stall this step.
+        Constant-state-only plans never grow (the slot is the state)."""
+        if not self.plan.has_paged:
+            return True, None
         need = seq.table.pages_needed(seq.table.length + 1,
-                                      self.cfg.page_size, self.constant_state)
+                                      self.cfg.page_size)
         if need <= 0:
             return True, None
         if len(seq.table.pages) + need > self.cfg.table_width:
@@ -161,12 +193,18 @@ class Scheduler:
 
     # -- eviction / completion ---------------------------------------------
 
-    def evicted(self, seq: Sequence, snapshot) -> None:
-        """Engine snapshotted ``seq``'s pages; return them and requeue."""
-        seq.snapshot = snapshot
-        seq.snapshot_pages = list(seq.table.pages)
+    def _release(self, seq: Sequence) -> None:
         self.alloc.free(seq.table.pages)
         seq.table.pages = []
+        if seq.slot is not None:
+            self.slot_alloc.free([seq.slot])
+            seq.slot = None
+
+    def evicted(self, seq: Sequence, snapshot) -> None:
+        """Engine snapshotted ``seq``'s pages+slot; return them, requeue."""
+        seq.snapshot = snapshot
+        seq.snapshot_pages = list(seq.table.pages)
+        self._release(seq)
         self.running.remove(seq)
         self.waiting.append(seq)
         self.stats["preemptions"] += 1
@@ -176,16 +214,15 @@ class Scheduler:
         seq.snapshot_pages = []
 
     def finished(self, seq: Sequence) -> None:
-        self.alloc.free(seq.table.pages)
-        seq.table.pages = []
+        self._release(seq)
         self.running.remove(seq)
 
     # -- cross-replica migration (serving.mesh.router) ----------------------
 
     def release_waiting(self, seq: Sequence) -> None:
         """Detach a waiting sequence so another replica can adopt it.
-        Waiting sequences hold no pages (fresh or evicted-with-snapshot),
-        so nothing device-side needs to move with them."""
+        Waiting sequences hold no pages or slots (fresh or evicted-with-
+        snapshot), so nothing device-side needs to move with them."""
         self.waiting.remove(seq)
 
     def adopt(self, seq: Sequence) -> None:
@@ -198,15 +235,20 @@ class Scheduler:
         self.waiting.append(seq)
 
     def defrag(self):
-        """Compact live pages to the low end of the pool. Returns the
-        {old: new} move map; the engine must apply it to the device pools
-        AND the scheduler rewrites the block tables here."""
+        """Compact live pages to the low end of the paged pool. Returns
+        the {old: new} move map; the engine must apply it to the device
+        pools AND the scheduler rewrites the block tables here. Slots
+        never fragment (one per request)."""
         moves = self.alloc.defrag_plan()
         if moves:
             for seq in self.running:
                 seq.table.pages = [moves.get(p, p) for p in seq.table.pages]
             self.stats["defrags"] += 1
         return moves
+
+    @property
+    def free_slots(self) -> int:
+        return self.slot_alloc.free_pages if self.slot_alloc else 0
 
     @property
     def has_work(self) -> bool:

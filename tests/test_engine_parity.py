@@ -1,0 +1,177 @@
+"""Cross-engine parity matrix: the paged engine vs the ``serving.legacy``
+per-slot oracle, over EVERY tiny config in ``configs/registry``.
+
+Greedy cells must BIT-MATCH the legacy engine for >= 8 concurrent
+mixed-length requests — continuous batching, chunked prefill, paged
+gathers, per-request encoder memories and hybrid attn+SSM fusion may
+change how the work is scheduled, never what tokens come out.
+Temperature cells pin seeded-sampling determinism: the legacy oracle is
+greedy-only, so they assert that two identically-seeded paged runs are
+bit-identical (and that a different seed actually changes something
+somewhere — the sampler is not a disguised argmax).
+
+MoE archs run with a generous ``moe_capacity_factor``: capacity drops
+are batch-composition-dependent BY DESIGN (tokens compete per group for
+expert slots), so a tight factor would compare drop policies, not
+engines.
+
+The big cells (duplicate family representatives and the widest configs)
+are marked ``slow``; one representative of every pool plan stays fast.
+"""
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.models import frontends
+from repro.models import transformer as T
+from repro.serving import Engine, Request, SchedConfig
+
+
+def _legacy():
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        from repro.serving import legacy
+    return legacy
+
+
+def _cfg(arch, **over):
+    kw = {"n_layers": 2}
+    if registry.get(arch).is_moe:
+        kw["moe_capacity_factor"] = 8.0
+    kw.update(over)
+    return registry.reduced(arch, **kw)
+
+
+def _requests(cfg, n, seed=0, temperature=0.0):
+    rng = np.random.default_rng(seed)
+    out = []
+    for i in range(n):
+        enc = (frontends.synthetic_audio_features(rng, cfg)
+               if cfg.is_encdec else None)
+        out.append(Request(
+            uid=i,
+            prompt=rng.integers(0, cfg.vocab,
+                                int(rng.integers(2, 20))).astype(np.int32),
+            max_new=int(rng.integers(3, 7)),
+            temperature=temperature, enc_emb=enc))
+    return out
+
+
+def _drive(eng, reqs):
+    for r in reqs:
+        eng.submit(r)
+    done = eng.run()
+    return {r.uid: r.out_tokens for r in done}
+
+
+# the fast set keeps one representative per pool plan (kv, srf, ssd,
+# hybrid, enc-dec, mla, moe, vlm); same-family duplicates ride as slow
+_FAST = {"qwen3-4b", "mamba2-2.7b", "hymba-1.5b", "seamless-m4t-large-v2",
+         "deepseek-v2-lite-16b", "qwen2-vl-2b"}
+
+CELLS = [pytest.param(arch, marks=() if arch in _FAST
+                      else (pytest.mark.slow,))
+         for arch in registry.ARCHS]
+
+
+@pytest.mark.parametrize("arch", CELLS)
+def test_greedy_bitmatch_legacy(arch):
+    cfg = _cfg(arch)
+    params = T.init(jax.random.PRNGKey(0), cfg)
+    n = 8
+    paged = _drive(Engine(cfg, params, batch_slots=4, max_len=64),
+                   _requests(cfg, n))
+    legacy = _drive(_legacy().Engine(cfg, params, batch_slots=4, max_len=64),
+                    _requests(cfg, n))
+    assert len(paged) == n
+    assert paged == legacy
+
+
+@pytest.mark.parametrize("arch", CELLS)
+def test_seeded_sampling_deterministic(arch):
+    cfg = _cfg(arch)
+    params = T.init(jax.random.PRNGKey(0), cfg)
+    n = 8
+
+    def run(seed):
+        return _drive(Engine(cfg, params, batch_slots=4, max_len=64,
+                             seed=seed),
+                      _requests(cfg, n, temperature=0.9))
+    a, b, c = run(7), run(7), run(8)
+    assert len(a) == n
+    assert a == b                                # same seed: bit-identical
+    assert all(0 <= t < cfg.vocab for toks in a.values() for t in toks)
+    assert c != a or cfg.vocab <= 2              # the seed is actually live
+
+
+@pytest.mark.parametrize("arch", ["hymba-1.5b", "seamless-m4t-large-v2"])
+def test_new_families_16_concurrent_bitmatch(arch):
+    """Acceptance: the hybrid and enc-dec tiny variants serve >= 16
+    concurrent mixed-length requests through the paged engine and
+    bit-match the legacy oracle's greedy decode."""
+    cfg = _cfg(arch)
+    params = T.init(jax.random.PRNGKey(0), cfg)
+    n = 16
+    eng = Engine(cfg, params, batch_slots=8, max_len=64)
+    paged = _drive(eng, _requests(cfg, n, seed=3))
+    legacy = _drive(_legacy().Engine(cfg, params, batch_slots=8, max_len=64),
+                    _requests(cfg, n, seed=3))
+    assert len(paged) == n
+    assert paged == legacy
+    assert eng.sched.alloc.used_pages == 0       # every page returned
+    assert eng.free_slots == eng.usable_slots    # every slot returned
+
+
+def test_hybrid_preemption_restores_both_domains():
+    """Tight paged pool forces eviction of hybrid sequences mid-decode;
+    the copy-on-preempt snapshot must carry BOTH the kv pages and the ssd
+    slot state, so swap-in reproduces the unconstrained outputs exactly."""
+    cfg = _cfg("hymba-1.5b")
+    params = T.init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab, 3).astype(np.int32)
+               for _ in range(4)]
+
+    def drive(sched):
+        eng = Engine(cfg, params, batch_slots=4, max_len=16, sched=sched)
+        for i, p in enumerate(prompts):
+            eng.submit(Request(uid=i, prompt=p.copy(), max_new=10))
+        done = eng.run()
+        return {r.uid: r.out_tokens for r in done}, eng.stats["preemptions"]
+
+    tight = SchedConfig(max_batch=4, prefill_batch=2, prefill_chunk=4,
+                        page_size=4, num_pages=9, table_width=4)
+    roomy = SchedConfig(max_batch=4, prefill_batch=2, prefill_chunk=4,
+                        page_size=4, num_pages=33, table_width=4)
+    out_tight, n_pre = drive(tight)
+    out_roomy, _ = drive(roomy)
+    assert n_pre > 0, "pool was not tight enough to force preemption"
+    assert out_tight == out_roomy
+
+
+@pytest.mark.parametrize("arch,over", [
+    ("mamba2-2.7b", {}),
+    ("qwen3-4b", {"attn_impl": "srf"}),
+    ("hymba-1.5b", {}),
+    ("seamless-m4t-large-v2", {}),
+], ids=["ssd", "srf", "hybrid", "encdec"])
+def test_constant_state_zeroed_on_reuse(arch, over):
+    """Regression for the PR 4 bug: constant-state slots are accumulators,
+    so a slot re-issued to a later request must start from zero. Two
+    waves through the SAME engine (slots reused) must match fresh-engine
+    outputs for the second wave."""
+    cfg = _cfg(arch, **over)
+    params = T.init(jax.random.PRNGKey(0), cfg)
+    wave1 = _requests(cfg, 6, seed=1)
+    wave2 = _requests(cfg, 6, seed=2)
+
+    eng = Engine(cfg, params, batch_slots=4, max_len=64)
+    _drive(eng, wave1)
+    got = _drive(eng, wave2)                     # reuses freed slots
+
+    fresh = Engine(cfg, params, batch_slots=4, max_len=64)
+    want = _drive(fresh, _requests(cfg, 6, seed=2))
+    assert got == want

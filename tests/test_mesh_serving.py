@@ -42,26 +42,54 @@ def test_paged_tp_gates_by_family_and_divisibility():
     assert mesh_shard.paged_tp(cfg_mla, _fake_mesh(2)) == 1  # latents replicate
     cfg_ssd = registry.reduced("mamba2-2.7b")
     assert mesh_shard.paged_tp(cfg_ssd, _fake_mesh(2)) == 1
+    # hybrid / enc-dec gate on their ATTENTION component's head counts
+    cfg_hy = registry.reduced("hymba-1.5b")
+    assert mesh_shard.paged_tp(cfg_hy, _fake_mesh(2)) == 2
+    assert mesh_shard.paged_tp(cfg_hy, _fake_mesh(4)) == 1   # 2 kv heads % 4
+    cfg_ed = registry.reduced("seamless-m4t-large-v2")
+    assert mesh_shard.paged_tp(cfg_ed, _fake_mesh(2)) == 2
 
 
 def test_pool_specs_shard_head_dim_only():
     mesh = _fake_mesh(2)
     cfg = registry.reduced("qwen3-4b")
     specs = mesh_shard.pool_specs(cfg, mesh)
-    assert specs[0]["k"] == P(None, None, None, "model", None)
-    assert specs[0]["v"] == P(None, None, None, "model", None)
+    attn = specs["paged"][0]["attn"]
+    assert attn["k"] == P(None, None, None, "model", None)
+    assert attn["v"] == P(None, None, None, "model", None)
+    assert specs["slot"] == [None]
     # int8 layout: values shard, the tiny per-row scales replicate
     specs_q = mesh_shard.pool_specs(cfg, mesh, PagedConfig(quantize_kv=True))
-    assert specs_q[0]["k"] == P(None, None, None, "model", None)
-    assert specs_q[0]["k_scale"] == P(None, None, None, None)
+    assert specs_q["paged"][0]["attn"]["k"] == P(None, None, None, "model",
+                                                 None)
+    assert specs_q["paged"][0]["attn"]["k_scale"] == P(None, None, None, None)
     cfg_srf = registry.reduced("qwen3-4b", attn_impl="srf")
     specs_s = mesh_shard.pool_specs(cfg_srf, mesh)
-    assert specs_s[0]["s"] == P(None, None, "model", None, None)
-    assert specs_s[0]["z"] == P(None, None, "model", None)
+    assert specs_s["slot"][0]["attn"]["s"] == P(None, None, "model", None,
+                                                None)
+    assert specs_s["slot"][0]["attn"]["z"] == P(None, None, "model", None)
+    assert specs_s["paged"] == [None]
     # degradation: everything replicated
     cfg_mla = registry.reduced("deepseek-v2-lite-16b")
-    for s in mesh_shard.pool_specs(cfg_mla, mesh)[0].values():
+    for s in mesh_shard.pool_specs(cfg_mla, mesh)["paged"][0]["attn"].values():
         assert all(e is None for e in s)
+
+
+def test_pool_specs_mixed_families():
+    """Hybrid: kv sub-pool shards on the kv-head dim, the ssd sub-pool of
+    the SAME layer replicates; enc-dec: kv shards, memory replicates."""
+    mesh = _fake_mesh(2)
+    cfg = registry.reduced("hymba-1.5b")
+    specs = mesh_shard.pool_specs(cfg, mesh)
+    seg_p, seg_s = specs["paged"][0], specs["slot"][0]
+    assert seg_p["attn"]["k"] == P(None, None, None, "model", None)
+    for s in seg_s["ssm"].values():
+        assert all(e is None for e in s)
+    cfg_ed = registry.reduced("seamless-m4t-large-v2")
+    specs_ed = mesh_shard.pool_specs(cfg_ed, mesh)
+    assert specs_ed["paged"][0]["attn"]["k"] == \
+        P(None, None, None, "model", None)
+    assert specs_ed["memory"] == P()
 
 
 def test_serving_param_specs_attention_only():
@@ -114,9 +142,16 @@ def test_int8_paged_kv_close_to_fp_and_smaller():
 def test_int8_quantize_kv_only_affects_kv_family():
     from repro.serving import paged_cache
     cfg = registry.reduced("mamba2-2.7b")
-    pools = paged_cache.init_pools(cfg, 4, 8,
+    pools = paged_cache.init_pools(cfg, 4, 8, num_slots=4,
                                    paged=PagedConfig(quantize_kv=True))
-    assert "k_scale" not in pools[0]
+    assert pools["paged"] == [None]
+    assert set(pools["slot"][0]["ssm"]) == {"conv", "ssm"}
+    # hybrid: the kv sub-pool quantizes, the ssd sub-pool next to it not
+    cfg_hy = registry.reduced("hymba-1.5b", n_layers=2)
+    pools_hy = paged_cache.init_pools(cfg_hy, 4, 8, num_slots=4,
+                                      paged=PagedConfig(quantize_kv=True))
+    assert "k_scale" in pools_hy["paged"][0]["attn"]
+    assert set(pools_hy["slot"][0]) == {"ssm"}
 
 
 # ---------------------------------------------------------------------------
@@ -188,6 +223,77 @@ def test_migrated_outputs_match_unmigrated():
     assert got == want
 
 
+def test_router_single_replica_is_passthrough():
+    """A 1-replica router must behave exactly like the bare engine: same
+    outputs, every request homed on replica 0, zero migrations."""
+    cfg = registry.reduced("qwen3-4b", n_layers=2)
+    params = T.init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(5)
+    prompts = [rng.integers(0, cfg.vocab, int(rng.integers(3, 12)))
+               .astype(np.int32) for _ in range(5)]
+
+    solo = Engine(cfg, params, batch_slots=4, max_len=64)
+    for i, p in enumerate(prompts):
+        solo.submit(Request(uid=i, prompt=p.copy(), max_new=5))
+    want = {r.uid: r.out_tokens for r in solo.run()}
+
+    router = Router([Engine(cfg, params, batch_slots=4, max_len=64)])
+    for i, p in enumerate(prompts):
+        router.submit(Request(uid=i, prompt=p.copy(), max_new=5))
+    got = {r.uid: r.out_tokens for r in router.run()}
+    assert got == want
+    assert set(router.home.values()) == {0}
+    assert router.stats["migrations"] == 0
+    assert router.migrate() == 0                 # no-op fast path
+
+
+def test_router_all_replicas_saturated_no_thrash():
+    """When EVERY replica is saturated there is nowhere meaningfully
+    roomier: a migration pass moves nothing, and the router still drains
+    the backlog by normal admission as pages free up."""
+    cfg = registry.reduced("qwen3-4b", n_layers=2)
+    params = T.init(jax.random.PRNGKey(0), cfg)
+    tight = SchedConfig(max_batch=1, prefill_batch=1, prefill_chunk=8,
+                        page_size=8, num_pages=3, table_width=2)
+    engines = [Engine(cfg, params, sched=tight) for _ in range(2)]
+    router = Router(engines)
+    prompt = np.arange(1, 7, dtype=np.int32)
+    for i in range(8):                   # 4-deep backlog on each replica
+        engines[i % 2].submit(Request(uid=i, prompt=prompt.copy(),
+                                      max_new=4))
+        router.home[i] = i % 2
+    for e in engines:                    # admit the head of each queue
+        e.sched.admit()
+    assert all(router._headroom(e) < 0 for e in engines)  # both saturated
+    assert router.migrate() == 0         # symmetric pressure: no move
+    done = router.run()
+    assert len(done) == 8
+    assert all(len(r.out_tokens) == 4 for r in done)
+
+
+def test_router_skips_replica_with_zero_free_pages():
+    """Placement must not pick a replica whose pool is fully allocated."""
+    cfg = registry.reduced("qwen3-4b", n_layers=2)
+    params = T.init(jax.random.PRNGKey(0), cfg)
+    tight = SchedConfig(max_batch=2, prefill_batch=1, prefill_chunk=8,
+                        page_size=8, num_pages=3, table_width=2)
+    e0 = Engine(cfg, params, sched=tight)
+    e1 = Engine(cfg, params, batch_slots=4, max_len=64)
+    router = Router([e0, e1])
+    # occupy replica 0 completely: 9 prompt tokens -> both usable pages
+    e0.submit(Request(uid=0, prompt=np.arange(1, 10, dtype=np.int32),
+                      max_new=4))
+    router.home[0] = 0
+    e0.sched.admit()
+    assert e0.free_pages == 0
+    idx = router.submit(Request(uid=1,
+                                prompt=np.arange(1, 6, dtype=np.int32),
+                                max_new=4))
+    assert idx == 1                      # zero-free-page replica skipped
+    done = router.run()
+    assert len(done) == 2
+
+
 # ---------------------------------------------------------------------------
 # 8-device subprocess: sharded pools end to end
 # ---------------------------------------------------------------------------
@@ -207,26 +313,32 @@ _SUBPROC = textwrap.dedent("""
     FAMS = [("kv", "qwen3-4b", {}),
             ("srf", "qwen3-4b", {"attn_impl": "srf"}),
             ("mla", "deepseek-v2-lite-16b", {}),
-            ("ssd", "mamba2-2.7b", {})]
+            ("ssd", "mamba2-2.7b", {}),
+            ("hybrid", "hymba-1.5b", {}),
+            ("encdec", "seamless-m4t-large-v2", {})]
     rng = np.random.default_rng(0)
     for fam, arch, over in FAMS:
+        from repro.models import frontends
         cfg = registry.reduced(arch, n_layers=2, **over)
         params = T.init(jax.random.PRNGKey(0), cfg)
         spec = [(int(rng.integers(2, 20)), int(rng.integers(3, 8)))
                 for _ in range(16)]
         prompts = [rng.integers(0, cfg.vocab, pl).astype(np.int32)
                    for pl, _ in spec]
+        encs = [frontends.synthetic_audio_features(rng, cfg)
+                if cfg.is_encdec else None for _ in spec]
 
         single = Engine(cfg, params, batch_slots=8, max_len=64)
-        for i, ((pl, mn), p) in enumerate(zip(spec, prompts)):
-            single.submit(Request(uid=i, prompt=p, max_new=mn))
+        for i, ((pl, mn), p, e) in enumerate(zip(spec, prompts, encs)):
+            single.submit(Request(uid=i, prompt=p, max_new=mn, enc_emb=e))
         want = {r.uid: r.out_tokens for r in single.run()}
 
         meshes = mesh_lib.make_serving_meshes(replicas=2, model_parallel=2)
         router = Router([Engine(cfg, params, batch_slots=8, max_len=64,
                                 mesh=m) for m in meshes])
-        for i, ((pl, mn), p) in enumerate(zip(spec, prompts)):
-            router.submit(Request(uid=i, prompt=p.copy(), max_new=mn))
+        for i, ((pl, mn), p, e) in enumerate(zip(spec, prompts, encs)):
+            router.submit(Request(uid=i, prompt=p.copy(), max_new=mn,
+                                  enc_emb=e))
         got = {r.uid: r.out_tokens for r in router.run()}
 
         assert got == want, f"{fam}: token mismatch"
@@ -235,7 +347,11 @@ _SUBPROC = textwrap.dedent("""
         tp = mesh_shard.paged_tp(cfg, meshes[0])
         pbd = router.engines[0].cache_report()["pool_bytes_per_device"]
         pb = single.cache_report()["pool_bytes"]
-        if tp > 1:                      # kv / srf shard; mla / ssd exempt
+        if fam in ("hybrid", "encdec"):
+            # mixed plans: the kv sub-pool shards (1/TP bytes), the ssd /
+            # memory sub-pools replicate -> strictly between pb/tp and pb
+            assert pb / tp < pbd < pb, (fam, pbd, pb)
+        elif tp > 1:                    # kv / srf shard; mla / ssd exempt
             assert pbd * tp == pb, (fam, pbd, pb)
         else:
             assert pbd == pb, (fam, pbd, pb)
@@ -309,7 +425,7 @@ def test_mesh_serving_subprocess_end_to_end():
     out = subprocess.run([sys.executable, "-c", _SUBPROC], env=env,
                          capture_output=True, text=True, timeout=900)
     tail = out.stdout + out.stderr[-3000:]
-    for fam in ("kv", "srf", "mla", "ssd"):
+    for fam in ("kv", "srf", "mla", "ssd", "hybrid", "encdec"):
         assert f"FAM_OK {fam}" in out.stdout, tail
     assert "PREEMPT_OK" in out.stdout, tail
     assert "INT8_MESH_OK" in out.stdout, tail

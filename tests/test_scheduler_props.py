@@ -1,0 +1,169 @@
+"""Property-based scheduler invariants: random admit / prefill / grow /
+evict / finish sequences over every pool-plan shape must never leak
+capacity —
+
+  * free + used page count is conserved in BOTH index domains,
+  * no page (and no constant-state slot) ever serves two requests,
+  * waiting sequences hold no device capacity at all,
+  * the null page / null slot (id 0) is never handed out.
+
+Two layers: a deterministic seeded fuzz that ALWAYS runs, and a
+hypothesis-driven version (optional dependency, like in
+``test_structured.py``) that explores adversarial op orderings when the
+library is installed. Both share the same op interpreter and invariant
+checker.
+
+The companion engine-level regression for the PR 4 zeroing bug
+(constant-state slots must start from zero on reuse) lives in
+``test_engine_parity.test_constant_state_zeroed_on_reuse`` — zeroing is
+the ENGINE's device-side duty, the scheduler only hands out ids.
+"""
+import random
+
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.serving import SchedConfig, Scheduler, plan_for
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                    # optional dep
+    HAVE_HYPOTHESIS = False
+
+
+PLANS = {
+    "kv": plan_for(registry.reduced("qwen3-4b")),
+    "srf": plan_for(registry.reduced("qwen3-4b", attn_impl="srf")),
+    "ssd": plan_for(registry.reduced("mamba2-2.7b")),
+    "hybrid": plan_for(registry.reduced("hymba-1.5b")),
+    "encdec": plan_for(registry.reduced("seamless-m4t-large-v2")),
+}
+
+_SCHED = SchedConfig(max_batch=4, prefill_batch=2, prefill_chunk=4,
+                     page_size=4, num_pages=13, table_width=4, num_slots=5)
+_CAP = _SCHED.table_width * _SCHED.page_size
+
+
+class _Req:
+    def __init__(self, uid, plen, max_new):
+        self.uid = uid
+        self.prompt = np.zeros((plen,), np.int32)
+        self.max_new = max_new
+        self.priority = 0
+
+
+def _check_invariants(sched: Scheduler):
+    a = sched.alloc
+    assert a.free_pages + a.used_pages == a.num_pages - 1
+    owned = [p for s in sched.running for p in s.table.pages]
+    assert len(owned) == len(set(owned)), "page serves two requests"
+    assert set(owned) == a._allocated, "allocator/table drift"
+    assert 0 not in owned, "null page handed out"
+    if sched.slot_alloc is not None:
+        sa = sched.slot_alloc
+        assert sa.free_pages + sa.used_pages == sa.num_pages - 1
+        slots = [s.slot for s in sched.running if s.slot is not None]
+        assert len(slots) == len(set(slots)), "slot serves two requests"
+        assert set(slots) == sa._allocated
+        assert 0 not in slots, "null slot handed out"
+        if sched.plan.needs_slot:
+            assert all(s.slot is not None for s in sched.running)
+    for s in sched.waiting:
+        assert not s.table.pages and s.slot is None, \
+            "waiting sequence holds device capacity"
+
+
+def _run_ops(plan, ops):
+    """Interpret (op, r) pairs against a fresh scheduler, checking the
+    invariants after every op, then drain and require nothing leaked."""
+    sched = Scheduler(_SCHED, plan)
+    uid = 0
+    for op, r in ops:
+        if op == 0:                                    # submit
+            plen = r % 10 + 1
+            sched.submit(_Req(uid, plen, min(_CAP - plen, r % 6 + 1)))
+            uid += 1
+        elif op == 1:                                  # admit (+restore)
+            for s in sched.admit():
+                if s.snapshot is not None:
+                    sched.restored(s)                  # engine swaps in
+        elif op == 2 and sched.running:                # prefill progress
+            for s in sched.prefill_work():
+                n = min(s.prompt_len - s.prefill_pos, _SCHED.prefill_chunk)
+                s.prefill_pos += n
+                s.table.length = s.prefill_pos
+        elif op == 3 and sched.running:                # decode growth
+            seq = sched.running[r % len(sched.running)]
+            if not seq.prefill_done:
+                continue
+            ok, victim = sched.grow_for_decode(seq)
+            if ok:
+                seq.table.length += 1
+            elif victim is not None:                   # engine evicts
+                sched.evicted(victim, snapshot="host-bytes")
+        elif op == 4 and sched.running:                # finish
+            sched.finished(sched.running[r % len(sched.running)])
+        _check_invariants(sched)
+    # drain: everything still queued can eventually run — blocked only
+    # by capacity, never by a leak
+    for _ in range(200):
+        if not sched.waiting:
+            break
+        for s in sched.admit():
+            if s.snapshot is not None:
+                sched.restored(s)
+        for s in list(sched.running):
+            sched.finished(s)
+        _check_invariants(sched)
+    assert not sched.waiting, "leaked capacity starved the queue"
+    for s in list(sched.running):
+        sched.finished(s)
+    assert sched.alloc.used_pages == 0
+    if sched.slot_alloc is not None:
+        assert sched.slot_alloc.used_pages == 0
+
+
+@pytest.mark.parametrize("plan_name", sorted(PLANS))
+def test_scheduler_never_leaks_capacity_seeded_fuzz(plan_name):
+    """Always-run layer: 60 deterministic random op sequences per plan."""
+    rng = random.Random(0xC0FFEE ^ hash(plan_name) % (1 << 30))
+    for _ in range(60):
+        ops = [(rng.randint(0, 4), rng.randint(0, 1 << 16))
+               for _ in range(rng.randint(0, 80))]
+        _run_ops(PLANS[plan_name], ops)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=60, deadline=None)
+    @given(plan_name=st.sampled_from(sorted(PLANS)),
+           ops=st.lists(st.tuples(st.integers(0, 4),
+                                  st.integers(0, 2 ** 16)),
+                        max_size=80))
+    def test_scheduler_never_leaks_capacity_hypothesis(plan_name, ops):
+        _run_ops(PLANS[plan_name], ops)
+
+
+@pytest.mark.parametrize("n", [1, 2, 5, 12])
+def test_mixed_geometry_admission_is_all_or_nothing(n):
+    """A hybrid request that gets pages but no slot (or vice versa) must
+    not be half-admitted: either both domains supply it or neither is
+    charged."""
+    for seed in range(5):
+        rng = np.random.default_rng(seed)
+        sched = Scheduler(SchedConfig(max_batch=8, prefill_batch=4,
+                                      prefill_chunk=4, page_size=4,
+                                      num_pages=40, table_width=4,
+                                      num_slots=3),
+                          PLANS["hybrid"])
+        for i in range(n):
+            sched.submit(_Req(i, int(rng.integers(1, 12)), 2))
+        admitted = sched.admit()
+        # only 2 usable slots: admission is slot-bound regardless of pages
+        assert len(admitted) == min(n, 2)
+        used = sum(len(s.table.pages) for s in sched.running)
+        assert sched.alloc.used_pages == used
+        assert sched.slot_alloc.used_pages == len(admitted)
+        for s in sched.waiting:
+            assert not s.table.pages and s.slot is None
