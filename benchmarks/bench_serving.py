@@ -58,14 +58,27 @@ def _requests(cfg, n, seed=0):
 
 
 def _drive(eng, reqs):
+    from repro.obs import latency_summary
     for r in reqs:
         eng.submit(r)
-    t0 = time.time()
+    t0 = time.perf_counter()
     done = eng.run()
-    wall = time.time() - t0
+    wall = time.perf_counter() - t0
     toks = sum(len(r.out_tokens) for r in done)
     ttft = np.mean([r.t_first - r.t_submit for r in done]) * 1e3
-    return wall, toks, ttft
+    return wall, toks, ttft, latency_summary(done)
+
+
+def _pct_fields(summ) -> Dict:
+    """Flatten a latency_summary into ttft_ms_p50/.../tpot_ms_p99 JSON
+    fields (ms, rounded; None for empty samples so the JSON stays
+    standard — json NaN is an extension)."""
+    out = {}
+    for kind in ("ttft", "tpot"):
+        for pk, v in summ[f"{kind}_s"].items():
+            out[f"{kind}_ms_{pk}"] = (round(v * 1e3, 2)
+                                      if v == v else None)
+    return out
 
 
 def _bench_pair(fam, arch, over, concurrency, seed=0) -> Dict:
@@ -82,19 +95,23 @@ def _bench_pair(fam, arch, over, concurrency, seed=0) -> Dict:
     slots = min(concurrency, 16)
 
     eng = Engine(cfg, params, batch_slots=slots, max_len=64, seed=seed)
-    wall_p, toks_p, ttft_p = _drive(eng, _requests(cfg, concurrency, seed))
+    wall_p, toks_p, ttft_p, summ_p = _drive(eng,
+                                            _requests(cfg, concurrency, seed))
 
     leg = legacy.Engine(cfg, params, batch_slots=slots, max_len=64)
-    wall_l, toks_l, ttft_l = _drive(leg, _requests(cfg, concurrency, seed))
+    wall_l, toks_l, ttft_l, summ_l = _drive(leg,
+                                            _requests(cfg, concurrency, seed))
 
     return {"family": fam, "arch": arch, "concurrency": concurrency,
             "paged": {"tok_s": round(toks_p / wall_p, 2),
                       "ttft_ms": round(float(ttft_p), 1),
                       "us_per_tok": round(wall_p / max(toks_p, 1) * 1e6),
-                      "preemptions": eng.sched.stats["preemptions"]},
+                      "preemptions": eng.sched.stats["preemptions"],
+                      **_pct_fields(summ_p)},
             "legacy": {"tok_s": round(toks_l / wall_l, 2),
                        "ttft_ms": round(float(ttft_l), 1),
-                       "us_per_tok": round(wall_l / max(toks_l, 1) * 1e6)},
+                       "us_per_tok": round(wall_l / max(toks_l, 1) * 1e6),
+                       **_pct_fields(summ_l)},
             "speedup": round((toks_p / wall_p) / (toks_l / wall_l), 3)}
 
 
@@ -136,7 +153,8 @@ def reqs(n):
 
 def drive(eng, rs):
     for r in rs: eng.submit(r)
-    t0 = time.time(); done = eng.run(); wall = time.time() - t0
+    t0 = time.perf_counter(); done = eng.run()
+    wall = time.perf_counter() - t0
     return wall, sum(len(r.out_tokens) for r in done), {r.uid: r.out_tokens
                                                         for r in done}
 

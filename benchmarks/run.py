@@ -12,9 +12,10 @@ import time
 
 SUITES = ["coherence", "speed", "fused", "pipeline", "compression",
           "srf_attention", "kernel_quality",
-          "serving"]   # serving/fused/pipeline run fast smoke modes;
+          "serving",   # serving/fused/pipeline run fast smoke modes;
                        # serving smoke covers kv/srf plus the hybrid and
                        # enc-dec mixed-geometry plans end to end
+          "obs"]       # metrics-on vs metrics-off decode overhead
 
 
 def main(argv=None):

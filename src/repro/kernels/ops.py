@@ -13,6 +13,11 @@ kernels/README.md for the table. ``REPRO_FORCE_PALLAS`` overrides the
 auto route for debugging: ``1``/``true`` force the Pallas path (native on
 TPU, interpret elsewhere), ``native``/``interpret`` force that exact
 mode, ``0``/``false``/``ref`` force the jnp reference.
+
+Every dispatch runs through ``repro.obs.profiling.dispatch``: the call is
+wrapped in a ``jax.named_scope`` (profiler/HLO-visible, free at runtime)
+and, after ``obs.enable_kernel_timing(registry)``, eager dispatches are
+timed to completion into ``kernel_dispatch_seconds{kernel=...}``.
 """
 from __future__ import annotations
 
@@ -24,6 +29,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import transforms
+from repro.obs import profiling as _prof
 
 from . import circulant as _circ
 from . import fwht as _fwht
@@ -81,8 +87,9 @@ def fwht(x: jax.Array, normalized: bool = True,
     a, b = transforms.kron_factors(n)
     route = _route(use_pallas, x.size * (a + b))     # Kronecker-sandwich MACs
     if route == "ref":
-        return _ref.fwht_ref(x, normalized)
-    return _fwht.fwht_pallas(x, normalized, interpret=(route == "interpret"))
+        return _prof.dispatch("fwht", lambda: _ref.fwht_ref(x, normalized))
+    return _prof.dispatch("fwht", lambda: _fwht.fwht_pallas(
+        x, normalized, interpret=(route == "interpret")))
 
 
 def circulant_project(g: jax.Array, x: jax.Array, m: int,
@@ -91,9 +98,13 @@ def circulant_project(g: jax.Array, x: jax.Array, m: int,
                       use_pallas: Optional[bool] = None) -> jax.Array:
     route = _route(use_pallas, x.shape[0] * x.shape[-1] * m)   # B*n*m MACs
     if route == "ref":
-        return _ref.circulant_project_ref(g, x, m, epilogue, sq)
-    return _circ.circulant_project_pallas(
-        g, x, m, epilogue, sq, interpret=(route == "interpret"))
+        return _prof.dispatch("circulant_project",
+                              lambda: _ref.circulant_project_ref(
+                                  g, x, m, epilogue, sq))
+    return _prof.dispatch("circulant_project",
+                          lambda: _circ.circulant_project_pallas(
+                              g, x, m, epilogue, sq,
+                              interpret=(route == "interpret")))
 
 
 def paged_gather(pool: jax.Array, tables: jax.Array,
@@ -102,9 +113,11 @@ def paged_gather(pool: jax.Array, tables: jax.Array,
     r, m = tables.shape
     route = _route(use_pallas, r * m * pool.shape[1] * pool.shape[2])
     if route == "ref":
-        return _ref.paged_gather_ref(pool, tables)
-    return _pgather.paged_gather_pallas(pool, tables,
-                                        interpret=(route == "interpret"))
+        return _prof.dispatch("paged_gather",
+                              lambda: _ref.paged_gather_ref(pool, tables))
+    return _prof.dispatch("paged_gather",
+                          lambda: _pgather.paged_gather_pallas(
+                              pool, tables, interpret=(route == "interpret")))
 
 
 def paged_gather_dequant(pool: jax.Array, scales: jax.Array,
@@ -116,18 +129,26 @@ def paged_gather_dequant(pool: jax.Array, scales: jax.Array,
     r, m = tables.shape
     route = _route(use_pallas, r * m * pool.shape[1] * pool.shape[2])
     if route == "ref":
-        return _ref.paged_gather_dequant_ref(pool, scales, tables, out_dtype)
-    return _pgather.paged_gather_dequant_pallas(
-        pool, scales, tables, out_dtype, interpret=(route == "interpret"))
+        return _prof.dispatch("paged_gather_dequant",
+                              lambda: _ref.paged_gather_dequant_ref(
+                                  pool, scales, tables, out_dtype))
+    return _prof.dispatch("paged_gather_dequant",
+                          lambda: _pgather.paged_gather_dequant_pallas(
+                              pool, scales, tables, out_dtype,
+                              interpret=(route == "interpret")))
 
 
 def srf_decode(s, z, phi_q, phi_k, v, eps: float = 1e-6,
                use_pallas: Optional[bool] = None):
     route = _route(use_pallas, s.size)               # state bytes dominate
     if route == "ref":
-        return _ref.srf_decode_ref(s, z, phi_q, phi_k, v, eps)
-    return _dec.srf_decode_pallas(s, z, phi_q, phi_k, v, eps,
-                                  interpret=(route == "interpret"))
+        return _prof.dispatch("srf_decode",
+                              lambda: _ref.srf_decode_ref(
+                                  s, z, phi_q, phi_k, v, eps))
+    return _prof.dispatch("srf_decode",
+                          lambda: _dec.srf_decode_pallas(
+                              s, z, phi_q, phi_k, v, eps,
+                              interpret=(route == "interpret")))
 
 
 # ---------------------------------------------------------------------------
@@ -306,7 +327,9 @@ def spinner_project(kind: str, params: Dict[str, jax.Array], x: jax.Array,
                                       epilogue=epilogue, dtype=x.dtype)
         block_b = block_b or auto_b
         block_m = block_m or auto_m
-    return _spinner_call(kind, g, x, m, d0, d1, h, epilogue=epilogue,
-                         y_scale=y_scale, out_scale=out_scale,
-                         grouped=grouped, route=route,
-                         block_b=block_b, block_m=block_m)
+    return _prof.dispatch(
+        "spinner_project",
+        lambda: _spinner_call(kind, g, x, m, d0, d1, h, epilogue=epilogue,
+                              y_scale=y_scale, out_scale=out_scale,
+                              grouped=grouped, route=route,
+                              block_b=block_b, block_m=block_m))

@@ -18,6 +18,15 @@ for comparison.
 ``--replicas``/``--model-parallel`` route requests across engine
 replicas whose page pools are model-axis sharded (``serving/mesh``);
 ``--quantize-kv`` stores KV pages as int8 with per-page-row scales.
+
+Telemetry: every engine replica and the router share ONE
+``obs.MetricsRegistry``; ``--metrics`` prints a live one-line report
+every ``--metrics-every`` seconds plus a final latency-percentile dump,
+``--metrics-out FILE`` additionally writes the Prometheus text
+exposition (+ ``FILE.events.jsonl``), and ``--kernel-timing`` records
+per-dispatch kernel wall times (eager dispatches only; serializing, so
+off by default). All output routes through ``obs.report.Reporter`` —
+this module is lint-pinned print-free (``tests/test_obs.py``).
 """
 from __future__ import annotations
 
@@ -28,9 +37,11 @@ import time
 import jax
 import numpy as np
 
+from repro import obs
 from repro.configs import registry
 from repro.launch import mesh as mesh_lib
 from repro.models import transformer as model_lib
+from repro.obs.report import Reporter
 from repro.serving import Engine, PagedConfig, Request, Router
 
 
@@ -56,9 +67,24 @@ def main(argv=None):
                     help="model-axis TP width per replica (shards pools)")
     ap.add_argument("--quantize-kv", action="store_true",
                     help="int8 KV pages + per-page-row scales (kv family)")
+    ap.add_argument("--metrics", action="store_true",
+                    help="periodic one-line metrics report + final "
+                         "latency-percentile dump from the shared registry")
+    ap.add_argument("--metrics-every", type=float, default=2.0,
+                    help="seconds between periodic metrics lines")
+    ap.add_argument("--metrics-out", default=None,
+                    help="write Prometheus text exposition here "
+                         "(+ .events.jsonl) at exit")
+    ap.add_argument("--kernel-timing", action="store_true",
+                    help="record per-dispatch kernel wall times (eager "
+                         "dispatches only; serializes the device pipeline)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
+    rep = Reporter()
+    metrics = obs.MetricsRegistry()
+    if args.kernel_timing:
+        obs.enable_kernel_timing(metrics)
     overrides = {"attn_impl": args.attn} if args.attn else {}
     cfg = registry.reduced(args.arch, **overrides)
     params = model_lib.init(jax.random.PRNGKey(args.seed), cfg)
@@ -72,14 +98,15 @@ def main(argv=None):
                                               args.model_parallel)
         eng = Router([Engine(cfg, params, batch_slots=args.slots,
                              max_len=args.max_len, policy=args.policy,
-                             seed=args.seed + i, mesh=m, paged=paged)
-                      for i, m in enumerate(meshes)])
+                             seed=args.seed + i, mesh=m, paged=paged,
+                             metrics=metrics)
+                      for i, m in enumerate(meshes)], metrics=metrics)
     else:
         eng = Engine(cfg, params, batch_slots=args.slots,
                      max_len=args.max_len, policy=args.policy,
-                     seed=args.seed, paged=paged)
+                     seed=args.seed, paged=paged, metrics=metrics)
     rng = np.random.default_rng(args.seed)
-    t0 = time.time()
+    t0 = time.perf_counter()
     for i in range(args.requests):
         prompt = rng.integers(0, cfg.vocab,
                               args.prompt_len).astype(np.int32)
@@ -92,22 +119,35 @@ def main(argv=None):
                            temperature=args.temperature,
                            top_k=args.top_k, top_p=args.top_p,
                            enc_emb=enc))
-    done = eng.run()
-    dt = time.time() - t0
+    on_step = (rep.periodic(metrics, every_s=args.metrics_every)
+               if args.metrics and not args.legacy else None)
+    done = (eng.run() if args.legacy else eng.run(on_step=on_step))
+    dt = time.perf_counter() - t0
     tok = sum(len(r.out_tokens) for r in done)
     engine = ("legacy" if args.legacy else
               "router" if isinstance(eng, Router) else "paged")
-    print(f"arch={args.arch} attn={cfg.attn_impl} engine={engine} "
-          f"requests={len(done)} tokens={tok} wall={dt:.2f}s "
-          f"tok/s={tok/dt:.1f}")
+    rep.line(f"arch={args.arch} attn={cfg.attn_impl} engine={engine} "
+             f"requests={len(done)} tokens={tok} wall={dt:.2f}s "
+             f"tok/s={tok/dt:.1f}")
     if isinstance(eng, Router):
-        print(f"  router: {eng.describe()}")
-        print(f"  replica0 report: {eng.engines[0].cache_report()}")
+        rep.line(f"  router: {eng.describe()}")
+        rep.line(f"  replica0 report: {eng.engines[0].cache_report()}")
     elif not args.legacy:
-        print(f"  sched: {eng.sched.stats}  report: {eng.cache_report()}")
+        rep.line(f"  sched: {dict(eng.sched.stats)}  "
+                 f"report: {eng.cache_report()}")
     for r in done[:3]:
-        print(f"  req{r.uid}: ttft={r.t_first - r.t_submit:.3f}s "
-              f"out={r.out_tokens[:8]}...")
+        rep.line(f"  req{r.uid}: ttft={r.t_first - r.t_submit:.3f}s "
+                 f"out={r.out_tokens[:8]}...")
+    if args.metrics or args.metrics_out:
+        rep.final(metrics, done, dump_path=args.metrics_out)
+    if args.kernel_timing and not metrics.snapshot()["histograms"].get(
+            "kernel_dispatch_seconds"):
+        rep.line("[metrics] kernel-timing: no eager dispatches recorded — "
+                 "the serving loop runs under jit, where timed dispatches "
+                 "are skipped by design; named_scope annotations still "
+                 "land in profiler timelines. Sample "
+                 "kernel_dispatch_seconds via direct ops calls or "
+                 "benchmarks instead.")
     return 0
 
 

@@ -1,0 +1,22 @@
+"""Serving observability: a labelled metrics registry, per-request
+lifecycle traces, kernel profiling hooks, a live embedding-quality
+probe, and the launcher's reporter.
+
+The registry (``obs.metrics``) is the single source of truth for every
+counter the serving stack used to keep in ad-hoc ``stats`` dicts —
+those dicts survive as :class:`~repro.obs.metrics.StatsView` compat
+views reading straight from the registry. Traces (``obs.trace``) stamp
+each request's queued → admitted → prefill → first-token → decode →
+done lifecycle (plus preemption / restore / migration events) and
+derive TTFT / TPOT / queue-time / e2e latencies. ``obs.profiling``
+annotates kernel dispatches with ``jax.named_scope`` and, opt-in,
+times each eager dispatch into the registry. ``obs.quality`` samples
+the paper's row-statistics (Def. 1 calibration) from live serving
+params. ``obs.report`` owns all human-facing printing for the serving
+launcher.
+"""
+from .metrics import (Counter, Gauge, Histogram,        # noqa: F401
+                      MetricsRegistry, StatsView)
+from .trace import Trace, latency_summary, percentiles  # noqa: F401
+from .profiling import (annotate, dispatch,             # noqa: F401
+                        disable_kernel_timing, enable_kernel_timing)

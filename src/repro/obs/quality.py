@@ -1,0 +1,77 @@
+"""Live embedding-quality probe: the paper's row statistics sampled
+from *serving* params.
+
+``bench_coherence`` measures the structured-spinner quality parameters
+(chi / mu / mu~, Defs. 2-4 of the paper) offline; a live engine has
+until now had no signal that the projections it is actually serving
+are still calibrated. This probe samples the cheap Def. 1 row
+statistics — per-row mean and variance of the materialized structured
+block, which must look N(0, I)-row-like for the concentration theorem
+(Thm 10) to hold — from one representative head of the live SRF
+pipeline params, and the engine publishes them as gauges
+(``srf_row_mean_abs_max`` / ``srf_row_var_err_max``): a drift away
+from (0, 1) rows means drifted embedding quality, visible per scrape
+instead of per offline bench.
+
+The expensive coherence-graph parameters stay available behind
+``full=True`` (one ``core.coherence.pmodel_stats`` jacobian per block)
+for offline/debug use; the engine's periodic sampling uses the cheap
+path only.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import numpy as np
+
+
+def _find_srf_params(params):
+    """First layer's per-head SRF pipeline params inside a serving
+    param tree (leaves stacked (layers, heads, ...)), or None."""
+    for seg in params.get("segments", []):
+        attn = seg.get("attn") if isinstance(seg, dict) else None
+        if isinstance(attn, dict) and "srf" in attn:
+            return attn["srf"]
+    return None
+
+
+def srf_quality_probe(cfg, params, full: bool = False,
+                      layer: int = 0, head: int = 0
+                      ) -> Optional[Dict[str, float]]:
+    """Row-statistics report for the SRF embedding a live engine serves.
+
+    Returns None for non-SRF configs. Cheap by default (one block
+    materialization per pipeline block, no jacobians):
+
+      srf_row_mean_abs_max — max over blocks of max |row mean|
+      srf_row_var_err_max  — max over blocks of max |row var - 1|
+
+    ``full=True`` adds chi / mu / mu~ per block via
+    ``core.coherence.pmodel_stats`` (EXPENSIVE: jacfwd over the budget
+    of randomness; offline use only).
+    """
+    if getattr(cfg, "attn_impl", None) != "srf":
+        return None
+    sp = _find_srf_params(params)
+    if sp is None:
+        return None
+    from repro.models.attention import srf_cfg     # lazy: avoid cycles
+    pipe = srf_cfg(cfg).pipeline
+    # one representative (layer, head): quality parameters are identical
+    # in distribution across heads (independent same-spec pipelines)
+    one = jax.tree_util.tree_map(lambda a: np.asarray(a)[layer, head], sp)
+    moments = pipe.row_gaussianity_moments(tuple(dict(p) for p in one))
+    mean_abs = max(float(np.max(np.abs(np.asarray(m)))) for m, _ in moments)
+    var_err = max(float(np.max(np.abs(np.asarray(v) - 1.0)))
+                  for _, v in moments)
+    out = {"srf_row_mean_abs_max": mean_abs,
+           "srf_row_var_err_max": var_err}
+    if full:
+        from repro.core import coherence
+        for i, (blk, p) in enumerate(zip(pipe.blocks,
+                                         tuple(dict(p) for p in one))):
+            st = coherence.block_stats(blk, p)
+            for k in ("chi", "mu", "mu_tilde"):
+                out[f"block{i}_{k}"] = st[k]
+    return out

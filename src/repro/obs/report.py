@@ -1,0 +1,112 @@
+"""Serving reporter: the ONE place the serving stack prints from.
+
+``launch/serve.py`` and everything under ``serving/`` are lint-pinned
+print-free (``tests/test_obs.py::test_no_bare_print_in_serving``); all
+human-facing output routes through a :class:`Reporter` so the metrics
+report and the old ad-hoc summary lines cannot drift apart — both read
+the same registry.
+
+Usage (what ``serve.py --metrics`` does):
+
+    reporter = Reporter()
+    on_step = reporter.periodic(registry, every_s=2.0)
+    engine.run(on_step=on_step)            # one-line report every 2 s
+    reporter.final(registry, done)         # latency percentiles + dump
+"""
+from __future__ import annotations
+
+import math
+import sys
+import time
+from typing import Callable, IO, Iterable, Optional
+
+from . import trace as trace_lib
+
+
+def _fmt_ms(v: float) -> str:
+    return "nan" if v is None or math.isnan(v) else f"{v * 1e3:.1f}"
+
+
+class Reporter:
+    """Formats and prints serving telemetry read from a registry."""
+
+    def __init__(self, stream: Optional[IO[str]] = None, prefix: str = ""):
+        self.stream = stream or sys.stdout
+        self.prefix = prefix
+
+    def line(self, msg: str) -> None:
+        print(self.prefix + msg, file=self.stream, flush=True)
+
+    # -- periodic one-liner --------------------------------------------------
+
+    def periodic(self, registry, every_s: float = 2.0
+                 ) -> Callable[[object], None]:
+        """Returns an ``on_step`` callback: every ``every_s`` seconds of
+        engine stepping, print one line of live registry state."""
+        state = {"t0": time.perf_counter(), "last": time.perf_counter(),
+                 "last_tokens": 0}
+
+        def on_step(_engine) -> None:
+            now = time.perf_counter()
+            if now - state["last"] < every_s:
+                return
+            tokens = registry.value_sum("engine_tokens_total")
+            dt = now - state["last"]
+            rate = (tokens - state["last_tokens"]) / dt if dt > 0 else 0.0
+            state["last"], state["last_tokens"] = now, tokens
+            self.line(
+                f"[metrics] t={now - state['t0']:.1f}s tokens={int(tokens)} "
+                f"tok/s={rate:.1f} "
+                f"done={int(registry.value_sum('engine_requests_total'))} "
+                f"running={int(registry.value_sum('sched_running'))} "
+                f"waiting={int(registry.value_sum('sched_waiting'))} "
+                f"free_pages={int(registry.value_sum('sched_free_pages'))} "
+                f"preempt={int(registry.value_sum('engine_preemptions_total'))} "
+                f"migrations="
+                f"{int(registry.value_sum('router_migrations_total'))}")
+        return on_step
+
+    # -- final dump ----------------------------------------------------------
+
+    def final(self, registry, requests: Iterable = (),
+              dump_path: Optional[str] = None) -> None:
+        """Per-request latency percentiles + counter totals, all from the
+        single registry / the finished requests' traces. ``dump_path``
+        additionally writes the Prometheus text exposition there and the
+        JSONL event stream to ``<dump_path>.events.jsonl``."""
+        summ = trace_lib.latency_summary(requests)
+        self.line("[metrics] ---- final ----")
+        self.line(
+            f"[metrics] requests={int(registry.value_sum('engine_requests_total'))} "
+            f"tokens={int(registry.value_sum('engine_tokens_total'))} "
+            f"prefill_steps="
+            f"{int(registry.value_sum('engine_prefill_steps_total'))} "
+            f"decode_steps="
+            f"{int(registry.value_sum('engine_decode_steps_total'))} "
+            f"preemptions="
+            f"{int(registry.value_sum('engine_preemptions_total'))}")
+        for kind in ("ttft", "tpot", "queue", "e2e"):
+            pct = summ[f"{kind}_s"]
+            self.line(f"[metrics] {kind}_ms " + " ".join(
+                f"{k}={_fmt_ms(v)}" for k, v in pct.items()))
+        mig = registry.value_sum("router_migrations_total")
+        sub = registry.value_sum("router_submitted_total")
+        if sub:
+            heads = registry.snapshot()["gauges"].get("router_headroom", {})
+            self.line(f"[metrics] router submitted={int(sub)} "
+                      f"migrations={int(mig)} headroom={heads}")
+        qual = registry.snapshot()["gauges"].get("srf_quality", {})
+        if qual:
+            self.line(f"[metrics] srf_quality {qual}")
+        kern = registry.snapshot()["histograms"].get(
+            "kernel_dispatch_seconds", {})
+        for lbl, cs in sorted(kern.items()):
+            self.line(f"[metrics] kernel {lbl} n={cs['count']} "
+                      f"mean_ms={_fmt_ms(cs['sum'] / max(1, cs['count']))}")
+        if dump_path:
+            with open(dump_path, "w") as f:
+                f.write(registry.prometheus_text())
+            with open(dump_path + ".events.jsonl", "w") as f:
+                n = registry.dump_events_jsonl(f)
+            self.line(f"[metrics] dumped {dump_path} "
+                      f"(+{n} events -> {dump_path}.events.jsonl)")

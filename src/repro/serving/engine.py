@@ -24,6 +24,7 @@ reserved null page / null slot.
 """
 from __future__ import annotations
 
+import itertools
 import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
@@ -33,6 +34,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.launch import steps as step_lib
+from repro.obs import metrics as obs_metrics
+from repro.obs import quality as obs_quality
+from repro.obs import trace as obs_trace
+
 from . import paged_cache
 from .sampler import sample as _sample
 from .scheduler import SchedConfig, Scheduler, Sequence
@@ -51,9 +56,12 @@ class Request:
     enc_emb: Optional[np.ndarray] = None  # (enc_len, feat) enc-dec input
     out_tokens: List[int] = field(default_factory=list)
     done: bool = False
+    # monotonic (perf_counter) stamps — wall-clock time.time() steps
+    # corrupt TTFT/TPOT; trace carries the full lifecycle
     t_submit: float = 0.0
     t_first: float = 0.0
     t_done: float = 0.0
+    trace: Optional[obs_trace.Trace] = None
 
 
 def _default_sched(cfg, batch_slots: int, max_len: int, plan,
@@ -71,6 +79,11 @@ def _default_sched(cfg, batch_slots: int, max_len: int, plan,
                        num_pages=2 * batch_slots * width + 1,
                        table_width=width, num_slots=batch_slots + 1,
                        policy=policy)
+
+
+# distinct label value per engine instance: replicas sharing one registry
+# must not share counter children (``router.describe`` reads per-engine)
+_ENGINE_IDS = itertools.count()
 
 
 class Engine:
@@ -104,16 +117,22 @@ class Engine:
     def __init__(self, cfg, params, batch_slots: int = 4,
                  max_len: int = 512, sched: Optional[SchedConfig] = None,
                  policy: str = "fcfs", seed: int = 0, mesh=None,
-                 paged: Optional[paged_cache.PagedConfig] = None):
+                 paged: Optional[paged_cache.PagedConfig] = None,
+                 metrics: Optional[obs_metrics.MetricsRegistry] = None,
+                 quality_every: int = 64):
         self.cfg = cfg
         self.plan = paged_cache.plan_for(cfg)
         self.mesh = mesh
         self.paged = paged or paged_cache.PagedConfig()
+        self.metrics = metrics if metrics is not None \
+            else obs_metrics.MetricsRegistry()
+        self.engine_id = str(next(_ENGINE_IDS))
         if sched is None:
             sched = _default_sched(cfg, batch_slots, max_len, self.plan,
                                    policy)
         self.sched_cfg = sched
-        self.sched = Scheduler(sched, self.plan)
+        self.sched = Scheduler(sched, self.plan, metrics=self.metrics,
+                               labels={"engine": self.engine_id})
         self.pools = paged_cache.init_pools(cfg, sched.num_pages,
                                             sched.page_size,
                                             num_slots=self.sched.num_slots,
@@ -130,9 +149,78 @@ class Engine:
                         if cfg.is_encdec else None)
         self._rng = jax.random.PRNGKey(seed)
         self._pending_snaps: List[paged_cache.PendingSnapshot] = []
-        self.stats: Dict[str, float] = {
-            "tokens": 0, "requests": 0, "prefill_steps": 0,
-            "decode_steps": 0, "preemptions": 0}
+        self._init_metrics()
+        self._quality_every = (quality_every
+                               if getattr(cfg, "attn_impl", None) == "srf"
+                               else 0)
+        # primed so the FIRST decode step publishes a sample — short runs
+        # (fewer than quality_every steps) still see the live gauge
+        self._steps_since_quality = max(0, self._quality_every - 1)
+
+    # -- metrics -------------------------------------------------------------
+
+    def _init_metrics(self) -> None:
+        """Bind this engine's children in the (possibly shared) registry;
+        ``self.stats`` stays API-compatible with the old ad-hoc dict as
+        a read-only view over the registry."""
+        lab = {"engine": self.engine_id}
+        m = self.metrics
+        c = lambda name, help: m.counter(name, help,  # noqa: E731
+                                         ("engine",)).labels(**lab)
+        h = lambda name, help: m.histogram(           # noqa: E731
+            name, help, ("engine",)).labels(**lab)
+        self._c_tokens = c("engine_tokens_total", "tokens generated")
+        self._c_requests = c("engine_requests_total", "requests finished")
+        self._c_prefill_steps = c("engine_prefill_steps_total",
+                                  "batched prefill-chunk steps")
+        self._c_decode_steps = c("engine_decode_steps_total",
+                                 "batched decode steps")
+        self._c_preemptions = c("engine_preemptions_total",
+                                "copy-on-preempt evictions")
+        self._h_ttft = h("request_ttft_seconds", "time to first token")
+        self._h_tpot = h("request_tpot_seconds", "per-output-token time "
+                         "after the first")
+        self._h_queue = h("request_queue_seconds", "submit -> admission")
+        self._h_e2e = h("request_e2e_seconds", "submit -> done")
+        self.stats = obs_metrics.StatsView({
+            "tokens": self._c_tokens.value,
+            "requests": self._c_requests.value,
+            "prefill_steps": self._c_prefill_steps.value,
+            "decode_steps": self._c_decode_steps.value,
+            "preemptions": self._c_preemptions.value,
+        })
+        self._sample_memory_gauges()
+
+    def _sample_memory_gauges(self) -> None:
+        """Device-memory gauges from the pool container (pools are
+        preallocated, so bytes are constant per engine; free/used page
+        and slot gauges track live via the scheduler)."""
+        lab = {"engine": self.engine_id}
+        g = self.metrics.gauge("pool_bytes", "total pool bytes (all "
+                               "devices)", ("engine",)).labels(**lab)
+        g.set(paged_cache.pool_bytes(self.pools))
+        gd = self.metrics.gauge("pool_bytes_per_device",
+                                "pool bytes resident per device",
+                                ("engine",)).labels(**lab)
+        gd.set(paged_cache.pool_bytes_per_device(self.pools))
+
+    def _maybe_sample_quality(self) -> None:
+        """Every ``quality_every`` decode steps, publish the paper's row
+        statistics (Def. 1 calibration) of the live SRF params as gauges
+        — the live counterpart of ``bench_coherence``'s offline report."""
+        if not self._quality_every or not self.metrics.enabled:
+            return
+        self._steps_since_quality += 1
+        if self._steps_since_quality < self._quality_every:
+            return
+        self._steps_since_quality = 0
+        stats = obs_quality.srf_quality_probe(self.cfg, self.params)
+        if not stats:
+            return
+        gq = self.metrics.gauge("srf_quality", "live embedding row "
+                                "statistics (Def. 1)", ("engine", "stat"))
+        for k, v in stats.items():
+            gq.labels(engine=self.engine_id, stat=k).set(v)
 
     # -- public API ---------------------------------------------------------
 
@@ -141,15 +229,24 @@ class Engine:
             raise ValueError(
                 "enc-dec serving needs Request.enc_emb (frontend features "
                 f"({self.cfg.enc_len}, feat)); request uid={req.uid} has none")
-        req.t_submit = time.time()
+        now = time.perf_counter()
+        req.t_submit = now
+        if req.trace is None:
+            req.trace = obs_trace.Trace(uid=req.uid)
+        req.trace.stamp("queued", now)
+        self.metrics.event("queued", uid=req.uid, engine=self.engine_id)
         self.sched.submit(req)
 
-    def run(self) -> List[Request]:
-        """Drain all submitted requests; returns the completed ones."""
+    def run(self, on_step=None) -> List[Request]:
+        """Drain all submitted requests; returns the completed ones.
+        ``on_step(engine)`` is called after every scheduler iteration
+        (the reporter's periodic-metrics hook)."""
         tracked = [s.req for s in self.sched.waiting + self.sched.running]
         stall = 0
         while self.sched.has_work:
             progressed = self.step()
+            if on_step is not None:
+                on_step(self)
             stall = 0 if progressed else stall + 1
             if stall > 2:
                 raise RuntimeError(
@@ -163,13 +260,20 @@ class Engine:
         any sequence is still prefilling, else one batched decode step.
         Returns False when nothing could run (allocator exhausted)."""
         admitted = self.sched.admit()
+        now = time.perf_counter() if admitted else 0.0
         fresh: List[Sequence] = []
         for seq in admitted:
+            if seq.req.trace is not None:
+                seq.req.trace.stamp("admitted", now)
             if seq.snapshot is not None:
                 self.pools = paged_cache.restore_page_rows(
                     self.pools, seq.table.pages, self._slot_ids(seq),
                     seq.snapshot)
                 self.sched.restored(seq)
+                if seq.req.trace is not None:
+                    seq.req.trace.stamp("restored", now)
+                self.metrics.event("restored", uid=seq.req.uid,
+                                   engine=self.engine_id)
             elif seq.slot is not None:
                 # constant-state slots are accumulators: a reused slot
                 # must start from zero, not the previous request's state
@@ -262,6 +366,8 @@ class Engine:
         finishing: List[Optional[Sequence]] = [None] * b
         for i, seq in enumerate(work):
             start = seq.prefill_pos
+            if start == 0 and seq.req.trace is not None:
+                seq.req.trace.stamp("prefill")
             chunk = np.asarray(seq.req.prompt[start:start + c], np.int32)
             n = len(chunk)
             tokens[i, :n] = chunk
@@ -281,14 +387,53 @@ class Engine:
             logits[:, :, : self.cfg.vocab],
             jnp.asarray(last_row)[:, None, None], axis=1)[:, 0]
         toks = self._sample_rows(rows, [s or work[0] for s in finishing], b)
-        now = time.time()
+        now = time.perf_counter()
         for i, seq in enumerate(finishing):
             if seq is None:
                 continue
-            seq.req.out_tokens.append(int(toks[i]))
+            tok = int(toks[i])
+            seq.req.out_tokens.append(tok)
             seq.req.t_first = now
-            self.stats["tokens"] += 1
-        self.stats["prefill_steps"] += 1
+            if seq.req.trace is not None:
+                seq.req.trace.stamp("first_token", now)
+            self._c_tokens.inc()
+            # the first token can already satisfy eos/max_new — finishing
+            # here keeps max_new=1 at exactly one emitted token and frees
+            # the pages/slot a step earlier (previously such a request
+            # took one extra decode step and emitted max_new+1 tokens)
+            if tok == seq.req.eos_id or \
+                    len(seq.req.out_tokens) >= seq.req.max_new:
+                self._finish(seq, now)
+        self._c_prefill_steps.inc()
+
+    # -- completion ----------------------------------------------------------
+
+    def _finish(self, seq: Sequence, now: float) -> None:
+        """Mark one sequence done (from prefill or decode): latency
+        histograms from its trace, pages/slot back to the scheduler."""
+        req = seq.req
+        req.done = True
+        req.t_done = now
+        tr = req.trace
+        if tr is not None:
+            tr.stamp("done", now)
+            q, ttft, e2e = tr.queue_time, tr.ttft, tr.e2e
+            tpot = tr.tpot(len(req.out_tokens))
+        else:                             # externally built request
+            q, ttft = 0.0, req.t_first - req.t_submit
+            e2e, tpot = now - req.t_submit, None
+        if q is not None:
+            self._h_queue.observe(q)
+        if ttft is not None:
+            self._h_ttft.observe(ttft)
+        if e2e is not None:
+            self._h_e2e.observe(e2e)
+        if tpot is not None:
+            self._h_tpot.observe(tpot)
+        self._c_requests.inc()
+        self.metrics.event("done", uid=req.uid, engine=self.engine_id,
+                           tokens=len(req.out_tokens))
+        self.sched.finished(seq)
 
     # -- decode -------------------------------------------------------------
 
@@ -297,7 +442,11 @@ class Engine:
             self.pools, victim.table.pages, self._slot_ids(victim))
         self._pending_snaps.append(snap)
         self.sched.evicted(victim, snap)
-        self.stats["preemptions"] += 1
+        if victim.req.trace is not None:
+            victim.req.trace.stamp("preempted")
+        self.metrics.event("preempted", uid=victim.req.uid,
+                           engine=self.engine_id)
+        self._c_preemptions.inc()
 
     def _decode_step(self, ready: List[Sequence]) -> bool:
         sc = self.sched_cfg
@@ -328,19 +477,20 @@ class Engine:
             slots[i] = seq.slot or 0
         logits, self.pools = self._run_step(tokens, pos, qv, tables, slots)
         toks = self._sample_rows(logits[:, 0, : self.cfg.vocab], batch, b)
-        now = time.time()
+        now = time.perf_counter()
         for i, seq in enumerate(batch):
             seq.table.length += 1
             tok = int(toks[i])
             seq.req.out_tokens.append(tok)
-            self.stats["tokens"] += 1
+            if seq.req.trace is not None and \
+                    seq.req.trace.count("decode") == 0:
+                seq.req.trace.stamp("decode", now)
+            self._c_tokens.inc()
             if tok == seq.req.eos_id or \
                     len(seq.req.out_tokens) >= seq.req.max_new:
-                seq.req.done = True
-                seq.req.t_done = now
-                self.stats["requests"] += 1
-                self.sched.finished(seq)
-        self.stats["decode_steps"] += 1
+                self._finish(seq, now)
+        self._c_decode_steps.inc()
+        self._maybe_sample_quality()
         return True
 
     def defrag(self) -> None:

@@ -58,12 +58,16 @@ class Engine:
         self.stats: Dict[str, float] = {"tokens": 0, "requests": 0}
 
     def submit(self, req: Request):
-        req.t_submit = time.time()
+        req.t_submit = time.perf_counter()
         self.queue.append(req)
 
     def _fill_slots(self, extra_batch: Optional[Dict] = None):
         for i in range(self.slots):
-            if self.active[i] is None and self.queue:
+            # loop: a request whose FIRST token already satisfies
+            # eos/max_new finishes at prefill and never occupies the slot
+            # (matches the paged engine's finish-at-prefill path, so the
+            # parity matrix holds at max_new=1 too)
+            while self.active[i] is None and self.queue:
                 req = self.queue.pop(0)
                 batch = {"tokens": jnp.asarray(req.prompt[None, :])}
                 if getattr(req, "enc_emb", None) is not None:
@@ -74,7 +78,14 @@ class Engine:
                 logits, cache = self._prefill(self.params, batch, cache)
                 nxt = int(jnp.argmax(logits[0, -1, : self.cfg.vocab]))
                 req.out_tokens.append(nxt)
-                req.t_first = time.time()
+                now = time.perf_counter()
+                req.t_first = now
+                self.stats["tokens"] += 1
+                if nxt == req.eos_id or len(req.out_tokens) >= req.max_new:
+                    req.done = True
+                    req.t_done = now
+                    self.stats["requests"] += 1
+                    continue
                 self.caches[i] = cache
                 self.active[i] = req
 
@@ -90,7 +101,7 @@ class Engine:
             self.stats["tokens"] += 1
             if t == req.eos_id or len(req.out_tokens) >= req.max_new:
                 req.done = True
-                req.t_done = time.time()
+                req.t_done = time.perf_counter()
                 self.stats["requests"] += 1
                 self.active[i] = None
 

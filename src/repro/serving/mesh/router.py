@@ -24,6 +24,8 @@ from typing import Dict, List, Optional
 
 import jax
 
+from repro.obs import metrics as obs_metrics
+
 from ..engine import Engine, Request
 from ..scheduler import Sequence
 
@@ -42,7 +44,8 @@ class Router:
     """Spread requests across engine replicas; migrate under pressure."""
 
     def __init__(self, engines: List[Engine],
-                 cfg: Optional[RouterConfig] = None):
+                 cfg: Optional[RouterConfig] = None,
+                 metrics: Optional[obs_metrics.MetricsRegistry] = None):
         if not engines:
             raise ValueError("router needs >= 1 engine replica")
         fam = engines[0].plan.name
@@ -51,8 +54,26 @@ class Router:
         self.engines = list(engines)
         self.cfg = cfg or RouterConfig()
         self.home: Dict[int, int] = {}       # request uid -> replica index
-        self.stats: Dict[str, float] = {"submitted": 0, "migrations": 0,
-                                        "steps": 0}
+        # control-plane series live in replica 0's registry by default —
+        # a serve deployment hands every engine ONE shared registry, so
+        # the router's counters land next to the per-engine ones and a
+        # single scrape covers the whole deployment
+        self.metrics = metrics if metrics is not None else engines[0].metrics
+        self._c_submitted = self.metrics.counter(
+            "router_submitted_total", "requests routed to a replica")
+        self._c_migrations = self.metrics.counter(
+            "router_migrations_total", "waiting sequences moved between "
+            "replicas under pressure")
+        self._c_steps = self.metrics.counter(
+            "router_steps_total", "router drive rounds")
+        self._g_headroom = self.metrics.gauge(
+            "router_headroom", "discounted free capacity per replica "
+            "(pages/slots minus queued demand)", ("replica",))
+        self.stats = obs_metrics.StatsView({
+            "submitted": self._c_submitted.value,
+            "migrations": self._c_migrations.value,
+            "steps": self._c_steps.value,
+        })
 
     # -- pressure ------------------------------------------------------------
 
@@ -95,7 +116,8 @@ class Router:
                 continue
             eng.submit(req)
             self.home[req.uid] = idx
-            self.stats["submitted"] += 1
+            self._c_submitted.inc()
+            self.metrics.event("routed", uid=req.uid, replica=idx)
             return idx
         raise ValueError(
             f"request uid={req.uid} fits no replica "
@@ -185,8 +207,12 @@ class Router:
                                              # ones behind it still might
                 src.sched.release_waiting(seq)
                 dst.sched.adopt(seq)
+                if seq.req.trace is not None:
+                    seq.req.trace.stamp("migrated")
                 self.home[seq.req.uid] = dst_i
-                self.stats["migrations"] += 1
+                self._c_migrations.inc()
+                self.metrics.event("migrated", uid=seq.req.uid,
+                                   src=src_i, dst=dst_i)
                 moved += 1
                 src_hr = self._headroom(src)
         return moved
@@ -206,16 +232,21 @@ class Router:
                 progressed = eng.step() or progressed
         if self.migrate() > 0:
             progressed = True
-        self.stats["steps"] += 1
+        self._c_steps.inc()
+        for i, hr in enumerate(self.pressure()):
+            self._g_headroom.labels(replica=i).set(hr)
         return progressed
 
-    def run(self) -> List[Request]:
-        """Drain all submitted requests; returns the completed ones."""
+    def run(self, on_step=None) -> List[Request]:
+        """Drain all submitted requests; returns the completed ones.
+        ``on_step(router)`` fires after every round (periodic reporter)."""
         tracked = [s.req for e in self.engines
                    for s in e.sched.waiting + e.sched.running]
         stall = 0
         while self.has_work:
             progressed = self.step()
+            if on_step is not None:
+                on_step(self)
             stall = 0 if progressed else stall + 1
             if stall > 2 + len(self.engines):
                 free = [(e.free_pages, e.free_slots) for e in self.engines]

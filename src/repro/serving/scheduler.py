@@ -26,7 +26,9 @@ state and tells the scheduler what happened.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import List, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
+
+from repro.obs import metrics as obs_metrics
 
 from .blocks import BlockAllocator, BlockTable
 
@@ -69,7 +71,8 @@ class Scheduler:
     """``plan`` is the config's :class:`~repro.serving.paged_cache.PoolPlan`
     (anything exposing ``has_paged`` / ``needs_slot`` works)."""
 
-    def __init__(self, cfg: SchedConfig, plan):
+    def __init__(self, cfg: SchedConfig, plan, metrics=None,
+                 labels: Optional[Dict[str, str]] = None):
         self.cfg = cfg
         self.plan = plan
         self.alloc = BlockAllocator(cfg.num_pages, cfg.page_size)
@@ -81,7 +84,57 @@ class Scheduler:
         self.waiting: List[Sequence] = []
         self.running: List[Sequence] = []
         self._arrivals = 0
-        self.stats = {"admitted": 0, "preemptions": 0, "defrags": 0}
+        self._init_metrics(metrics, labels)
+
+    # -- metrics -------------------------------------------------------------
+
+    def _init_metrics(self, metrics, labels) -> None:
+        """Counters/gauges in the shared registry; ``self.stats`` is a
+        read-only compat view over them (PRs 1-5 exposed a plain dict).
+        The engine passes its registry and ``{"engine": id}`` label so a
+        router deployment reads every replica from ONE registry; a
+        scheduler built standalone (tests) gets a private registry."""
+        self.metrics = metrics if metrics is not None \
+            else obs_metrics.MetricsRegistry()
+        labels = dict(labels or {"engine": "-"})
+        ln = tuple(labels)
+        c = lambda name, help: self.metrics.counter(  # noqa: E731
+            name, help, ln).labels(**labels)
+        g = lambda name, help: self.metrics.gauge(    # noqa: E731
+            name, help, ln).labels(**labels)
+        self._c_submitted = c("sched_submitted_total", "requests submitted")
+        self._c_admitted = c("sched_admitted_total", "admissions (incl. "
+                             "swap-ins of preempted sequences)")
+        self._c_finished = c("sched_finished_total", "requests finished")
+        self._c_preempted = c("sched_preemptions_total", "evictions")
+        self._c_defrags = c("sched_defrags_total", "defrag passes")
+        self._c_released = c("sched_released_total",
+                             "sequences released for migration")
+        self._c_adopted = c("sched_adopted_total",
+                            "sequences adopted from another replica")
+        self._g_waiting = g("sched_waiting", "sequences in admission queue")
+        self._g_running = g("sched_running", "sequences holding capacity")
+        self._g_free_pages = g("sched_free_pages", "paged-domain free pages")
+        self._g_used_pages = g("sched_used_pages", "paged-domain used pages")
+        self._g_free_slots = g("sched_free_slots", "slot-domain free slots")
+        self._g_used_slots = g("sched_used_slots", "slot-domain used slots")
+        self.stats = obs_metrics.StatsView({
+            "admitted": self._c_admitted.value,
+            "preemptions": self._c_preempted.value,
+            "defrags": self._c_defrags.value,
+            "submitted": self._c_submitted.value,
+            "finished": self._c_finished.value,
+        })
+        self._sync_gauges()
+
+    def _sync_gauges(self) -> None:
+        self._g_waiting.set(len(self.waiting))
+        self._g_running.set(len(self.running))
+        self._g_free_pages.set(self.alloc.free_pages)
+        self._g_used_pages.set(self.alloc.used_pages)
+        if self.slot_alloc is not None:
+            self._g_free_slots.set(self.slot_alloc.free_pages)
+            self._g_used_slots.set(self.slot_alloc.used_pages)
 
     # -- ordering -----------------------------------------------------------
 
@@ -117,6 +170,8 @@ class Scheduler:
         seq = Sequence(req=req, arrival=self._arrivals)
         self._arrivals += 1
         self.waiting.append(seq)
+        self._c_submitted.inc()
+        self._g_waiting.set(len(self.waiting))
         return seq
 
     def _pages_for(self, n_tokens: int) -> int:
@@ -152,8 +207,10 @@ class Scheduler:
             seq.table.pages = pages
             self.waiting.remove(seq)
             self.running.append(seq)
-            self.stats["admitted"] += 1
+            self._c_admitted.inc()
             admitted.append(seq)
+        if admitted:
+            self._sync_gauges()
         return admitted
 
     # -- prefill ------------------------------------------------------------
@@ -185,6 +242,8 @@ class Scheduler:
         pages = self.alloc.alloc(need)
         if pages is not None:
             seq.table.pages.extend(pages)
+            self._g_free_pages.set(self.alloc.free_pages)
+            self._g_used_pages.set(self.alloc.used_pages)
             return True, None
         for victim in self._victim_order():
             if victim is not seq:
@@ -207,7 +266,8 @@ class Scheduler:
         self._release(seq)
         self.running.remove(seq)
         self.waiting.append(seq)
-        self.stats["preemptions"] += 1
+        self._c_preempted.inc()
+        self._sync_gauges()
 
     def restored(self, seq: Sequence) -> None:
         seq.snapshot = None
@@ -216,6 +276,8 @@ class Scheduler:
     def finished(self, seq: Sequence) -> None:
         self._release(seq)
         self.running.remove(seq)
+        self._c_finished.inc()
+        self._sync_gauges()
 
     # -- cross-replica migration (serving.mesh.router) ----------------------
 
@@ -224,6 +286,8 @@ class Scheduler:
         Waiting sequences hold no pages or slots (fresh or evicted-with-
         snapshot), so nothing device-side needs to move with them."""
         self.waiting.remove(seq)
+        self._c_released.inc()
+        self._g_waiting.set(len(self.waiting))
 
     def adopt(self, seq: Sequence) -> None:
         """Take over a sequence released by another replica's scheduler.
@@ -233,6 +297,8 @@ class Scheduler:
         seq.arrival = self._arrivals
         self._arrivals += 1
         self.waiting.append(seq)
+        self._c_adopted.inc()
+        self._g_waiting.set(len(self.waiting))
 
     def defrag(self):
         """Compact live pages to the low end of the paged pool. Returns
@@ -243,7 +309,7 @@ class Scheduler:
         if moves:
             for seq in self.running:
                 seq.table.pages = [moves.get(p, p) for p in seq.table.pages]
-            self.stats["defrags"] += 1
+            self._c_defrags.inc()
         return moves
 
     @property

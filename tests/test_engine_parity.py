@@ -64,6 +64,15 @@ def _drive(eng, reqs):
     for r in reqs:
         eng.submit(r)
     done = eng.run()
+    for r in done:
+        # lifecycle sanity rides along on every parity cell: stamps are
+        # monotonic (perf_counter), so ordering must hold exactly — even
+        # for requests finishing at prefill (t_first == t_done)
+        assert r.t_submit <= r.t_first <= r.t_done, \
+            (r.uid, r.t_submit, r.t_first, r.t_done)
+        if r.trace is not None:                  # legacy engine: no trace
+            assert r.trace.monotonic(), r.trace.events
+            assert r.trace.count("done") == 1
     return {r.uid: r.out_tokens for r in done}
 
 

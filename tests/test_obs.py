@@ -1,0 +1,321 @@
+"""Observability subsystem: metrics registry semantics, trace lifecycle
+derivations, kernel profiling hooks, the SRF quality probe, the
+reporter, and the no-bare-print lint pin over the serving stack."""
+import io
+import json
+import re
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.obs import profiling, quality, report
+from repro.obs.metrics import MetricsRegistry, StatsView
+from repro.obs.trace import Trace, latency_summary, percentiles
+
+SRC = Path(__file__).resolve().parent.parent / "src"
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+def test_counter_labels_and_totals():
+    reg = MetricsRegistry()
+    c = reg.counter("reqs_total", "requests", ("engine",))
+    c.labels(engine="0").inc()
+    c.labels(engine="0").inc(2)
+    c.labels(engine="1").inc(5)
+    assert c.labels(engine="0").value() == 3
+    assert c.total() == 8
+    assert reg.value_sum("reqs_total") == 8
+    with pytest.raises(ValueError):
+        c.labels(engine="0").inc(-1)           # counters only go up
+
+
+def test_unlabelled_metrics_and_gauge():
+    reg = MetricsRegistry()
+    c = reg.counter("steps_total")
+    c.inc()
+    c.inc(4)
+    assert c.value() == 5
+    g = reg.gauge("free_pages")
+    g.set(7)
+    assert g.value() == 7
+    gl = reg.gauge("headroom", "", ("replica",))
+    gl.labels(replica=0).set(3)
+    gl.labels(replica=0).dec()
+    gl.labels(replica=1).inc(2)
+    assert gl.labels(replica=0).value() == 2
+    assert reg.value_sum("headroom") == 4
+
+
+def test_factory_idempotent_and_type_mismatch_raises():
+    reg = MetricsRegistry()
+    a = reg.counter("x_total", "x", ("engine",))
+    b = reg.counter("x_total", "different help", ("engine",))
+    assert a is b                              # same series, not a fork
+    with pytest.raises(ValueError):
+        reg.gauge("x_total")                   # type mismatch
+    with pytest.raises(ValueError):
+        reg.counter("x_total", "x", ("other",))  # label-set mismatch
+
+
+def test_histogram_percentiles_and_ring():
+    reg = MetricsRegistry()
+    h = reg.histogram("lat_seconds", "", (), max_observations=8)
+    for v in range(100):
+        h.observe(float(v))
+    bound = h.labels()
+    assert bound.count() == 100                # count survives the ring
+    assert bound.sum() == sum(range(100))
+    assert len(bound.values()) == 8            # observations bounded
+    hh = reg.histogram("exact", "")
+    for v in (5.0, 1.0, 3.0, 2.0, 4.0):
+        hh.observe(v)
+    assert hh.labels().percentile(50) == 3.0   # nearest-rank
+    assert hh.labels().percentile(99) == 5.0
+    assert reg.percentiles("exact")["p50"] == 3.0
+
+
+def test_disabled_registry_is_noop():
+    reg = MetricsRegistry(enabled=False)
+    c = reg.counter("c_total")
+    c.inc(99)
+    assert c.value() == 0
+    reg.event("queued", uid=1)
+    assert reg.events == []
+    assert reg.snapshot()["counters"] == {}
+    assert reg.value_sum("c_total") == 0
+    assert np.isnan(reg.percentiles("nope")["p50"])
+
+
+def test_events_bounded_and_jsonl_dump():
+    reg = MetricsRegistry(max_events=3)
+    for i in range(5):
+        reg.event("queued", uid=i)
+    assert len(reg.events) == 3
+    assert reg.events_dropped == 2
+    buf = io.StringIO()
+    assert reg.dump_events_jsonl(buf) == 3
+    lines = [json.loads(l) for l in buf.getvalue().splitlines()]
+    assert [e["uid"] for e in lines] == [0, 1, 2]
+    assert all(e["event"] == "queued" and "t" in e for e in lines)
+
+
+def test_prometheus_text_format():
+    reg = MetricsRegistry()
+    reg.counter("a_total", "things", ("engine",)).labels(engine="0").inc(3)
+    reg.gauge("b").set(1.5)
+    reg.histogram("c_seconds", "lat", ("engine",)) \
+       .labels(engine="0").observe(0.25)
+    text = reg.prometheus_text()
+    assert "# TYPE a_total counter" in text
+    assert 'a_total{engine="0"} 3' in text
+    assert "b 1.5" in text
+    assert "# TYPE c_seconds summary" in text
+    assert 'c_seconds{engine="0",quantile="0.5"} 0.25' in text
+    assert 'c_seconds_count{engine="0"} 1' in text
+
+
+def test_stats_view_is_read_only_live_mapping():
+    reg = MetricsRegistry()
+    c = reg.counter("tok_total")
+    view = StatsView({"tokens": c.value})
+    assert view["tokens"] == 0
+    c.inc(4)
+    assert view["tokens"] == 4                 # live, not a copy
+    assert dict(view) == {"tokens": 4}
+    assert "tokens" in view and len(view) == 1
+    with pytest.raises(TypeError):
+        view["tokens"] = 9                     # Mapping, not MutableMapping
+
+
+# ---------------------------------------------------------------------------
+# trace
+# ---------------------------------------------------------------------------
+
+def test_trace_derivations_and_monotonic():
+    tr = Trace(uid=1)
+    tr.stamp("queued", 1.0)
+    tr.stamp("admitted", 1.5)
+    tr.stamp("prefill", 1.6)
+    tr.stamp("first_token", 2.0)
+    tr.stamp("preempted", 2.1)
+    tr.stamp("restored", 2.2)
+    tr.stamp("decode", 2.3)
+    tr.stamp("done", 3.0)
+    assert tr.queue_time == pytest.approx(0.5)
+    assert tr.ttft == pytest.approx(1.0)
+    assert tr.e2e == pytest.approx(2.0)
+    assert tr.tpot(5) == pytest.approx(1.0 / 4)
+    assert tr.tpot(1) is None                  # single token: no TPOT
+    assert tr.monotonic()
+    assert tr.count("preempted") == 1
+
+
+def test_trace_detects_out_of_order():
+    tr = Trace()
+    tr.stamp("queued", 2.0)
+    tr.stamp("admitted", 1.0)                  # time goes backwards
+    assert not tr.monotonic()
+    tr2 = Trace()
+    tr2.stamp("first_token", 1.0)
+    tr2.stamp("queued", 1.0)                   # milestones out of order
+    tr2.stamp("admitted", 1.0)
+    assert not tr2.monotonic()
+
+
+def test_percentiles_nearest_rank_and_empty():
+    p = percentiles([10.0, 20.0, 30.0, 40.0], qs=(50, 95, 99))
+    assert p == {"p50": 30.0, "p95": 40.0, "p99": 40.0}
+    assert all(np.isnan(v) for v in percentiles([]).values())
+
+
+def test_latency_summary_falls_back_to_stamps():
+    class R:
+        done = True
+        out_tokens = [1, 2, 3]
+        t_submit, t_first, t_done = 0.0, 0.5, 1.5
+        trace = None
+    s = latency_summary([R(), R()])
+    assert s["requests"] == 2 and s["tokens"] == 6
+    assert s["ttft_s"]["p50"] == pytest.approx(0.5)
+    assert s["tpot_s"]["p50"] == pytest.approx(0.5)
+    assert s["e2e_s"]["p50"] == pytest.approx(1.5)
+
+
+# ---------------------------------------------------------------------------
+# profiling hooks
+# ---------------------------------------------------------------------------
+
+def test_dispatch_times_eager_calls_when_enabled():
+    reg = MetricsRegistry()
+    try:
+        profiling.enable_kernel_timing(reg)
+        out = profiling.dispatch("toy", lambda: jnp.ones((4,)) * 2)
+        np.testing.assert_allclose(np.asarray(out), 2.0)
+        h = reg.histogram("kernel_dispatch_seconds", "", ("kernel",))
+        assert h.labels(kernel="toy").count() == 1
+        assert h.labels(kernel="toy").sum() > 0
+    finally:
+        profiling.disable_kernel_timing()
+    profiling.dispatch("toy", lambda: jnp.ones((4,)))
+    assert h.labels(kernel="toy").count() == 1  # off: nothing recorded
+
+
+def test_dispatch_skips_timing_under_jit_trace():
+    reg = MetricsRegistry()
+    try:
+        profiling.enable_kernel_timing(reg)
+
+        @jax.jit
+        def f(x):
+            return profiling.dispatch("traced", lambda: x * 3)
+        np.testing.assert_allclose(np.asarray(f(jnp.ones((2,)))), 3.0)
+        h = reg.histogram("kernel_dispatch_seconds", "", ("kernel",))
+        assert h.labels(kernel="traced").count() == 0
+    finally:
+        profiling.disable_kernel_timing()
+
+
+def test_ops_dispatch_records_kernel_histogram():
+    from repro.kernels import ops
+    reg = MetricsRegistry()
+    try:
+        profiling.enable_kernel_timing(reg)
+        pool = jnp.zeros((4, 2, 8))
+        tables = jnp.zeros((2, 2), jnp.int32)
+        ops.paged_gather(pool, tables, use_pallas=False)
+        h = reg.histogram("kernel_dispatch_seconds", "", ("kernel",))
+        assert h.labels(kernel="paged_gather").count() == 1
+    finally:
+        profiling.disable_kernel_timing()
+
+
+# ---------------------------------------------------------------------------
+# quality probe
+# ---------------------------------------------------------------------------
+
+def test_srf_quality_probe():
+    from repro.configs import registry
+    from repro.models import transformer as T
+    cfg = registry.reduced("qwen3-4b", n_layers=2)
+    params = T.init(jax.random.PRNGKey(0), cfg)
+    assert quality.srf_quality_probe(cfg, params) is None   # non-SRF
+
+    scfg = registry.reduced("qwen3-4b", n_layers=2, attn_impl="srf")
+    sparams = T.init(jax.random.PRNGKey(0), scfg)
+    stats = quality.srf_quality_probe(scfg, sparams)
+    assert set(stats) == {"srf_row_mean_abs_max", "srf_row_var_err_max"}
+    # Def. 1 calibration: freshly initialized rows are near N(0, I) rows
+    assert 0 <= stats["srf_row_mean_abs_max"] < 1.0
+    assert 0 <= stats["srf_row_var_err_max"] < 1.0
+
+
+def test_engine_publishes_quality_gauge():
+    from repro.configs import registry
+    from repro.models import transformer as T
+    from repro.serving import Engine, Request
+    cfg = registry.reduced("qwen3-4b", n_layers=2, attn_impl="srf")
+    params = T.init(jax.random.PRNGKey(0), cfg)
+    eng = Engine(cfg, params, batch_slots=2, max_len=64, quality_every=2)
+    eng.submit(Request(uid=0, prompt=np.arange(4, dtype=np.int32),
+                       max_new=6))
+    eng.run()
+    qual = eng.metrics.snapshot()["gauges"].get("srf_quality", {})
+    assert qual, "srf engine never sampled the quality gauge"
+    assert all(np.isfinite(v) for v in qual.values())
+
+
+# ---------------------------------------------------------------------------
+# reporter
+# ---------------------------------------------------------------------------
+
+def test_reporter_periodic_and_final(tmp_path):
+    from repro.configs import registry
+    from repro.models import transformer as T
+    from repro.serving import Engine, Request
+    cfg = registry.reduced("qwen3-4b", n_layers=2)
+    params = T.init(jax.random.PRNGKey(0), cfg)
+    reg = MetricsRegistry()
+    eng = Engine(cfg, params, batch_slots=4, max_len=64, metrics=reg)
+    for i in range(4):
+        eng.submit(Request(uid=i, prompt=np.arange(5, dtype=np.int32),
+                           max_new=4))
+    buf = io.StringIO()
+    rep = report.Reporter(stream=buf)
+    done = eng.run(on_step=rep.periodic(reg, every_s=0.0))
+    dump = tmp_path / "metrics.prom"
+    rep.final(reg, done, dump_path=str(dump))
+    text = buf.getvalue()
+    assert "[metrics] t=" in text              # periodic line fired
+    assert "tok/s=" in text
+    assert "ttft_ms p50=" in text and "tpot_ms" in text
+    assert "requests=4" in text
+    assert "engine_requests_total" in dump.read_text()
+    events = (tmp_path / "metrics.prom.events.jsonl").read_text()
+    assert all(json.loads(l)["event"] for l in events.splitlines())
+
+
+# ---------------------------------------------------------------------------
+# lint pin: the serving stack never prints directly
+# ---------------------------------------------------------------------------
+
+def test_no_bare_print_in_serving():
+    """All human-facing serving output routes through obs.report.Reporter;
+    a bare print() in the serving stack or the launcher bypasses the
+    registry and drifts from the metrics report."""
+    files = sorted((SRC / "repro" / "serving").rglob("*.py"))
+    files.append(SRC / "repro" / "launch" / "serve.py")
+    pat = re.compile(r"(?<![\w.])print\(")
+    offenders = []
+    for f in files:
+        for i, line in enumerate(f.read_text().splitlines(), 1):
+            if pat.search(line):
+                offenders.append(f"{f.relative_to(SRC)}:{i}: {line.strip()}")
+    assert not offenders, "bare print() in the serving stack:\n" + \
+        "\n".join(offenders)

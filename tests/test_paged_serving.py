@@ -226,6 +226,61 @@ def test_chunked_prefill_long_prompt(attn):
     assert paged == leg.run()[0].out_tokens
 
 
+def test_max_new_one_emits_exactly_one_token():
+    """Regression: a max_new=1 request finishes AT PREFILL with exactly
+    one output token. Previously the prefill step appended the first
+    token without checking eos/max_new, so such a request took an extra
+    decode step and emitted max_new+1 tokens (both engines had the bug)."""
+    legacy = _legacy()
+    cfg = registry.reduced("qwen3-4b", n_layers=2)
+    params = T.init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab,
+                            int(rng.integers(2, 12))).astype(np.int32)
+               for _ in range(6)]
+
+    eng = Engine(cfg, params, batch_slots=4, max_len=64)
+    for i, p in enumerate(prompts):
+        eng.submit(Request(uid=i, prompt=p.copy(), max_new=1))
+    done = eng.run()
+    assert len(done) == 6
+    assert all(len(r.out_tokens) == 1 for r in done)
+    # finished at prefill: no decode step ran, everything returned
+    assert eng.metrics.value_sum("engine_decode_steps_total") == 0
+    assert eng.sched.alloc.used_pages == 0
+
+    leg = legacy.Engine(cfg, params, batch_slots=4, max_len=64)
+    for i, p in enumerate(prompts):
+        leg.submit(Request(uid=i, prompt=p.copy(), max_new=1))
+    ldone = leg.run()
+    assert all(len(r.out_tokens) == 1 for r in ldone)
+    assert {r.uid: r.out_tokens for r in done} == \
+        {r.uid: r.out_tokens for r in ldone}
+
+
+def test_eos_on_first_token_finishes_at_prefill():
+    """A request whose FIRST sampled token is eos stops with one token
+    and a closed trace: learn the greedy first token, resubmit with it
+    as eos_id."""
+    cfg = registry.reduced("qwen3-4b", n_layers=2)
+    params = T.init(jax.random.PRNGKey(0), cfg)
+    prompt = np.arange(9, dtype=np.int32)
+    eng = Engine(cfg, params, batch_slots=2, max_len=64)
+    eng.submit(Request(uid=0, prompt=prompt.copy(), max_new=8))
+    first = eng.run()[0].out_tokens[0]
+
+    eng2 = Engine(cfg, params, batch_slots=2, max_len=64)
+    eng2.submit(Request(uid=0, prompt=prompt.copy(), max_new=8,
+                        eos_id=int(first)))
+    done = eng2.run()
+    assert len(done) == 1
+    r = done[0]
+    assert r.out_tokens == [first]
+    assert r.t_submit <= r.t_first <= r.t_done
+    assert r.trace.count("done") == 1 and r.trace.monotonic()
+    assert eng2.metrics.value_sum("engine_decode_steps_total") == 0
+
+
 # ---------------------------------------------------------------------------
 # sampler
 # ---------------------------------------------------------------------------

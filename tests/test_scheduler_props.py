@@ -5,7 +5,11 @@ capacity —
   * free + used page count is conserved in BOTH index domains,
   * no page (and no constant-state slot) ever serves two requests,
   * waiting sequences hold no device capacity at all,
-  * the null page / null slot (id 0) is never handed out.
+  * the null page / null slot (id 0) is never handed out,
+  * request conservation in the metrics registry: submitted + adopted ==
+    finished + released + running + waiting (migration moves requests
+    between schedulers, it never creates or destroys them),
+  * the registry's page/slot/queue gauges match the live allocator.
 
 Two layers: a deterministic seeded fuzz that ALWAYS runs, and a
 hypothesis-driven version (optional dependency, like in
@@ -73,6 +77,21 @@ def _check_invariants(sched: Scheduler):
     for s in sched.waiting:
         assert not s.table.pages and s.slot is None, \
             "waiting sequence holds device capacity"
+    # registry-side conservation + gauge/allocator agreement (the same
+    # registry a serve deployment scrapes; drift here means the metrics
+    # lie about the allocator)
+    v = sched.metrics.value_sum
+    assert v("sched_submitted_total") + v("sched_adopted_total") == \
+        v("sched_finished_total") + v("sched_released_total") + \
+        len(sched.running) + len(sched.waiting), \
+        "request conservation broken in registry"
+    assert v("sched_waiting") == len(sched.waiting)
+    assert v("sched_running") == len(sched.running)
+    assert v("sched_free_pages") == a.free_pages
+    assert v("sched_used_pages") == a.used_pages
+    if sched.slot_alloc is not None:
+        assert v("sched_free_slots") == sched.slot_alloc.free_pages
+        assert v("sched_used_slots") == sched.slot_alloc.used_pages
 
 
 def _run_ops(plan, ops):
@@ -143,6 +162,41 @@ if HAVE_HYPOTHESIS:
                         max_size=80))
     def test_scheduler_never_leaks_capacity_hypothesis(plan_name, ops):
         _run_ops(PLANS[plan_name], ops)
+
+
+def test_conservation_holds_across_migration():
+    """release_waiting/adopt move a request between schedulers: the
+    conservation identity must hold on BOTH sides at every point, with
+    the released/adopted counters absorbing the hand-off."""
+    src = Scheduler(_SCHED, PLANS["kv"])
+    dst = Scheduler(_SCHED, PLANS["kv"])
+    for i in range(8):
+        src.submit(_Req(i, 4, 2))
+    src.admit()
+    _check_invariants(src)
+    _check_invariants(dst)
+    moved = 0
+    for s in list(src.waiting)[:3]:
+        src.release_waiting(s)
+        dst.adopt(s)
+        moved += 1
+        _check_invariants(src)
+        _check_invariants(dst)
+    assert moved == 3
+    assert src.metrics.value_sum("sched_released_total") == 3
+    assert dst.metrics.value_sum("sched_adopted_total") == 3
+    # drain both sides; conservation must close at zero in-flight
+    for sched in (src, dst):
+        for _ in range(50):
+            if not sched.has_work:
+                break
+            for s in sched.admit():
+                if s.snapshot is not None:
+                    sched.restored(s)
+            for s in list(sched.running):
+                sched.finished(s)
+            _check_invariants(sched)
+        assert not sched.has_work
 
 
 @pytest.mark.parametrize("n", [1, 2, 5, 12])
