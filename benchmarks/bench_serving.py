@@ -11,11 +11,17 @@ enc-dec included) runs via
     PYTHONPATH=src python -m benchmarks.bench_serving --full
 
 Emits machine-readable ``BENCH_serving.json`` (``BENCH_serving_smoke.json``
-in smoke mode): paged-vs-legacy per family/concurrency, plus a 1-host vs
+in smoke mode): paged-vs-legacy per family/concurrency, a 1-host vs
 simulated 8-device-mesh comparison (2 router replicas x TP=2, run in a
 subprocess so the forced host-platform device count cannot leak into
-this process). CSV columns: name, us_per_call (wall us per generated
-token), derived (tokens/s | mean ttft ms | preemptions).
+this process), a failover-cost cell (2-replica FT router, replica 1
+chaos-killed mid-decode: requests/s dip vs the undisturbed run plus the
+rescue latency read from the registry event stream), and the
+``launch/dryrun --serve-chaos`` smoke verdict (subprocess, same device-
+count isolation). ``--failover`` re-measures ONLY the failover cell and
+read-modify-writes it into the committed ``BENCH_serving.json`` without
+re-running the full sweep. CSV columns: name, us_per_call (wall us per
+generated token), derived (tokens/s | mean ttft ms | preemptions).
 """
 from __future__ import annotations
 
@@ -129,6 +135,132 @@ def _pair_rows(rec: Dict) -> List[str]:
 
 
 # ---------------------------------------------------------------------------
+# failover cost: FT router with a chaos-killed replica vs undisturbed
+# ---------------------------------------------------------------------------
+
+
+def _bench_failover(concurrency: int = 16, seed: int = 0) -> Dict:
+    """Serve the SAME request set twice through a 2-replica FT router —
+    once undisturbed, once with replica 1 chaos-killed mid-decode
+    (``raise`` at its 6th step) — and price the failover: requests/s
+    dip, rescue latency (quarantine event -> last request re-homed,
+    from the shared registry's event stream), the extra prefill/decode
+    steps the forced-prefix replays cost, and whether the rescued
+    greedy tokens stayed bit-identical (the exactly-once guarantee).
+
+    Note the replicas step serially in this process (no real device
+    parallelism), so the dip measures replay overhead, not the halved
+    fleet capacity a production deployment would also see."""
+    from repro.configs import registry
+    from repro.models import transformer as T
+    from repro.obs import MetricsRegistry
+    from repro.serving import Engine, FTConfig, Router
+    from repro.serving.chaos import ChaosEngine, ChaosPlan
+
+    cfg = registry.reduced("qwen3-4b", n_layers=2)
+    params = T.init(jax.random.PRNGKey(0), cfg)
+    slots = max(2, min(concurrency, 16) // 2)   # per replica
+
+    def serve(kill: bool, n: int = concurrency) -> Dict:
+        reg = MetricsRegistry()
+        engines = [Engine(cfg, params, batch_slots=slots, max_len=64,
+                          seed=seed + i, metrics=reg) for i in range(2)]
+        if kill:
+            engines[1] = ChaosEngine(engines[1],
+                                     ChaosPlan("raise", at_step=6))
+        router = Router(engines, metrics=reg, ft=FTConfig())
+        reqs = _requests(cfg, n, seed)
+        wall, toks, _, _ = _drive(router, reqs)
+        return {"reg": reg, "wall": wall, "toks": toks,
+                "steps": int(reg.value_sum("engine_prefill_steps_total")
+                             + reg.value_sum("engine_decode_steps_total")),
+                "out": {r.uid: r.out_tokens for r in reqs}}
+
+    serve(kill=False, n=4)      # warm the jit caches: without this the
+    clean = serve(kill=False)   # clean run eats compile time and the
+                                # "dip" comes out negative
+    killed = serve(kill=True)
+    evs = killed["reg"].events
+    t_q = next((e["t"] for e in evs if e["event"] == "quarantined"), None)
+    t_home = [e["t"] for e in evs
+              if e["event"] in ("rescued", "replayed")]
+    rescue_s = (round(max(t_home) - t_q, 4)
+                if t_q is not None and t_home else None)
+    req_s_clean = concurrency / clean["wall"]
+    req_s_killed = concurrency / killed["wall"]
+    kv = killed["reg"].value_sum
+    return {
+        "concurrency": concurrency, "replicas": 2, "fault": "raise@6:1",
+        "clean": {"req_s": round(req_s_clean, 2),
+                  "tok_s": round(clean["toks"] / clean["wall"], 2),
+                  "engine_steps": clean["steps"]},
+        "killed": {"req_s": round(req_s_killed, 2),
+                   "tok_s": round(killed["toks"] / killed["wall"], 2),
+                   "engine_steps": killed["steps"],
+                   "quarantined": int(kv("router_quarantined_total")),
+                   "rescued": int(kv("router_rescued_total")),
+                   "replayed": int(kv("router_replayed_total")),
+                   "failed": int(kv("router_failed_total"))},
+        "req_s_dip_pct": round(100.0 * (1.0 - req_s_killed / req_s_clean),
+                               1),
+        "replay_extra_steps": killed["steps"] - clean["steps"],
+        "rescue_latency_s": rescue_s,
+        "tokens_match_clean": bool(killed["out"] == clean["out"]),
+    }
+
+
+def _failover_rows(rec: Dict) -> List[str]:
+    c = rec["concurrency"]
+    cl, kd = rec["clean"], rec["killed"]
+    return [
+        f"serving/failover/clean/c{c},0,"
+        f"req_s={cl['req_s']}|tok_s={cl['tok_s']}",
+        f"serving/failover/killed/c{c},0,"
+        f"req_s={kd['req_s']}|tok_s={kd['tok_s']}"
+        f"|dip_pct={rec['req_s_dip_pct']}",
+        f"serving/failover/rescue/c{c},0,"
+        f"latency_s={rec['rescue_latency_s']}"
+        f"|extra_steps={rec['replay_extra_steps']}"
+        f"|match={rec['tokens_match_clean']}|failed={kd['failed']}",
+    ]
+
+
+# ---------------------------------------------------------------------------
+# chaos smoke: launch/dryrun --serve-chaos (subprocess: the forced
+# 8-device host platform must not leak into this process)
+# ---------------------------------------------------------------------------
+
+
+def _chaos_smoke() -> Dict:
+    env = dict(os.environ, PYTHONPATH=_SRC + os.pathsep
+               + os.environ.get("PYTHONPATH", ""))
+    env.pop("XLA_FLAGS", None)
+    try:
+        out = subprocess.run(
+            [sys.executable, "-m", "repro.launch.dryrun", "--serve-chaos"],
+            env=env, capture_output=True, text=True, timeout=900)
+        for line in out.stdout.splitlines():
+            if line.startswith("{"):
+                return json.loads(line)
+        return {"ok": False, "error": "no JSON line",
+                "stderr": out.stderr[-1500:]}
+    except Exception as e:                      # keep the suite alive
+        return {"ok": False, "error": f"{type(e).__name__}: {e}"}
+
+
+def _chaos_rows(rec: Dict) -> List[str]:
+    if not rec.get("ok"):
+        return [f"serving/chaos_smoke/error,0,"
+                f"{str(rec.get('error', 'failed'))[:60]}"]
+    return [
+        f"serving/chaos_smoke,0,ok={rec['ok']}"
+        f"|quarantined={rec['quarantined']}"
+        f"|match={rec['tokens_match_undisturbed']}"
+        f"|revived={rec['revived']}|total_s={rec['total_s']}",
+    ]
+
+
+# ---------------------------------------------------------------------------
 # 1-host vs simulated 8-device mesh (subprocess: forced device count must
 # not leak into the calling process)
 # ---------------------------------------------------------------------------
@@ -230,14 +362,20 @@ def run(full: bool = False):
         rec = _bench_pair(fam, arch, over, c)
         pairs.append(rec)
         yield from _pair_rows(rec)
+    failover = _bench_failover(16)
+    yield from _failover_rows(failover)
     mesh = _bench_mesh()
     yield from _mesh_rows(mesh)
+    chaos = _chaos_smoke()
+    yield from _chaos_rows(chaos)
     payload = {
         "bench": "serving",
         "smoke": not full,
         "backend": jax.default_backend(),
         "paged_vs_legacy": pairs,
+        "failover": failover,
         "mesh_vs_single_host": mesh,
+        "chaos_smoke": chaos,
     }
     default = "BENCH_serving.json" if full else "BENCH_serving_smoke.json"
     path = os.environ.get("REPRO_BENCH_SERVING_JSON", default)
@@ -247,7 +385,26 @@ def run(full: bool = False):
 
 
 def main(argv=None):
-    full = "--full" in (argv or sys.argv[1:])
+    args = list(argv if argv is not None else sys.argv[1:])
+    if "--failover" in args:
+        # re-measure ONLY the failover cell and splice it into the
+        # committed full-sweep JSON (the sweep itself takes far longer)
+        print("name,us_per_call,derived")
+        rec = _bench_failover(16)
+        for row in _failover_rows(rec):
+            print(row, flush=True)
+        path = os.environ.get("REPRO_BENCH_SERVING_JSON",
+                              "BENCH_serving.json")
+        payload = {"bench": "serving"}
+        if os.path.exists(path):
+            with open(path) as f:
+                payload = json.load(f)
+        payload["failover"] = rec
+        with open(path, "w") as f:
+            json.dump(payload, f, indent=2)
+            f.write("\n")
+        return 0
+    full = "--full" in args
     print("name,us_per_call,derived")
     for row in run(full=full):
         print(row, flush=True)

@@ -67,13 +67,18 @@ class StragglerWatchdog:
             self.spare_shards.append(h.shard)
             h.shard = -1
         elif self.cfg.policy == "reassign":
-            # swap shards with the fastest host (it double-buffers)
-            fastest = min((x for x in self.hosts.values()
-                           if not x.excluded and x is not h),
-                          key=lambda x: x.ema_time or 1e9)
-            ev["reassigned_to_host"] = [k for k, v in self.hosts.items()
-                                        if v is fastest][0]
-            fastest.shard, h.shard = h.shard, fastest.shard
+            # swap shards with the fastest host (it double-buffers); with
+            # every other host excluded there is no one to reassign to —
+            # degrade to a warn event instead of crashing the controller
+            candidates = [x for x in self.hosts.values()
+                          if not x.excluded and x is not h]
+            if not candidates:
+                ev["action"] = "warn"
+            else:
+                fastest = min(candidates, key=lambda x: x.ema_time or 1e9)
+                ev["reassigned_to_host"] = [k for k, v in self.hosts.items()
+                                            if v is fastest][0]
+                fastest.shard, h.shard = h.shard, fastest.shard
         h.flags = 0
         self.events.append(ev)
         return ev

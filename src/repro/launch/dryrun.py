@@ -3,13 +3,15 @@ import sys as _sys
 # MUST precede any jax import/init: jax locks the device count on first use.
 # Set here (and only here) so tests/benches still see 1 real device.
 # REPRO_DRYRUN_DEVICES is the single programmatic override (set it before
-# importing this module); without it, the CLI serve-mesh path forces a
-# realistic 8-device host instead of 512 to keep startup down. The smoke
-# itself only needs 4 devices and is correct (just slower) under 512, and
-# the grid cells are lower/compile-only, so a mesh wider than the forced
-# count still partitions — the argv sniff is a speed knob, not semantics.
+# importing this module); without it, the CLI serve-mesh/serve-chaos paths
+# force a realistic 8-device host instead of 512 to keep startup down. The
+# smokes themselves only need 4 devices and are correct (just slower) under
+# 512, and the grid cells are lower/compile-only, so a mesh wider than the
+# forced count still partitions — the argv sniff is a speed knob, not
+# semantics.
 _FORCED = os.environ.get("REPRO_DRYRUN_DEVICES") or \
-    ("8" if "--serve-mesh" in _sys.argv else "512")
+    ("8" if ("--serve-mesh" in _sys.argv or "--serve-chaos" in _sys.argv)
+     else "512")
 os.environ["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={_FORCED}"
 
 """Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell and
@@ -253,6 +255,102 @@ def serve_mesh_smoke(arch: str = "qwen3-4b") -> Dict:
     return rec
 
 
+def serve_chaos_smoke(arch: str = "qwen3-4b") -> Dict:
+    """``--serve-chaos``: fault-tolerant mesh-serving smoke on the fake
+    8-device host platform.
+
+    Builds 2 router-managed TP=2 replicas sharing one metrics registry,
+    arms the FT watchdog, and kills replica 1 mid-decode with the
+    TEST-ONLY chaos harness (``raise`` at its 4th step). Checks (a) every
+    request still completes with greedy tokens bit-identical to an
+    undisturbed single-host run (exactly-once rescue), (b) exactly one
+    quarantine and zero rescue failures, (c) after ``heal`` + ``revive``
+    the pool leaks no pages/slots and fresh requests bit-match too.
+    """
+    import numpy as np
+    from repro.launch import mesh as mesh_lib
+    from repro.obs.metrics import MetricsRegistry
+    from repro.serving import Engine, FTConfig, Request, Router
+    from repro.serving.chaos import ChaosEngine, ChaosPlan
+
+    t0 = time.time()
+    cfg = registry.reduced(arch, n_layers=2)
+    rec: Dict = {"cell": "serve_chaos_smoke", "arch": arch,
+                 "devices": len(jax.devices())}
+    try:
+        params = T.init(jax.random.PRNGKey(0), cfg)
+        rng = np.random.default_rng(0)
+        lens = [3, 9, 17, 6, 11, 5]
+        prompts = [rng.integers(0, cfg.vocab, n).astype(np.int32)
+                   for n in lens]
+
+        single = Engine(cfg, params, batch_slots=4, max_len=64)
+        for i, p in enumerate(prompts):
+            single.submit(Request(uid=i, prompt=p.copy(), max_new=6))
+        want = {r.uid: r.out_tokens for r in single.run()}
+
+        reg = MetricsRegistry()
+        meshes = mesh_lib.make_serving_meshes(replicas=2, model_parallel=2)
+        engines = [Engine(cfg, params, batch_slots=2, max_len=64, seed=i,
+                          mesh=m, metrics=reg)
+                   for i, m in enumerate(meshes)]
+        chaos = ChaosEngine(engines[1], ChaosPlan("raise", at_step=4))
+        engines[1] = chaos
+        router = Router(engines, metrics=reg, ft=FTConfig())
+        for i, p in enumerate(prompts):
+            router.submit(Request(uid=i, prompt=p.copy(), max_new=6))
+        got = {r.uid: r.out_tokens for r in router.run()}
+
+        v = reg.value_sum
+        quarantined = int(router.metrics.value_sum(
+            "router_quarantined_total"))
+        rec.update({
+            "replicas": 2, "model_parallel": 2,
+            "requests_done": len(got),
+            "tokens_match_undisturbed": bool(got == want),
+            "quarantined": quarantined,
+            "dead_after_fault": sorted(router.dead),
+            "rescued": int(router.metrics.value_sum("router_rescued_total")),
+            "replayed": int(router.metrics.value_sum(
+                "router_replayed_total")),
+            "failed": int(router.metrics.value_sum("router_failed_total")),
+        })
+
+        chaos.heal()
+        revived = router.revive(1)
+        extra = [Request(uid=100 + i, prompt=p.copy(), max_new=6)
+                 for i, p in enumerate(prompts[:2])]
+        for r in extra:
+            router.submit(r)
+        router.run()
+        used = sum(e.sched.alloc.used_pages for e in router.engines)
+        slots = sum(e.sched.slot_alloc.used_pages for e in router.engines
+                    if e.sched.slot_alloc is not None)
+        conserved = (v("sched_submitted_total") + v("sched_adopted_total")
+                     == v("sched_finished_total")
+                     + v("sched_released_total"))
+        rec.update({
+            "revived": bool(revived),
+            "extra_after_revive_match": bool(
+                all(np.array_equal(r.out_tokens, want[r.uid - 100])
+                    for r in extra)),
+            "used_pages_after": used, "used_slots_after": slots,
+            "conservation_holds": bool(conserved),
+            "router": router.describe(),
+        })
+        rec["ok"] = (got == want and len(got) == len(prompts)
+                     and quarantined == 1 and rec["failed"] == 0
+                     and rec["dead_after_fault"] == [1]
+                     and revived and rec["extra_after_revive_match"]
+                     and used == 0 and slots == 0 and conserved)
+    except Exception as e:
+        rec["ok"] = False
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    rec["total_s"] = round(time.time() - t0, 2)
+    return rec
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None, choices=registry.ARCHS + [None])
@@ -275,11 +373,16 @@ def main(argv=None):
     ap.add_argument("--serve-mesh", action="store_true",
                     help="mesh-serving smoke: router + sharded pools on a "
                          "fake 8-device mesh, 4 mixed-length requests e2e")
+    ap.add_argument("--serve-chaos", action="store_true",
+                    help="fault-tolerance smoke: FT router + chaos-killed "
+                         "replica mid-decode, rescue must be bit-identical")
     args = ap.parse_args(argv)
 
-    if args.pipeline or args.serve_mesh:
+    if args.pipeline or args.serve_mesh or args.serve_chaos:
         rec = (pipeline_smoke() if args.pipeline
-               else serve_mesh_smoke(args.arch or "qwen3-4b"))
+               else serve_mesh_smoke(args.arch or "qwen3-4b")
+               if args.serve_mesh
+               else serve_chaos_smoke(args.arch or "qwen3-4b"))
         line = json.dumps(rec, default=float)
         print(line, flush=True)
         if args.out:

@@ -18,6 +18,12 @@ for comparison.
 ``--replicas``/``--model-parallel`` route requests across engine
 replicas whose page pools are model-axis sharded (``serving/mesh``);
 ``--quantize-kv`` stores KV pages as int8 with per-page-row scales.
+``--ft`` arms the fault-tolerant router (replica watchdog + failover
+with request rescue, ``serving/ft.py``), ``--deadline S`` gives every
+request an S-second deadline (overdue waiting requests finish as
+``timeout``), and ``--chaos KIND@STEP[:REPLICA]`` injects a scripted
+fault through the TEST-ONLY harness (``serving/chaos.py``) to
+demonstrate the recovery path end to end.
 
 Telemetry: every engine replica and the router share ONE
 ``obs.MetricsRegistry``; ``--metrics`` prints a live one-line report
@@ -67,6 +73,16 @@ def main(argv=None):
                     help="model-axis TP width per replica (shards pools)")
     ap.add_argument("--quantize-kv", action="store_true",
                     help="int8 KV pages + per-page-row scales (kv family)")
+    ap.add_argument("--ft", action="store_true",
+                    help="fault-tolerant router: replica health watchdog "
+                         "+ failover with request rescue (multi-replica)")
+    ap.add_argument("--deadline", type=float, default=None,
+                    help="per-request deadline in seconds; overdue waiting "
+                         "requests finish with reason 'timeout'")
+    ap.add_argument("--chaos", default=None, metavar="KIND@STEP[:REPLICA]",
+                    help="TEST-ONLY fault injection (kinds: raise|hang|"
+                         "reject|oom), e.g. raise@6:1; needs --ft and "
+                         "--replicas >= 2 to demonstrate recovery")
     ap.add_argument("--metrics", action="store_true",
                     help="periodic one-line metrics report + final "
                          "latency-percentile dump from the shared registry")
@@ -94,13 +110,25 @@ def main(argv=None):
         eng = legacy.Engine(cfg, params, batch_slots=args.slots,
                             max_len=args.max_len)
     elif args.replicas > 1 or args.model_parallel > 1:
+        from repro.serving import FTConfig
         meshes = mesh_lib.make_serving_meshes(args.replicas,
                                               args.model_parallel)
-        eng = Router([Engine(cfg, params, batch_slots=args.slots,
-                             max_len=args.max_len, policy=args.policy,
-                             seed=args.seed + i, mesh=m, paged=paged,
-                             metrics=metrics)
-                      for i, m in enumerate(meshes)], metrics=metrics)
+        engines = [Engine(cfg, params, batch_slots=args.slots,
+                          max_len=args.max_len, policy=args.policy,
+                          seed=args.seed + i, mesh=m, paged=paged,
+                          metrics=metrics)
+                   for i, m in enumerate(meshes)]
+        if args.chaos:
+            from repro.serving.chaos import ChaosEngine, ChaosPlan
+            spec, _, rep_s = args.chaos.partition(":")
+            kind, _, step_s = spec.partition("@")
+            rep_i = int(rep_s or (len(engines) - 1))
+            engines[rep_i] = ChaosEngine(
+                engines[rep_i], ChaosPlan(kind, at_step=int(step_s or 5)))
+            rep.line(f"[chaos] replica {rep_i}: {kind}@{step_s or 5} "
+                     "(test-only fault injection)")
+        eng = Router(engines, metrics=metrics,
+                     ft=FTConfig() if args.ft else None)
     else:
         eng = Engine(cfg, params, batch_slots=args.slots,
                      max_len=args.max_len, policy=args.policy,
@@ -118,7 +146,7 @@ def main(argv=None):
                            priority=int(rng.integers(0, 3)),
                            temperature=args.temperature,
                            top_k=args.top_k, top_p=args.top_p,
-                           enc_emb=enc))
+                           enc_emb=enc, deadline=args.deadline))
     on_step = (rep.periodic(metrics, every_s=args.metrics_every)
                if args.metrics and not args.legacy else None)
     done = (eng.run() if args.legacy else eng.run(on_step=on_step))
@@ -136,8 +164,9 @@ def main(argv=None):
         rep.line(f"  sched: {dict(eng.sched.stats)}  "
                  f"report: {eng.cache_report()}")
     for r in done[:3]:
-        rep.line(f"  req{r.uid}: ttft={r.t_first - r.t_submit:.3f}s "
-                 f"out={r.out_tokens[:8]}...")
+        ttft = (f"{r.t_first - r.t_submit:.3f}s" if r.t_first
+                else f"n/a ({r.finish_reason})")   # expired/shed: no token
+        rep.line(f"  req{r.uid}: ttft={ttft} out={r.out_tokens[:8]}...")
     if args.metrics or args.metrics_out:
         rep.final(metrics, done, dump_path=args.metrics_out)
     if args.kernel_timing and not metrics.snapshot()["histograms"].get(

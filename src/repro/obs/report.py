@@ -63,8 +63,27 @@ class Reporter:
                 f"free_pages={int(registry.value_sum('sched_free_pages'))} "
                 f"preempt={int(registry.value_sum('engine_preemptions_total'))} "
                 f"migrations="
-                f"{int(registry.value_sum('router_migrations_total'))}")
+                f"{int(registry.value_sum('router_migrations_total'))}"
+                + self._ft_fragment(registry))
         return on_step
+
+    @staticmethod
+    def _ft_fragment(registry) -> str:
+        """Fault-tolerance tail for the periodic line — only printed once
+        any FT transition has happened, so non-FT runs keep the exact
+        pre-FT line format."""
+        dead = registry.value_sum("router_dead_replicas")
+        degraded = registry.value_sum("router_degraded")
+        counts = {k: int(registry.value_sum(f"router_{k}_total"))
+                  for k in ("quarantined", "rescued", "replayed", "shed",
+                            "revived", "failed")}
+        counts["expired"] = int(registry.value_sum("engine_expired_total"))
+        if not dead and not degraded and not any(counts.values()):
+            return ""
+        frag = (f" dead={int(dead)}"
+                f" state={'degraded' if degraded else 'ok'}")
+        frag += "".join(f" {k}={v}" for k, v in counts.items() if v)
+        return frag
 
     # -- final dump ----------------------------------------------------------
 
@@ -95,6 +114,9 @@ class Reporter:
             heads = registry.snapshot()["gauges"].get("router_headroom", {})
             self.line(f"[metrics] router submitted={int(sub)} "
                       f"migrations={int(mig)} headroom={heads}")
+        ft = self._ft_fragment(registry)
+        if ft:
+            self.line("[metrics] ft" + ft)
         qual = registry.snapshot()["gauges"].get("srf_quality", {})
         if qual:
             self.line(f"[metrics] srf_quality {qual}")

@@ -5,13 +5,16 @@ mesh and routes requests across engine replicas.
 
 See ``serving/README.md`` for the block-table layout, the
 bytes-per-token comparison across cache families (full KV vs MLA-latent
-vs the paper's SRF state vs SSD), and the mesh-mode pool layout /
-router policy / snapshot-overlap notes. ``serving.legacy`` keeps the
-old per-slot engine as the benchmark baseline (deprecated; its import
-warns).
+vs the paper's SRF state vs SSD), the mesh-mode pool layout /
+router policy / snapshot-overlap notes, and the fault-tolerance story
+(``serving/ft.py``: watchdog + failover; ``serving/chaos.py`` is the
+TEST-ONLY fault injector and is deliberately not exported here).
+``serving.legacy`` keeps the old per-slot engine as the benchmark
+baseline (deprecated; its import warns).
 """
 from .blocks import BlockAllocator, BlockTable          # noqa: F401
 from .engine import Engine, Request                     # noqa: F401
+from .ft import FTConfig, ReplicaWatchdog               # noqa: F401
 from .paged_cache import (PagedConfig, PoolPlan, family_for,  # noqa: F401
                           init_pools, plan_for)
 from .scheduler import SchedConfig, Scheduler           # noqa: F401

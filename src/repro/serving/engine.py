@@ -54,8 +54,15 @@ class Request:
     top_k: int = 0                   # 0 = disabled
     top_p: float = 1.0
     enc_emb: Optional[np.ndarray] = None  # (enc_len, feat) enc-dec input
+    deadline: Optional[float] = None # seconds after submit; overdue WAITING
+    #                                  requests finish as 'timeout' instead
+    #                                  of serving late (running ones finish)
+    max_retries: int = 2             # replica-failure rescue budget
     out_tokens: List[int] = field(default_factory=list)
     done: bool = False
+    finish_reason: str = ""          # eos | length | timeout | shed | failed
+    retries: int = 0                 # rescues consumed (ft router)
+    deadline_at: Optional[float] = None  # absolute stamp, set at 1st submit
     # monotonic (perf_counter) stamps — wall-clock time.time() steps
     # corrupt TTFT/TPOT; trace carries the full lifecycle
     t_submit: float = 0.0
@@ -148,6 +155,10 @@ class Engine:
         self._encode = (jax.jit(step_lib.make_encode_step(cfg))
                         if cfg.is_encdec else None)
         self._rng = jax.random.PRNGKey(seed)
+        # injectable step-time clock, read exactly twice per step() — the
+        # replica watchdog consumes the recorded engine_step_seconds, and
+        # the chaos harness simulates stalls by swapping this clock
+        self.clock = time.perf_counter
         self._pending_snaps: List[paged_cache.PendingSnapshot] = []
         self._init_metrics()
         self._quality_every = (quality_every
@@ -177,6 +188,10 @@ class Engine:
                                  "batched decode steps")
         self._c_preemptions = c("engine_preemptions_total",
                                 "copy-on-preempt evictions")
+        self._c_expired = c("engine_expired_total",
+                            "waiting requests expired past deadline")
+        self._h_step = h("engine_step_seconds", "wall time of one engine "
+                         "step (the replica-health watchdog reads this)")
         self._h_ttft = h("request_ttft_seconds", "time to first token")
         self._h_tpot = h("request_tpot_seconds", "per-output-token time "
                          "after the first")
@@ -231,6 +246,10 @@ class Engine:
                 f"({self.cfg.enc_len}, feat)); request uid={req.uid} has none")
         now = time.perf_counter()
         req.t_submit = now
+        if req.deadline is not None and req.deadline_at is None:
+            # absolute stamp survives rescue re-submission: the deadline
+            # clock keeps running across replica failures
+            req.deadline_at = now + req.deadline
         if req.trace is None:
             req.trace = obs_trace.Trace(uid=req.uid)
         req.trace.stamp("queued", now)
@@ -258,7 +277,24 @@ class Engine:
     def step(self) -> bool:
         """One scheduler iteration: admit, then one prefill-chunk step if
         any sequence is still prefilling, else one batched decode step.
-        Returns False when nothing could run (allocator exhausted)."""
+        Returns False when nothing could run (allocator exhausted).
+
+        Timed through ``self.clock`` (exactly two reads per step) into
+        ``engine_step_seconds`` — the replica-health signal."""
+        t0 = self.clock()
+        try:
+            return self._step_once()
+        finally:
+            self._h_step.observe(self.clock() - t0)
+
+    def _step_once(self) -> bool:
+        # deadline expiry first: an overdue waiting request holds no
+        # device capacity, so dropping it is pure bookkeeping — and doing
+        # it before admission means a backlogged pool never wastes pages
+        # on work that is already late
+        expired = self.sched.expire_overdue(time.perf_counter())
+        for seq in expired:
+            self._expire(seq)
         admitted = self.sched.admit()
         now = time.perf_counter() if admitted else 0.0
         fresh: List[Sequence] = []
@@ -293,8 +329,24 @@ class Engine:
             return True
         ready = self.sched.decode_ready()
         if ready:
-            return self._decode_step(ready)
-        return bool(admitted)
+            return self._decode_step(ready) or bool(expired)
+        return bool(admitted) or bool(expired)
+
+    def _expire(self, seq: Sequence) -> None:
+        """Terminal ``timeout``: the request went past its deadline while
+        waiting (it holds no pages/slots — the scheduler already dropped
+        it from the queue)."""
+        req = seq.req
+        req.done = True
+        req.finish_reason = "timeout"
+        now = time.perf_counter()
+        req.t_done = now
+        if req.trace is not None:
+            req.trace.stamp("done", now)
+            if req.trace.e2e is not None:
+                self._h_e2e.observe(req.trace.e2e)
+        self._c_expired.inc()
+        self.metrics.event("expired", uid=req.uid, engine=self.engine_id)
 
     @staticmethod
     def _slot_ids(seq: Sequence) -> List[int]:
@@ -413,6 +465,9 @@ class Engine:
         histograms from its trace, pages/slot back to the scheduler."""
         req = seq.req
         req.done = True
+        req.finish_reason = ("eos" if req.out_tokens
+                             and req.out_tokens[-1] == req.eos_id
+                             else "length")
         req.t_done = now
         tr = req.trace
         if tr is not None:

@@ -1,0 +1,178 @@
+"""Fault-tolerant serving: replica health detection + request rescue
+primitives.
+
+The control plane mirrors the paper's seed-recycling economics: request
+state is cheaply reconstructible, so replica death never has to lose
+work. Snapshots and prefill progress already travel between replicas
+(``Scheduler.release_waiting``/``adopt``), and anything without a
+current snapshot can be *replayed* — the already-emitted tokens are
+folded into the prompt as a forced prefix (:func:`fold_emitted_prefix`),
+so a survivor re-prefills deterministically and continues exactly where
+the dead replica stopped. Exactly-once output is guaranteed by the
+request uid plus the emitted-token high-water mark: ``out_tokens`` is
+never truncated, the engine only ever appends past it.
+
+:class:`ReplicaWatchdog` adapts ``ft/straggler.py``'s EMA-vs-median
+detector to serving replicas, with two deliberate changes:
+
+* step times are read from the PR 6 metrics registry
+  (``engine_step_seconds{engine=...}``), not wall-clocked by the caller
+  — so a simulated stall injected through the engine's step-time clock
+  (``serving/chaos.py``) is detected exactly like a real one;
+* each replica's EMA is compared against the median of its *peers*
+  (the global median breaks down at 2 replicas: the slow replica IS the
+  upper median and can never exceed ``threshold`` x itself).
+
+A replica is marked dead after ``grace_steps`` consecutive slow flags,
+``stuck_rounds`` consecutive no-progress rounds with work queued, or an
+exception escaping ``Engine.step`` (the router handles that case
+directly). ``serving/mesh/router.py`` owns quarantine / rescue /
+revive; this module owns detection and the replay arithmetic.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Optional, Set, Tuple
+
+import numpy as np
+
+from .engine import Request
+
+
+@dataclass(frozen=True)
+class FTConfig:
+    """Knobs for the fault-tolerant router (``Router(ft=FTConfig())``)."""
+    ema: float = 0.6            # smoothing of per-replica step time
+    threshold: float = 4.0      # x peer-median EMA -> slow flag
+    grace_steps: int = 3        # consecutive slow flags before quarantine
+    stuck_rounds: int = 4       # no-progress rounds with work -> quarantine
+    probe_max_new: int = 2      # tokens a revive() probe must produce
+    degraded_rounds: int = 3    # exhausted rounds before shedding new load
+
+
+class ReplicaWatchdog:
+    """Per-replica health detector driven by the shared metrics registry.
+
+    The router calls :meth:`poll_step_time` + :meth:`observe` once per
+    replica per drive round; a non-``None`` return value is the
+    quarantine reason. Detection is pure host-side arithmetic — no
+    device traffic, no timers of its own.
+    """
+
+    def __init__(self, n_replicas: int, cfg: FTConfig):
+        self.cfg = cfg
+        self.ema: List[Optional[float]] = [None] * n_replicas
+        self.flags: List[int] = [0] * n_replicas
+        self.stuck: List[int] = [0] * n_replicas
+        self.dead: Set[int] = set()
+        # (count, sum) watermark per replica into engine_step_seconds
+        self._seen: List[Tuple[int, float]] = [(0, 0.0)] * n_replicas
+
+    def poll_step_time(self, idx: int, engine) -> Optional[float]:
+        """Mean of the step-time observations the engine recorded since
+        the last poll, read from ITS registry (replicas may share one —
+        the ``engine`` label keeps the series apart). ``None`` when the
+        registry is disabled or nothing new landed."""
+        h = engine.metrics.histogram(
+            "engine_step_seconds", "wall time of one engine step",
+            ("engine",)).labels(engine=engine.engine_id)
+        c, s = h.count(), h.sum()
+        c0, s0 = self._seen[idx]
+        self._seen[idx] = (c, s)
+        if c <= c0:
+            return None
+        return (s - s0) / (c - c0)
+
+    def _peer_median(self, idx: int) -> Optional[float]:
+        """Median EMA over the OTHER live replicas."""
+        ts = sorted(e for i, e in enumerate(self.ema)
+                    if i != idx and i not in self.dead and e is not None)
+        if not ts:
+            return None
+        return ts[len(ts) // 2]
+
+    def observe(self, idx: int, dt: Optional[float], progressed: bool,
+                has_work: bool) -> Optional[str]:
+        """Feed one drive round's outcome for replica ``idx``; returns a
+        quarantine reason or ``None``."""
+        if idx in self.dead:
+            return None
+        cfg = self.cfg
+        # stuck: the replica holds work it cannot advance (corrupt
+        # admission, exhausted pool) — step-time EMA never sees these
+        # because the no-op steps are FAST
+        if has_work and not progressed:
+            self.stuck[idx] += 1
+            if self.stuck[idx] >= cfg.stuck_rounds:
+                return (f"stuck: no progress for {self.stuck[idx]} "
+                        "consecutive rounds with work queued")
+        else:
+            self.stuck[idx] = 0
+        if dt is not None:
+            prev = self.ema[idx]
+            self.ema[idx] = dt if prev is None \
+                else cfg.ema * prev + (1 - cfg.ema) * dt
+            med = self._peer_median(idx)
+            if med is not None and self.ema[idx] > cfg.threshold * med:
+                self.flags[idx] += 1
+                if self.flags[idx] >= cfg.grace_steps:
+                    return (f"slow: step-time ema {self.ema[idx]:.4g}s > "
+                            f"{cfg.threshold}x peer median {med:.4g}s for "
+                            f"{self.flags[idx]} consecutive polls")
+            else:
+                self.flags[idx] = 0
+        return None
+
+    def mark_dead(self, idx: int) -> None:
+        self.dead.add(idx)
+
+    def revive(self, idx: int) -> None:
+        """Clear the replica's health history so a revived replica is not
+        instantly re-flagged by its pre-death EMA."""
+        self.dead.discard(idx)
+        self.ema[idx] = None
+        self.flags[idx] = 0
+        self.stuck[idx] = 0
+
+
+# ---------------------------------------------------------------------------
+# rescue primitives
+# ---------------------------------------------------------------------------
+
+def snapshot_is_current(seq) -> bool:
+    """Whether a sequence's copy-on-preempt snapshot still reflects its
+    full progress. True exactly for evicted-and-still-waiting sequences
+    (nothing decodes while waiting); a RUNNING sequence's device state is
+    ahead of any old snapshot, so it must be replayed instead."""
+    return seq.snapshot is not None
+
+
+def fold_emitted_prefix(req: Request) -> int:
+    """Fold the already-emitted tokens into the prompt as a forced
+    prefix, so a rescued request re-prefills deterministically on a
+    survivor and greedy decode continues bit-identically from where the
+    dead replica stopped. Returns the emitted-token high-water mark.
+
+    ``out_tokens`` is deliberately NOT cleared: the engine appends new
+    tokens after the high-water mark (``len(out_tokens) >= max_new``
+    terminates on the same total), so every token is emitted exactly
+    once — replay never re-emits the prefix, it only re-computes its
+    cache state."""
+    hwm = len(req.out_tokens)
+    if hwm:
+        prompt = np.asarray(req.prompt)
+        req.prompt = np.concatenate(
+            [prompt, np.asarray(req.out_tokens, dtype=prompt.dtype)])
+    return hwm
+
+
+def make_probe(cfg, uid: int = -1, max_new: int = 2) -> Request:
+    """A tiny greedy request used by ``Router.revive`` to prove a
+    quarantined replica is healthy again before it rejoins placement."""
+    prompt = (np.arange(1, 4, dtype=np.int32) % cfg.vocab).astype(np.int32)
+    enc = None
+    if cfg.is_encdec:
+        from repro.models import frontends
+        enc = frontends.synthetic_audio_features(
+            np.random.default_rng(0), cfg)
+    return Request(uid=uid, prompt=prompt, max_new=max_new, enc_emb=enc)

@@ -16,16 +16,35 @@ any sequence still in a replica's admission queue holds no device pages
 (fresh requests trivially; evicted ones only a host-side snapshot), so
 moving it is a scheduler hand-off (``Scheduler.release_waiting`` /
 ``adopt``), never a device copy.
+
+Fault tolerance (``Router(ft=FTConfig())``, see ``serving/ft.py``): a
+replica is **quarantined** when an exception escapes its ``step`` or the
+:class:`~repro.serving.ft.ReplicaWatchdog` flags it (slow per the
+recorded ``engine_step_seconds``, or stuck with work queued). Its
+sequences are **rescued** — waiting ones re-homed through the migration
+hand-off, running ones (device state lost) **replayed** on a survivor
+with their emitted tokens folded in as a forced prefix — and the
+placement set shrinks to the survivors, the serving analogue of
+``ft/elastic.shrink_plan``. ``revive()`` rejoins a repaired replica
+after a probe request completes. Under sustained pool exhaustion the
+router enters ``degraded`` state and sheds NEW requests deterministically
+(reject-new before evict-running) instead of thrashing the
+evict/restore path. Every transition is a counter + event:
+``router_{quarantined,rescued,replayed,failed,shed,revived}_total`` and
+gauges ``router_degraded`` / ``router_dead_replicas``.
 """
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Set
 
 import jax
 
 from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 
+from .. import ft as ft_lib
 from ..engine import Engine, Request
 from ..scheduler import Sequence
 
@@ -41,11 +60,13 @@ class RouterConfig:
 
 
 class Router:
-    """Spread requests across engine replicas; migrate under pressure."""
+    """Spread requests across engine replicas; migrate under pressure;
+    optionally (``ft``) detect dead replicas and rescue their work."""
 
     def __init__(self, engines: List[Engine],
                  cfg: Optional[RouterConfig] = None,
-                 metrics: Optional[obs_metrics.MetricsRegistry] = None):
+                 metrics: Optional[obs_metrics.MetricsRegistry] = None,
+                 ft: Optional[ft_lib.FTConfig] = None):
         if not engines:
             raise ValueError("router needs >= 1 engine replica")
         fam = engines[0].plan.name
@@ -53,12 +74,20 @@ class Router:
             raise ValueError("router replicas must serve one pool plan")
         self.engines = list(engines)
         self.cfg = cfg or RouterConfig()
+        self.ft = ft
         self.home: Dict[int, int] = {}       # request uid -> replica index
-        # control-plane series live in replica 0's registry by default —
-        # a serve deployment hands every engine ONE shared registry, so
-        # the router's counters land next to the per-engine ones and a
-        # single scrape covers the whole deployment
-        self.metrics = metrics if metrics is not None else engines[0].metrics
+        self.dead: Set[int] = set()          # quarantined replica indices
+        self.state = "ok"                    # ok | degraded
+        self._exhausted_rounds = 0
+        # the router's control-plane series default into their OWN
+        # registry: parking them in engines[0]'s registry orphaned every
+        # router counter the moment replica 0 was quarantined. A serve
+        # deployment passes the one shared registry explicitly, so a
+        # single scrape still covers the whole deployment.
+        self.metrics = metrics if metrics is not None \
+            else obs_metrics.MetricsRegistry()
+        self.watchdog = (ft_lib.ReplicaWatchdog(len(engines), ft)
+                         if ft is not None else None)
         self._c_submitted = self.metrics.counter(
             "router_submitted_total", "requests routed to a replica")
         self._c_migrations = self.metrics.counter(
@@ -66,16 +95,45 @@ class Router:
             "replicas under pressure")
         self._c_steps = self.metrics.counter(
             "router_steps_total", "router drive rounds")
+        self._c_quarantined = self.metrics.counter(
+            "router_quarantined_total", "replicas marked dead")
+        self._c_rescued = self.metrics.counter(
+            "router_rescued_total", "waiting sequences re-homed off a "
+            "dead replica (snapshot/prefill progress kept)")
+        self._c_replayed = self.metrics.counter(
+            "router_replayed_total", "requests re-submitted with their "
+            "emitted tokens as a forced prefix (device state lost)")
+        self._c_failed = self.metrics.counter(
+            "router_failed_total", "requests terminally failed (retry "
+            "budget exhausted or no live replica fits)")
+        self._c_shed = self.metrics.counter(
+            "router_shed_total", "new requests rejected in degraded state")
+        self._c_revived = self.metrics.counter(
+            "router_revived_total", "quarantined replicas rejoined after "
+            "a successful probe")
         self._g_headroom = self.metrics.gauge(
             "router_headroom", "discounted free capacity per replica "
             "(pages/slots minus queued demand)", ("replica",))
+        self._g_degraded = self.metrics.gauge(
+            "router_degraded", "1 while shedding new load (sustained "
+            "pool exhaustion)")
+        self._g_dead = self.metrics.gauge(
+            "router_dead_replicas", "replicas currently quarantined")
         self.stats = obs_metrics.StatsView({
             "submitted": self._c_submitted.value,
             "migrations": self._c_migrations.value,
             "steps": self._c_steps.value,
+            "quarantined": self._c_quarantined.value,
+            "rescued": self._c_rescued.value,
+            "replayed": self._c_replayed.value,
+            "shed": self._c_shed.value,
+            "revived": self._c_revived.value,
         })
 
     # -- pressure ------------------------------------------------------------
+
+    def _live(self) -> List[int]:
+        return [i for i in range(len(self.engines)) if i not in self.dead]
 
     def _demand_pages(self, eng: Engine, seq: Sequence) -> int:
         """Paged-domain pages the sequence needs at admission on this
@@ -86,6 +144,12 @@ class Router:
         if seq.snapshot is not None:
             return max(len(seq.snapshot_pages), 1)
         return eng.sched._pages_for(max(seq.prompt_len, 1))
+
+    def _demand_req(self, eng: Engine, req: Request) -> int:
+        """Admission demand of a not-yet-submitted request."""
+        if not eng.plan.has_paged:
+            return 1
+        return eng.sched._pages_for(max(len(req.prompt), 1))
 
     def _headroom(self, eng: Engine) -> int:
         """Free capacity minus the queued demand already bound for
@@ -107,21 +171,43 @@ class Router:
     # -- submission ----------------------------------------------------------
 
     def submit(self, req: Request) -> int:
-        """Route to the replica with the most discounted headroom that can
-        hold the request at all; returns the replica index."""
-        hr = self.pressure()
-        for idx in sorted(range(len(self.engines)), key=lambda i: -hr[i]):
-            eng = self.engines[idx]
-            if not eng.sched.fits(req):
-                continue
-            eng.submit(req)
-            self.home[req.uid] = idx
-            self._c_submitted.inc()
-            self.metrics.event("routed", uid=req.uid, replica=idx)
-            return idx
-        raise ValueError(
-            f"request uid={req.uid} fits no replica "
-            f"(prompt={len(req.prompt)} + max_new={req.max_new})")
+        """Route to the live replica with the most discounted headroom
+        that can hold the request at all; returns the replica index (-1
+        when the request was shed in degraded state)."""
+        hr = {i: self._headroom(self.engines[i]) for i in self._live()}
+        fitting = [i for i in sorted(hr, key=lambda i: -hr[i])
+                   if self.engines[i].sched.fits(req)]
+        if not fitting:
+            raise ValueError(
+                f"request uid={req.uid} fits no replica "
+                f"(prompt={len(req.prompt)} + max_new={req.max_new})")
+        best = fitting[0]
+        if (self.ft is not None and self.state == "degraded"
+                and hr[best] < self._demand_req(self.engines[best], req)):
+            # degradation ladder, first rung: rejecting a NEW request is
+            # strictly cheaper than queueing it into an exhausted pool,
+            # where admitting it could only proceed by evicting running
+            # work (reject-new before evict-running)
+            return self._shed(req)
+        eng = self.engines[best]
+        eng.submit(req)
+        self.home[req.uid] = best
+        self._c_submitted.inc()
+        self.metrics.event("routed", uid=req.uid, replica=best)
+        return best
+
+    def _shed(self, req: Request) -> int:
+        req.done = True
+        req.finish_reason = "shed"
+        now = time.perf_counter()
+        req.t_submit = req.t_done = now
+        if req.trace is None:
+            req.trace = obs_trace.Trace(uid=req.uid)
+        req.trace.stamp("queued", now)
+        req.trace.stamp("done", now)
+        self._c_shed.inc()
+        self.metrics.event("shed", uid=req.uid)
+        return -1
 
     # -- migration -----------------------------------------------------------
 
@@ -179,12 +265,14 @@ class Router:
         return dst.sched.fits(seq.req)
 
     def migrate(self) -> int:
-        """Move waiting sequences from saturated replicas to roomy ones.
-        Returns how many were moved this round."""
-        if not self.cfg.migrate or len(self.engines) < 2:
+        """Move waiting sequences from saturated live replicas to roomy
+        live ones. Returns how many were moved this round."""
+        live = self._live()
+        if not self.cfg.migrate or len(live) < 2:
             return 0
         moved = 0
-        for src_i, src in enumerate(self.engines):
+        for src_i in live:
+            src = self.engines[src_i]
             if moved >= self.cfg.migrate_per_round:
                 break
             src_hr = self._headroom(src)
@@ -196,8 +284,8 @@ class Router:
                               reverse=True):
                 if moved >= self.cfg.migrate_per_round:
                     break
-                hr = self.pressure()
-                dst_i = max(range(len(self.engines)), key=lambda i: hr[i])
+                hr = {i: self._headroom(self.engines[i]) for i in live}
+                dst_i = max(hr, key=lambda i: hr[i])
                 dst = self.engines[dst_i]
                 if dst_i == src_i or hr[dst_i] < max(2 * src_hr, 1):
                     break                    # nowhere meaningfully roomier
@@ -217,21 +305,189 @@ class Router:
                 src_hr = self._headroom(src)
         return moved
 
+    # -- fault tolerance -----------------------------------------------------
+
+    def quarantine(self, idx: int, reason: str) -> None:
+        """Mark a replica dead and rescue everything it holds. The
+        placement set shrinks to the survivors (the serving analogue of
+        ``ft/elastic.shrink_plan``); ``revive()`` grows it back."""
+        if idx in self.dead:
+            return
+        self.dead.add(idx)
+        if self.watchdog is not None:
+            self.watchdog.mark_dead(idx)
+        self._c_quarantined.inc()
+        self._g_dead.set(len(self.dead))
+        self.metrics.event("quarantined", replica=idx, reason=reason)
+        self._rescue(idx)
+
+    def _adoption_target(self, src_i: int, seq: Sequence) -> Optional[int]:
+        order = sorted(self._live(),
+                       key=lambda i: -self._headroom(self.engines[i]))
+        for i in order:
+            if self._can_place(self.engines[src_i], self.engines[i], seq):
+                return i
+        return None
+
+    def _rescue(self, idx: int) -> None:
+        """Move every sequence off a quarantined replica. Running ones
+        lost their device state with the replica, so they are replayed;
+        waiting ones hold at most a host-side snapshot and are re-homed
+        through the migration hand-off. Exactly-once: a request object is
+        only ever in ONE scheduler (release before adopt/submit), and
+        replay never truncates ``out_tokens`` (serving/ft.py)."""
+        eng = self.engines[idx]
+        for seq in list(eng.sched.running):
+            eng.sched.release_running(seq)
+            self._replay(seq.req, idx)
+        for seq in list(eng.sched.waiting):
+            eng.sched.release_waiting(seq)
+            if seq.req.uid < 0:              # a stale revive probe
+                continue
+            dst_i = self._adoption_target(idx, seq)
+            if dst_i is not None:
+                self.engines[dst_i].sched.adopt(seq)
+                self.home[seq.req.uid] = dst_i
+                self._c_rescued.inc()
+                if seq.req.trace is not None:
+                    seq.req.trace.stamp("rescued")
+                self.metrics.event("rescued", uid=seq.req.uid,
+                                   src=idx, dst=dst_i)
+            else:
+                # geometry mismatch pins the snapshot here; dropping it
+                # and re-prefilling elsewhere beats losing the request
+                seq.snapshot = None
+                seq.snapshot_pages = []
+                self._replay(seq.req, idx)
+
+    def _replay(self, req: Request, src_i: int) -> None:
+        """Re-submit a request whose device state is gone: emitted tokens
+        become a forced prompt prefix, so a survivor re-prefills and
+        greedy decode continues bit-identically — and since
+        ``out_tokens`` is untouched, no token is ever emitted twice."""
+        if req.retries >= req.max_retries:
+            self._fail(req, f"retry budget exhausted "
+                            f"({req.retries}/{req.max_retries})")
+            return
+        hwm = ft_lib.fold_emitted_prefix(req)
+        order = sorted(self._live(),
+                       key=lambda i: -self._headroom(self.engines[i]))
+        for dst_i in order:
+            eng = self.engines[dst_i]
+            if not eng.sched.fits(req):
+                continue
+            req.retries += 1
+            eng.submit(req)
+            self.home[req.uid] = dst_i
+            self._c_replayed.inc()
+            if req.trace is not None:
+                req.trace.stamp("replayed")
+            self.metrics.event("replayed", uid=req.uid, src=src_i,
+                               dst=dst_i, prefix_tokens=hwm)
+            return
+        self._fail(req, "no live replica can hold the request")
+
+    def _fail(self, req: Request, why: str) -> None:
+        req.done = True
+        req.finish_reason = "failed"
+        now = time.perf_counter()
+        req.t_done = now
+        if req.trace is not None:
+            req.trace.stamp("done", now)
+        self._c_failed.inc()
+        self.metrics.event("rescue_failed", uid=req.uid, reason=why)
+
+    def revive(self, idx: int) -> bool:
+        """Probe a quarantined replica; rejoin it to the placement set on
+        success. The underlying fault must have been repaired (host
+        swapped; in tests ``ChaosEngine.heal()``) — a failing probe keeps
+        the replica dead and may be retried later."""
+        if idx not in self.dead:
+            return True
+        eng = self.engines[idx]
+        probe = ft_lib.make_probe(
+            eng.cfg, uid=-(idx + 1),
+            max_new=self.ft.probe_max_new if self.ft is not None else 2)
+        try:
+            eng.submit(probe)
+            for _ in range(256):
+                if not eng.sched.has_work:
+                    break
+                eng.step()
+            ok = probe.done and len(probe.out_tokens) >= 1
+        except Exception as e:              # noqa: BLE001 — probe verdict
+            self.metrics.event("probe_failed", replica=idx,
+                               error=f"{type(e).__name__}: {e}")
+            ok = False
+        if ok:
+            self.dead.discard(idx)
+            if self.watchdog is not None:
+                self.watchdog.revive(idx)
+            self._c_revived.inc()
+            self._g_dead.set(len(self.dead))
+            self.metrics.event("revived", replica=idx)
+        return ok
+
+    def _update_degraded(self) -> None:
+        """Sustained pool exhaustion (every live replica backlogged with
+        zero discounted headroom for ``degraded_rounds`` rounds) flips
+        the router to ``degraded``; the first round with headroom flips
+        it back."""
+        live = self._live()
+        backlog = any(self.engines[i].sched.waiting for i in live)
+        exhausted = bool(live) and backlog and all(
+            self._headroom(self.engines[i]) <= 0 for i in live)
+        self._exhausted_rounds = self._exhausted_rounds + 1 \
+            if exhausted else 0
+        if self.state == "ok" and \
+                self._exhausted_rounds >= self.ft.degraded_rounds:
+            self.state = "degraded"
+            self._g_degraded.set(1)
+            self.metrics.event("degraded", rounds=self._exhausted_rounds)
+        elif self.state == "degraded" and not exhausted:
+            self.state = "ok"
+            self._g_degraded.set(0)
+            self.metrics.event("recovered")
+
     # -- driving -------------------------------------------------------------
 
     @property
     def has_work(self) -> bool:
-        return any(e.sched.has_work for e in self.engines)
+        return any(self.engines[i].sched.has_work for i in self._live())
 
     def step(self) -> bool:
-        """One round: each busy replica takes one engine step, then one
-        migration pass. Returns whether anything progressed."""
+        """One round: each busy live replica takes one engine step (under
+        ``ft``, watched and exception-guarded), then one migration pass.
+        Returns whether anything progressed."""
         progressed = False
-        for eng in self.engines:
-            if eng.sched.has_work:
-                progressed = eng.step() or progressed
+        for i in list(self._live()):
+            eng = self.engines[i]
+            had_work = eng.sched.has_work
+            stepped = False
+            if had_work:
+                try:
+                    stepped = eng.step()
+                except Exception as e:      # noqa: BLE001 — replica loss
+                    if self.ft is None:
+                        raise
+                    self.quarantine(
+                        i, f"exception escaped Engine.step: "
+                           f"{type(e).__name__}: {e}")
+                    progressed = True       # rescue moved real work
+                    continue
+                progressed = stepped or progressed
+            if self.watchdog is not None:
+                dt = self.watchdog.poll_step_time(i, eng)
+                verdict = self.watchdog.observe(i, dt, stepped, had_work)
+                # never watchdog-quarantine the LAST live replica: slow
+                # beats dead (a hard exception still quarantines above)
+                if verdict is not None and len(self._live()) > 1:
+                    self.quarantine(i, verdict)
+                    progressed = True
         if self.migrate() > 0:
             progressed = True
+        if self.ft is not None:
+            self._update_degraded()
         self._c_steps.inc()
         for i, hr in enumerate(self.pressure()):
             self._g_headroom.labels(replica=i).set(hr)
@@ -257,6 +513,8 @@ class Router:
 
     def describe(self) -> Dict:
         return {"replicas": len(self.engines),
+                "dead": sorted(self.dead),
+                "state": self.state,
                 "free_pages": [e.free_pages for e in self.engines],
                 "free_fraction": [round(e.free_fraction, 3)
                                   for e in self.engines],

@@ -112,6 +112,8 @@ class Scheduler:
                              "sequences released for migration")
         self._c_adopted = c("sched_adopted_total",
                             "sequences adopted from another replica")
+        self._c_expired = c("sched_expired_total",
+                            "waiting sequences expired past deadline")
         self._g_waiting = g("sched_waiting", "sequences in admission queue")
         self._g_running = g("sched_running", "sequences holding capacity")
         self._g_free_pages = g("sched_free_pages", "paged-domain free pages")
@@ -139,10 +141,17 @@ class Scheduler:
     # -- ordering -----------------------------------------------------------
 
     def _rank(self, seq: Sequence) -> Tuple:
-        """Sort key: best-to-schedule first."""
+        """Sort key: best-to-schedule first, deadline-aware (EDF): among
+        equal priority, deadlined sequences come before deadline-less
+        ones, earliest deadline first. The key is also what
+        ``_victim_order`` reverses, so deadlined work is evicted LAST.
+        Non-deadlined requests keep the pre-deadline ordering exactly
+        (their EDF component is the constant ``(1, 0.0)``)."""
+        da = getattr(seq.req, "deadline_at", None)
+        edf = (0, da) if da is not None else (1, 0.0)
         if self.cfg.policy == "priority":
-            return (-getattr(seq.req, "priority", 0), seq.arrival)
-        return (seq.arrival,)
+            return (-getattr(seq.req, "priority", 0), *edf, seq.arrival)
+        return (*edf, seq.arrival)
 
     def _victim_order(self) -> List[Sequence]:
         """Worst-to-keep first (reverse of schedule rank)."""
@@ -157,15 +166,26 @@ class Scheduler:
         only the paged component bounds the token budget."""
         if not self.plan.has_paged:
             return True
-        return len(req.prompt) + req.max_new <= \
+        return len(req.prompt) + self._remaining_new(req) <= \
             self.cfg.table_width * self.cfg.page_size
+
+    @staticmethod
+    def _remaining_new(req) -> int:
+        """Tokens the request can still emit. A replica-failure replay
+        folds emitted tokens into the prompt without truncating
+        ``out_tokens`` (serving/ft.py), so its total budget at finish is
+        unchanged — counting the full ``max_new`` again would double the
+        emitted prefix and reject rescues that actually fit."""
+        emitted = len(getattr(req, "out_tokens", ()) or ())
+        return max(1, req.max_new - emitted)
 
     def submit(self, req) -> Sequence:
         if len(req.prompt) == 0:
             raise ValueError("empty prompt (need >= 1 token to prefill)")
         if not self.fits(req):
             cap = self.cfg.table_width * self.cfg.page_size
-            raise ValueError(f"request needs {len(req.prompt) + req.max_new} "
+            need = len(req.prompt) + self._remaining_new(req)
+            raise ValueError(f"request needs {need} "
                              f"tokens > capacity {cap}")
         seq = Sequence(req=req, arrival=self._arrivals)
         self._arrivals += 1
@@ -280,6 +300,41 @@ class Scheduler:
         self._sync_gauges()
 
     # -- cross-replica migration (serving.mesh.router) ----------------------
+
+    def expire_overdue(self, now: float) -> List[Sequence]:
+        """Drop WAITING sequences past their deadline and hand them to
+        the engine for terminal ``timeout`` bookkeeping. Waiting
+        sequences hold no device capacity, so expiry frees nothing —
+        but it does stop a backlogged pool from spending pages on work
+        that is already late. Running sequences are never expired (their
+        pages are bought; finishing them is strictly cheaper than
+        re-serving). Expired counts land in ``finished_total`` too, so
+        the conservation identity (submitted + adopted == finished +
+        released + running + waiting) is untouched;
+        ``sched_expired_total`` tells the timeout story apart."""
+        out = [s for s in self.waiting
+               if getattr(s.req, "deadline_at", None) is not None
+               and now > s.req.deadline_at]
+        for seq in out:
+            self.waiting.remove(seq)
+            seq.snapshot = None
+            seq.snapshot_pages = []
+            self._c_finished.inc()
+            self._c_expired.inc()
+        if out:
+            self._g_waiting.set(len(self.waiting))
+        return out
+
+    def release_running(self, seq: Sequence) -> None:
+        """Drop a RUNNING sequence whose device state is gone (its
+        replica died): both domains are freed locally and the request is
+        handed back to the router for replay elsewhere. Counted as
+        released — the conservation identity absorbs the hand-off
+        exactly like ``release_waiting``."""
+        self._release(seq)
+        self.running.remove(seq)
+        self._c_released.inc()
+        self._sync_gauges()
 
     def release_waiting(self, seq: Sequence) -> None:
         """Detach a waiting sequence so another replica can adopt it.

@@ -1,0 +1,383 @@
+"""Fault-tolerant serving: chaos recovery matrix + deadline/degradation
+behavior.
+
+The core matrix kills replica 1 mid-service with each chaos fault kind
+(hard exception, simulated stall, corrupt admission, pool exhaustion)
+for one representative arch per multi-domain pool plan {kv, hybrid,
+enc-dec}, and asserts the whole fault-tolerance contract at once:
+
+* every submitted request reaches a terminal state exactly once (one
+  ``done`` event per uid in the shared registry),
+* greedy outputs are bit-identical to an undisturbed single-engine run
+  — rescue/replay must not change a single token,
+* the scheduler conservation invariants of ``test_scheduler_props``
+  hold after EVERY router round, across quarantine and rescue,
+* after ``heal()`` + ``revive()`` the replica rejoins, serves new
+  requests bit-identically, and no page or slot is leaked.
+
+Chaos cells run with migration disabled: otherwise ordinary pressure
+migration quietly drains the starved replica before the stuck detector
+can fire (a correct but different recovery path — the matrix pins the
+quarantine one).
+"""
+import numpy as np
+import pytest
+
+import jax
+
+from repro.configs import registry
+from repro.models import transformer as T
+from repro.obs import MetricsRegistry
+from repro.serving import (Engine, FTConfig, ReplicaWatchdog, Request,
+                           Router, RouterConfig, SchedConfig, Scheduler,
+                           plan_for)
+from repro.serving import ft as ft_lib
+from repro.serving.chaos import ChaosEngine, ChaosError, ChaosPlan
+
+ARCHS = ["qwen3-4b", "hymba-1.5b", "seamless-m4t-large-v2"]
+KINDS = ["raise", "hang", "reject", "oom"]
+N_REQ = 8
+MAX_NEW = 10
+
+_cache = {}
+
+
+def _setup(arch):
+    """Per-arch params, request blueprints, and the undisturbed
+    single-engine reference outputs (cached across matrix cells)."""
+    if arch in _cache:
+        return _cache[arch]
+    cfg = registry.reduced(arch, n_layers=2)
+    params = T.init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    blue = []
+    for i in range(N_REQ):
+        enc = None
+        if cfg.is_encdec:
+            from repro.models import frontends
+            enc = frontends.synthetic_audio_features(rng, cfg)
+        blue.append((rng.integers(1, cfg.vocab,
+                                  int(rng.integers(4, 20))).astype(np.int32),
+                     enc))
+    ref = [Request(uid=i, prompt=p.copy(), max_new=MAX_NEW, enc_emb=e)
+           for i, (p, e) in enumerate(blue)]
+    eng = Engine(cfg, params, batch_slots=2, max_len=64, seed=0)
+    for r in ref:
+        eng.submit(r)
+    eng.run()
+    want = {r.uid: list(r.out_tokens) for r in ref}
+    assert all(len(t) == MAX_NEW for t in want.values())
+    _cache[arch] = (cfg, params, blue, want)
+    return _cache[arch]
+
+
+def _requests(blue):
+    # fresh Request objects per run; prompts copied because replay folds
+    # emitted tokens into req.prompt in place
+    return [Request(uid=i, prompt=p.copy(), max_new=MAX_NEW, enc_emb=e)
+            for i, (p, e) in enumerate(blue)]
+
+
+def _inner(e):
+    return getattr(e, "_eng", e)
+
+
+def _check_allocators(engines, allow_foreign=False):
+    """The test_scheduler_props invariants, per replica. ``allow_foreign``
+    tolerates the oom fault's hostage allocations (pages allocated but
+    owned by no sequence — by design)."""
+    for e in engines:
+        sched = _inner(e).sched
+        a = sched.alloc
+        assert a.free_pages + a.used_pages == a.num_pages - 1
+        owned = [p for s in sched.running for p in s.table.pages]
+        assert len(owned) == len(set(owned))
+        assert 0 not in owned
+        if allow_foreign:
+            assert set(owned) <= a._allocated
+        else:
+            assert set(owned) == a._allocated
+        for s in sched.waiting:
+            assert not s.table.pages and s.slot is None
+        if sched.slot_alloc is not None:
+            sa = sched.slot_alloc
+            assert sa.free_pages + sa.used_pages == sa.num_pages - 1
+            slots = [s.slot for s in sched.running if s.slot is not None]
+            assert len(slots) == len(set(slots))
+            assert 0 not in slots
+            if allow_foreign:
+                assert set(slots) <= sa._allocated
+            else:
+                assert set(slots) == sa._allocated
+
+
+def _check_conservation(reg, engines):
+    """Global request conservation across ALL replicas (rescue moves
+    requests between schedulers; it must never create or destroy them)."""
+    running = sum(len(_inner(e).sched.running) for e in engines)
+    waiting = sum(len(_inner(e).sched.waiting) for e in engines)
+    v = reg.value_sum
+    assert v("sched_submitted_total") + v("sched_adopted_total") == \
+        v("sched_finished_total") + v("sched_released_total") + \
+        running + waiting
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+@pytest.mark.parametrize("kind", KINDS)
+def test_chaos_matrix(arch, kind):
+    cfg, params, blue, want = _setup(arch)
+    reg = MetricsRegistry()
+    engines = [Engine(cfg, params, batch_slots=2, max_len=64, seed=i,
+                      metrics=reg) for i in range(2)]
+    engines[1] = ChaosEngine(engines[1], ChaosPlan(kind, at_step=4))
+    router = Router(engines, cfg=RouterConfig(migrate=False), metrics=reg,
+                    ft=FTConfig(grace_steps=2, stuck_rounds=3))
+    reqs = _requests(blue)
+    for r in reqs:
+        router.submit(r)
+
+    def on_step(rt):
+        _check_allocators(rt.engines, allow_foreign=(kind == "oom"))
+        _check_conservation(reg, rt.engines)
+
+    router.run(on_step=on_step)
+
+    # terminal exactly once, served (not failed/shed/timed out)
+    assert all(r.done for r in reqs)
+    assert all(r.finish_reason in ("eos", "length") for r in reqs)
+    dones = {}
+    for ev in reg.events:
+        if ev.get("event") == "done":
+            dones[ev["uid"]] = dones.get(ev["uid"], 0) + 1
+    assert dones == {i: 1 for i in range(N_REQ)}
+    # bit-identical greedy vs the undisturbed single-engine run
+    assert {r.uid: list(r.out_tokens) for r in reqs} == want
+    # the fault actually took the quarantine path
+    assert reg.value_sum("router_quarantined_total") == 1
+    assert 1 in router.dead
+    assert reg.value_sum("router_rescued_total") + \
+        reg.value_sum("router_replayed_total") >= 1
+    assert reg.value_sum("router_failed_total") == 0
+
+    # heal the fault, revive via probe, then serve on the healed set
+    engines[1].heal()
+    assert router.revive(1)
+    assert router.dead == set()
+    assert reg.value_sum("router_revived_total") == 1
+    extra = [Request(uid=100 + i, prompt=blue[i][0].copy(),
+                     max_new=MAX_NEW, enc_emb=blue[i][1]) for i in range(2)]
+    for r in extra:
+        router.submit(r)
+    router.run(on_step=lambda rt: _check_allocators(rt.engines))
+    assert all(r.done and list(r.out_tokens) == want[i]
+               for i, r in enumerate(extra))
+    # no page/slot leaked after quarantine + revive
+    for e in engines:
+        sched = _inner(e).sched
+        assert sched.alloc.used_pages == 0
+        if sched.slot_alloc is not None:
+            assert sched.slot_alloc.used_pages == 0
+    _check_conservation(reg, engines)
+
+
+# ---------------------------------------------------------------------------
+# chaos harness
+# ---------------------------------------------------------------------------
+
+def test_chaos_plan_from_seed_deterministic():
+    a = ChaosPlan.from_seed(7)
+    b = ChaosPlan.from_seed(7)
+    assert (a.kind, a.at_step) == (b.kind, b.at_step)
+    kinds = {ChaosPlan.from_seed(s).kind for s in range(32)}
+    assert kinds == {"raise", "hang", "reject", "oom"}
+    with pytest.raises(ValueError):
+        ChaosPlan("segfault")
+
+
+def test_chaos_raise_without_ft_propagates():
+    """Without ``ft`` the router must NOT swallow replica exceptions —
+    pre-FT behavior is preserved exactly."""
+    cfg, params, blue, _ = _setup("qwen3-4b")
+    engines = [Engine(cfg, params, batch_slots=2, max_len=64, seed=i)
+               for i in range(2)]
+    engines[1] = ChaosEngine(engines[1], ChaosPlan("raise", at_step=1))
+    router = Router(engines)
+    for r in _requests(blue):
+        router.submit(r)
+    with pytest.raises(ChaosError):
+        router.run()
+
+
+# ---------------------------------------------------------------------------
+# watchdog (unit: fed synthetic observations, no engines)
+# ---------------------------------------------------------------------------
+
+def test_watchdog_flags_slow_replica_vs_peer_median():
+    wd = ReplicaWatchdog(3, FTConfig(ema=0.5, threshold=2.0, grace_steps=2))
+    verdict = None
+    for _ in range(6):
+        wd.observe(0, 0.01, True, True)
+        wd.observe(1, 0.01, True, True)
+        verdict = wd.observe(2, 0.5, True, True)
+    assert verdict is not None and "slow" in verdict
+    # two replicas: the slow one must still be detectable (peer median,
+    # not global median — the global upper median IS the slow replica)
+    wd2 = ReplicaWatchdog(2, FTConfig(ema=0.5, threshold=2.0, grace_steps=2))
+    verdict = None
+    for _ in range(6):
+        wd2.observe(0, 0.01, True, True)
+        verdict = wd2.observe(1, 0.5, True, True)
+    assert verdict is not None and "slow" in verdict
+
+
+def test_watchdog_stuck_and_reset():
+    wd = ReplicaWatchdog(2, FTConfig(stuck_rounds=3))
+    assert wd.observe(0, None, False, True) is None
+    assert wd.observe(0, None, False, True) is None
+    verdict = wd.observe(0, None, False, True)
+    assert verdict is not None and "stuck" in verdict
+    # progress resets the streak; idle (no work) never counts as stuck
+    wd2 = ReplicaWatchdog(2, FTConfig(stuck_rounds=2))
+    wd2.observe(0, None, False, True)
+    wd2.observe(0, None, True, True)
+    assert wd2.observe(0, None, False, True) is None
+    assert wd2.observe(1, None, False, False) is None
+    assert wd2.observe(1, None, False, False) is None
+
+
+def test_fold_emitted_prefix_exactly_once_arithmetic():
+    req = Request(uid=0, prompt=np.array([1, 2, 3], np.int32), max_new=8)
+    req.out_tokens.extend([7, 8, 9])
+    hwm = ft_lib.fold_emitted_prefix(req)
+    assert hwm == 3
+    assert list(req.prompt) == [1, 2, 3, 7, 8, 9]
+    assert req.out_tokens == [7, 8, 9]      # never truncated
+    # total token budget at finish is unchanged: prompt grew by hwm, the
+    # engine's len(out_tokens) >= max_new check still stops at max_new
+    assert len(req.prompt) + (req.max_new - hwm) == 3 + req.max_new
+
+
+# ---------------------------------------------------------------------------
+# deadlines
+# ---------------------------------------------------------------------------
+
+def test_deadline_expires_overdue_waiting_requests():
+    cfg, params, blue, _ = _setup("qwen3-4b")
+    eng = Engine(cfg, params, batch_slots=2, max_len=64, seed=0)
+    reqs = [Request(uid=i, prompt=blue[i][0].copy(), max_new=MAX_NEW,
+                    deadline=(0.0 if i >= 4 else None))
+            for i in range(N_REQ)]
+    for r in reqs:
+        eng.submit(r)
+    done = eng.run()
+    # the two admitted immediately ran; the backlog expired while waiting
+    assert all(r.done for r in reqs)
+    assert [r.finish_reason for r in reqs[:4]] == ["length"] * 4
+    assert all(r.finish_reason == "timeout" and r.out_tokens == []
+               for r in reqs if r.deadline is not None)
+    assert eng.metrics.value_sum("engine_expired_total") == 4
+    assert eng.metrics.value_sum("sched_expired_total") == 4
+    assert len([r for r in done if r.finish_reason == "length"]) == 4
+    # expired requests still satisfy conservation (they count finished)
+    _check_conservation(eng.metrics, [eng])
+
+
+def test_rank_is_deadline_aware_edf():
+    plan = plan_for(registry.reduced("qwen3-4b"))
+    sched = Scheduler(SchedConfig(max_batch=4, prefill_batch=2,
+                                  prefill_chunk=4, page_size=4,
+                                  num_pages=13, table_width=4), plan)
+
+    def req(uid, deadline_at=None):
+        r = Request(uid=uid, prompt=np.ones(3, np.int32), max_new=2)
+        r.deadline_at = deadline_at
+        return r
+
+    late = sched.submit(req(0))                  # arrives first, no deadline
+    loose = sched.submit(req(1, deadline_at=90.0))
+    tight = sched.submit(req(2, deadline_at=10.0))
+    order = sorted(sched.waiting, key=sched._rank)
+    assert [s.req.uid for s in order] == [2, 1, 0]
+    # deadlined work is evicted last (victim order reverses the rank)
+    assert sched._rank(tight) < sched._rank(loose) < sched._rank(late)
+    # non-deadlined requests keep plain FCFS among themselves
+    plain = sched.submit(req(3))
+    assert sched._rank(late) < sched._rank(plain)
+
+
+def test_fits_is_remaining_aware_for_replays():
+    plan = plan_for(registry.reduced("qwen3-4b"))
+    sched = Scheduler(SchedConfig(page_size=4, num_pages=13, table_width=4),
+                      plan)                       # capacity 16 tokens
+    req = Request(uid=0, prompt=np.ones(6, np.int32), max_new=8)
+    assert sched.fits(req)                        # 6 + 8 <= 16
+    req.out_tokens.extend([1, 2, 3, 4])
+    ft_lib.fold_emitted_prefix(req)               # prompt now 10 tokens
+    # naive accounting would say 10 + 8 = 18 > 16 and reject the rescue;
+    # remaining-aware: 10 + (8 - 4) = 14 <= 16
+    assert sched.fits(req)
+
+
+# ---------------------------------------------------------------------------
+# graceful degradation + router registry homing
+# ---------------------------------------------------------------------------
+
+def test_degraded_sheds_new_requests_then_recovers():
+    cfg, params, blue, _ = _setup("qwen3-4b")
+    reg = MetricsRegistry()
+    # max_len=32 shrinks the pool to 16 pages of 8 per replica, so a
+    # 24-request flood genuinely exhausts both replicas for several
+    # rounds (the default pool absorbs it and never degrades)
+    engines = [Engine(cfg, params, batch_slots=2, max_len=32, seed=i,
+                      metrics=reg) for i in range(2)]
+    router = Router(engines, metrics=reg, ft=FTConfig(degraded_rounds=2))
+    flood = [Request(uid=100 + i, prompt=blue[i % N_REQ][0][:12].copy(),
+                     max_new=MAX_NEW) for i in range(24)]
+    for r in flood:
+        router.submit(r)
+    shed = None
+    for _ in range(60):
+        router.step()
+        if router.state == "degraded":
+            extra = Request(uid=999, prompt=blue[0][0][:12].copy(),
+                            max_new=MAX_NEW)
+            assert router.submit(extra) == -1     # reject-new, not evict
+            shed = extra
+            break
+    assert shed is not None, "router never entered degraded state"
+    assert shed.done and shed.finish_reason == "shed"
+    assert not shed.out_tokens
+    assert reg.value_sum("router_shed_total") == 1
+    assert reg.value_sum("router_degraded") == 1
+    done = router.run()
+    # shedding is reject-NEW only: every request already admitted or
+    # queued before degradation still finishes normally
+    assert len(done) == len(flood)
+    assert all(r.finish_reason in ("eos", "length") for r in flood)
+    assert router.state == "ok"
+    assert reg.value_sum("router_degraded") == 0
+
+
+def test_router_counters_survive_replica0_quarantine():
+    """Satellite: control-plane series must not live in engines[0]'s
+    registry slot — kill replica 0 and the router's counters must keep
+    counting."""
+    cfg, params, blue, want = _setup("qwen3-4b")
+    engines = [Engine(cfg, params, batch_slots=2, max_len=64, seed=i)
+               for i in range(2)]
+    engines[0] = ChaosEngine(engines[0], ChaosPlan("raise", at_step=3))
+    router = Router(engines, ft=FTConfig())       # no shared registry
+    assert router.metrics is not engines[1].metrics
+    assert router.metrics is not _inner(engines[0]).metrics
+    reqs = _requests(blue)
+    for r in reqs:
+        router.submit(r)
+    router.run()
+    assert all(r.done for r in reqs)
+    assert {r.uid: list(r.out_tokens) for r in reqs} == want
+    # counters incremented after replica 0 died — in the ROUTER registry
+    assert router.metrics.value_sum("router_quarantined_total") == 1
+    assert router.metrics.value_sum("router_submitted_total") == N_REQ
+    # and none of them leaked into a replica's registry
+    snap = engines[1].metrics.snapshot()["counters"]
+    assert "router_quarantined_total" not in snap

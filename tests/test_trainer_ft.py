@@ -104,6 +104,57 @@ def test_straggler_exclude_policy():
     assert len(shard_map) == 3
 
 
+def test_straggler_reassign_with_all_peers_excluded_warns():
+    """Regression: ``_act`` with policy=reassign used to crash on
+    ``min()`` over an empty candidate set when every other host was
+    excluded (external controllers — elastic shrink, the serving router
+    — mark hosts excluded outside the exclude policy). It must degrade
+    to a warn event instead."""
+    wd = StragglerWatchdog(4, StragglerConfig(grace_steps=1, threshold=1.5))
+    for step in range(4):                     # establish EMAs
+        for h in range(4):
+            wd.record(h, step, 1.0)
+    for h in (0, 1, 3):                       # external exclusion
+        wd.hosts[h].excluded = True
+    # record path stays quiet (median needs >= 2 active hosts) ...
+    assert wd.record(2, 5, 9.0) is None
+    # ... and the direct act path warns instead of raising ValueError
+    ev = wd._act(2, 5, 1.0)
+    assert ev["action"] == "warn"
+    assert "reassigned_to_host" not in ev
+    assert wd.hosts[2].shard == 2             # shard map untouched
+
+
+def test_elastic_shrink_plan_and_axis():
+    from repro.ft import elastic
+    plan = elastic.shrink_plan(4, failed=(1, 3), model=1)
+    assert plan == {"alive_hosts": 2, "new_data_axis": 2,
+                    "shard_of_host": {0: 0, 2: 1}}
+    assert elastic.viable_data_axis(8, 2) == 4
+    with pytest.raises(ValueError):
+        elastic.viable_data_axis(6, 4)
+
+
+def test_elastic_degrade_and_reshard():
+    from types import SimpleNamespace
+    from jax.sharding import PartitionSpec as P
+    from repro.ft import elastic
+    mesh2 = SimpleNamespace(axis_names=("data", "model"),
+                            devices=np.zeros((2, 2)))
+    # dividing dims keep their axes; non-dividing degrade to replication
+    assert elastic._degrade(P("data"), (4, 8), mesh2) == P("data", None)
+    assert elastic._degrade(P("data"), (3, 8), mesh2) == P(None, None)
+    assert elastic._degrade(P(("data", "model")), (8,), mesh2) \
+        == P(("data", "model"))
+    assert elastic._degrade(P(("data", "model")), (6,), mesh2) == P(None)
+    # reshard on a real (1, 1) mesh round-trips values
+    mesh = elastic.remesh(jax.devices()[:1], model_parallel=1)
+    assert mesh.devices.shape == (1, 1)
+    tree = {"w": np.arange(6, dtype=np.float32).reshape(2, 3)}
+    out = elastic.reshard_tree(tree, {"w": P("data")}, mesh)
+    np.testing.assert_array_equal(np.asarray(out["w"]), tree["w"])
+
+
 def test_compressed_dp_trainer_runs(tmp_path):
     """compress_dp path on a (pod=2, data=1, model=1)-style mesh is covered
     by the subprocess sharding test; here: config plumbs through on 1 dev
