@@ -16,10 +16,13 @@ simulated 8-device-mesh comparison (2 router replicas x TP=2, run in a
 subprocess so the forced host-platform device count cannot leak into
 this process), a failover-cost cell (2-replica FT router, replica 1
 chaos-killed mid-decode: requests/s dip vs the undisturbed run plus the
-rescue latency read from the registry event stream), and the
-``launch/dryrun --serve-chaos`` smoke verdict (subprocess, same device-
-count isolation). ``--failover`` re-measures ONLY the failover cell and
-read-modify-writes it into the committed ``BENCH_serving.json`` without
+rescue latency read from the registry event stream), a shared-prefix
+cell (64 requests at ~90% prompt overlap served cold vs with the radix
+prefix cache + COW + chunked prefill: prefill-token reduction, TPOT-p95
+ratio, bit-identity, leak check), and the ``launch/dryrun
+--serve-chaos`` smoke verdict (subprocess, same device-count
+isolation). ``--failover`` / ``--prefix`` re-measure ONLY that cell and
+read-modify-write it into the committed ``BENCH_serving.json`` without
 re-running the full sweep. CSV columns: name, us_per_call (wall us per
 generated token), derived (tokens/s | mean ttft ms | preemptions).
 """
@@ -226,6 +229,112 @@ def _failover_rows(rec: Dict) -> List[str]:
 
 
 # ---------------------------------------------------------------------------
+# shared-prefix serving: prefix cache + COW + chunked prefill vs cold
+# ---------------------------------------------------------------------------
+
+
+def _bench_prefix(concurrency: int = 64, slots: int = 16,
+                  seed: int = 0) -> Dict:
+    """Serve ``concurrency`` requests sharing a 36-token prompt prefix
+    (~90% of the prompt) twice through one paged engine — cold, and
+    with the radix prefix cache + chunked prefill armed — after an
+    identical 4-request donor warm-up in both runs (which also warms
+    the jit caches). Prices the subsystem: prefill-token reduction
+    (admission throughput — a hit skips its matched tokens), end-to-end
+    tokens/s, decode-p95-TPOT ratio under chunked prefill (must stay
+    ~1x: interleaving bounds decode starvation), greedy bit-identity,
+    and zero leaked pages after dropping the cache."""
+    from repro.configs import registry
+    from repro.models import transformer as T
+    from repro.obs import MetricsRegistry
+    from repro.serving import ChunkConfig, Engine, PrefixConfig, Request
+
+    cfg = registry.reduced("qwen3-4b", n_layers=2)
+    params = T.init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(seed)
+    shared = rng.integers(0, cfg.vocab, 36).astype(np.int32)
+    tails = [rng.integers(0, cfg.vocab,
+                          3 + int(rng.integers(0, 3))).astype(np.int32)
+             for _ in range(concurrency)]
+    mean_len = 36 + float(np.mean([len(t) for t in tails]))
+
+    def serve(prefix) -> Dict:
+        reg = MetricsRegistry()
+        eng = Engine(cfg, params, batch_slots=slots, max_len=64,
+                     seed=seed, metrics=reg, prefix=prefix)
+        for i in range(4):                      # donor warm-up (+ jit)
+            eng.submit(Request(uid=1000 + i, prompt=shared.copy(),
+                               max_new=4))
+        eng.run()
+        pre0 = reg.value_sum("engine_prefill_tokens_total")
+        reqs = [Request(uid=i, prompt=np.concatenate([shared, t]),
+                        max_new=12) for i, t in enumerate(tails)]
+        wall, toks, _, summ = _drive(eng, reqs)
+        rec = {"wall": wall, "toks": toks,
+               "prefill_tokens": int(reg.value_sum(
+                   "engine_prefill_tokens_total") - pre0),
+               "tpot_p95_s": summ["tpot_s"]["p95"],
+               "out": {r.uid: r.out_tokens for r in reqs}}
+        if eng.prefix is not None:
+            v = reg.value_sum
+            rec.update({
+                "hit_rate": round(v("prefix_hits_total")
+                                  / v("prefix_lookups_total"), 3),
+                "hit_tokens": int(v("prefix_hit_tokens_total")),
+                "cow_forks": int(v("prefix_cow_forks_total")),
+                "evictions": int(v("prefix_evictions_total")),
+                "cache_pages": eng.prefix.pages,
+            })
+            eng.prefix.drop_all()
+            rec["leaked_pages_after_drop"] = eng.sched.alloc.used_pages
+        return rec
+
+    cold = serve(None)
+    warm = serve(PrefixConfig(chunk=ChunkConfig(chunk_tokens=32)))
+    out_cold = cold.pop("out")
+    out_warm = warm.pop("out")
+    return {
+        "concurrency": concurrency, "slots": slots, "arch": "qwen3-4b",
+        "overlap_pct": round(100.0 * 36 / mean_len, 1),
+        "cold": {"tok_s": round(cold["toks"] / cold["wall"], 2),
+                 "prefill_tokens": cold["prefill_tokens"],
+                 "tpot_ms_p95": round(cold["tpot_p95_s"] * 1e3, 2)},
+        "warm": {"tok_s": round(warm["toks"] / warm["wall"], 2),
+                 "prefill_tokens": warm["prefill_tokens"],
+                 "tpot_ms_p95": round(warm["tpot_p95_s"] * 1e3, 2),
+                 "hit_rate": warm["hit_rate"],
+                 "hit_tokens": warm["hit_tokens"],
+                 "cow_forks": warm["cow_forks"],
+                 "evictions": warm["evictions"],
+                 "cache_pages": warm["cache_pages"]},
+        "prefill_reduction_x": round(cold["prefill_tokens"]
+                                     / max(warm["prefill_tokens"], 1), 2),
+        "tpot_p95_ratio": round(warm["tpot_p95_s"]
+                                / max(cold["tpot_p95_s"], 1e-9), 3),
+        "tokens_match_cold": bool(out_warm == out_cold),
+        "leaked_pages_after_drop": warm["leaked_pages_after_drop"],
+    }
+
+
+def _prefix_rows(rec: Dict) -> List[str]:
+    c = rec["concurrency"]
+    cl, wm = rec["cold"], rec["warm"]
+    return [
+        f"serving/prefix/cold/c{c},0,"
+        f"tok_s={cl['tok_s']}|prefill_toks={cl['prefill_tokens']}"
+        f"|tpot_ms_p95={cl['tpot_ms_p95']}",
+        f"serving/prefix/warm/c{c},0,"
+        f"tok_s={wm['tok_s']}|prefill_toks={wm['prefill_tokens']}"
+        f"|hit_rate={wm['hit_rate']}|forks={wm['cow_forks']}",
+        f"serving/prefix/quality/c{c},0,"
+        f"prefill_x={rec['prefill_reduction_x']}"
+        f"|tpot_p95_ratio={rec['tpot_p95_ratio']}"
+        f"|match={rec['tokens_match_cold']}"
+        f"|leaked={rec['leaked_pages_after_drop']}",
+    ]
+
+
+# ---------------------------------------------------------------------------
 # chaos smoke: launch/dryrun --serve-chaos (subprocess: the forced
 # 8-device host platform must not leak into this process)
 # ---------------------------------------------------------------------------
@@ -364,6 +473,8 @@ def run(full: bool = False):
         yield from _pair_rows(rec)
     failover = _bench_failover(16)
     yield from _failover_rows(failover)
+    shared_prefix = _bench_prefix(64 if full else 16)
+    yield from _prefix_rows(shared_prefix)
     mesh = _bench_mesh()
     yield from _mesh_rows(mesh)
     chaos = _chaos_smoke()
@@ -374,6 +485,7 @@ def run(full: bool = False):
         "backend": jax.default_backend(),
         "paged_vs_legacy": pairs,
         "failover": failover,
+        "shared_prefix": shared_prefix,
         "mesh_vs_single_host": mesh,
         "chaos_smoke": chaos,
     }
@@ -400,6 +512,24 @@ def main(argv=None):
             with open(path) as f:
                 payload = json.load(f)
         payload["failover"] = rec
+        with open(path, "w") as f:
+            json.dump(payload, f, indent=2)
+            f.write("\n")
+        return 0
+    if "--prefix" in args:
+        # re-measure ONLY the shared-prefix cell and splice it into the
+        # committed full-sweep JSON (same pattern as --failover)
+        print("name,us_per_call,derived")
+        rec = _bench_prefix(64)
+        for row in _prefix_rows(rec):
+            print(row, flush=True)
+        path = os.environ.get("REPRO_BENCH_SERVING_JSON",
+                              "BENCH_serving.json")
+        payload = {"bench": "serving"}
+        if os.path.exists(path):
+            with open(path) as f:
+                payload = json.load(f)
+        payload["shared_prefix"] = rec
         with open(path, "w") as f:
             json.dump(payload, f, indent=2)
             f.write("\n")

@@ -10,7 +10,8 @@ import sys as _sys
 # forced count still partitions — the argv sniff is a speed knob, not
 # semantics.
 _FORCED = os.environ.get("REPRO_DRYRUN_DEVICES") or \
-    ("8" if ("--serve-mesh" in _sys.argv or "--serve-chaos" in _sys.argv)
+    ("8" if ("--serve-mesh" in _sys.argv or "--serve-chaos" in _sys.argv
+             or "--serve-prefix" in _sys.argv)
      else "512")
 os.environ["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={_FORCED}"
 
@@ -351,6 +352,77 @@ def serve_chaos_smoke(arch: str = "qwen3-4b") -> Dict:
     return rec
 
 
+def serve_prefix_smoke(arch: str = "qwen3-4b") -> Dict:
+    """``--serve-prefix``: prefix-sharing serving smoke.
+
+    Serves 8 requests sharing a 32-token prompt prefix through one
+    paged engine with the radix prefix cache + chunked prefill armed
+    (small slot count so admission staggers into waves and later waves
+    can hit the donor wave's cached pages). Checks (a) the cache
+    actually hit (hit-rate > 0 and strictly fewer tokens prefilled than
+    the cold engine), (b) greedy tokens are bit-identical to a cold-cache
+    run, (c) after the drain + ``drop_all`` not a single page or slot is
+    leaked.
+    """
+    import numpy as np
+    from repro.obs.metrics import MetricsRegistry
+    from repro.serving import (ChunkConfig, Engine, PrefixConfig, Request)
+
+    t0 = time.time()
+    cfg = registry.reduced(arch, n_layers=2)
+    rec: Dict = {"cell": "serve_prefix_smoke", "arch": arch}
+    try:
+        params = T.init(jax.random.PRNGKey(0), cfg)
+        rng = np.random.default_rng(0)
+        shared = rng.integers(0, cfg.vocab, 32).astype(np.int32)
+        prompts = [np.concatenate([shared, rng.integers(
+            0, cfg.vocab, 3 + i).astype(np.int32)]) for i in range(8)]
+
+        def serve(prefix, reg):
+            eng = Engine(cfg, params, batch_slots=2, max_len=64,
+                         metrics=reg, prefix=prefix)
+            for i, p in enumerate(prompts):
+                eng.submit(Request(uid=i, prompt=p.copy(), max_new=6))
+            return eng, {r.uid: r.out_tokens for r in eng.run()}
+
+        cold_reg = MetricsRegistry()
+        _, want = serve(None, cold_reg)
+        warm_reg = MetricsRegistry()
+        eng, got = serve(PrefixConfig(chunk=ChunkConfig(chunk_tokens=16)),
+                         warm_reg)
+
+        hits = int(warm_reg.value_sum("prefix_hits_total"))
+        rec.update({
+            "requests_done": len(got),
+            "hit_rate": round(hits / len(prompts), 3),
+            "hit_tokens": int(warm_reg.value_sum("prefix_hit_tokens_total")),
+            "cow_forks": int(warm_reg.value_sum("prefix_cow_forks_total")),
+            "prefill_tokens_cold": int(cold_reg.value_sum(
+                "engine_prefill_tokens_total")),
+            "prefill_tokens_warm": int(warm_reg.value_sum(
+                "engine_prefill_tokens_total")),
+            "tokens_match_cold": bool(got == want),
+        })
+        cache_pages = eng.prefix.pages
+        eng.prefix.drop_all()
+        rec.update({
+            "cache_pages_at_drain": cache_pages,
+            "used_pages_after_drop": eng.sched.alloc.used_pages,
+        })
+        rec["ok"] = (got == want and len(got) == len(prompts)
+                     and hits > 0
+                     and rec["prefill_tokens_warm"]
+                     < rec["prefill_tokens_cold"]
+                     and eng.sched.alloc.used_pages == 0
+                     and eng.sched.alloc.total_refs == 0)
+    except Exception as e:
+        rec["ok"] = False
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    rec["total_s"] = round(time.time() - t0, 2)
+    return rec
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None, choices=registry.ARCHS + [None])
@@ -376,13 +448,20 @@ def main(argv=None):
     ap.add_argument("--serve-chaos", action="store_true",
                     help="fault-tolerance smoke: FT router + chaos-killed "
                          "replica mid-decode, rescue must be bit-identical")
+    ap.add_argument("--serve-prefix", action="store_true",
+                    help="prefix-sharing smoke: 8 shared-prefix requests, "
+                         "hit-rate > 0, bit-match vs cold cache, zero "
+                         "leaked pages")
     args = ap.parse_args(argv)
 
-    if args.pipeline or args.serve_mesh or args.serve_chaos:
+    if (args.pipeline or args.serve_mesh or args.serve_chaos
+            or args.serve_prefix):
         rec = (pipeline_smoke() if args.pipeline
                else serve_mesh_smoke(args.arch or "qwen3-4b")
                if args.serve_mesh
-               else serve_chaos_smoke(args.arch or "qwen3-4b"))
+               else serve_chaos_smoke(args.arch or "qwen3-4b")
+               if args.serve_chaos
+               else serve_prefix_smoke(args.arch or "qwen3-4b"))
         line = json.dumps(rec, default=float)
         print(line, flush=True)
         if args.out:

@@ -18,6 +18,11 @@ for comparison.
 ``--replicas``/``--model-parallel`` route requests across engine
 replicas whose page pools are model-axis sharded (``serving/mesh``);
 ``--quantize-kv`` stores KV pages as int8 with per-page-row scales.
+``--prefix-cache`` arms the prefix-sharing subsystem (radix cache +
+copy-on-write paged KV, ``serving/prefix``); ``--cache-bytes`` bounds
+its footprint and ``--chunk-tokens`` budgets chunked prefill so long
+cold prompts interleave with decode. ``--shared-prefix N`` makes the
+synthetic prompts share their first N tokens, so hit rates are visible.
 ``--ft`` arms the fault-tolerant router (replica watchdog + failover
 with request rescue, ``serving/ft.py``), ``--deadline S`` gives every
 request an S-second deadline (overdue waiting requests finish as
@@ -91,6 +96,20 @@ def main(argv=None):
     ap.add_argument("--metrics-out", default=None,
                     help="write Prometheus text exposition here "
                          "(+ .events.jsonl) at exit")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="radix prefix cache: requests sharing a cached "
+                         "prompt prefix reuse its KV pages (COW) instead "
+                         "of re-prefilling (serving/prefix)")
+    ap.add_argument("--cache-bytes", type=int, default=0,
+                    help="prefix-cache byte budget (0 = unbounded; LRU "
+                         "eviction above the budget)")
+    ap.add_argument("--chunk-tokens", type=int, default=0,
+                    help="chunked-prefill token budget per step (0 = full "
+                         "jit budget); long cold prompts admit in chunks "
+                         "interleaved with decode")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="synthetic prompts share their first N tokens "
+                         "(workload shaping for --prefix-cache demos)")
     ap.add_argument("--kernel-timing", action="store_true",
                     help="record per-dispatch kernel wall times (eager "
                          "dispatches only; serializes the device pipeline)")
@@ -105,6 +124,12 @@ def main(argv=None):
     cfg = registry.reduced(args.arch, **overrides)
     params = model_lib.init(jax.random.PRNGKey(args.seed), cfg)
     paged = PagedConfig(quantize_kv=args.quantize_kv)
+    prefix = None
+    if args.prefix_cache or args.cache_bytes or args.chunk_tokens:
+        from repro.serving import ChunkConfig, PrefixConfig
+        prefix = PrefixConfig(
+            cache_bytes=args.cache_bytes,
+            chunk=ChunkConfig(chunk_tokens=args.chunk_tokens))
     if args.legacy:
         from repro.serving import legacy
         eng = legacy.Engine(cfg, params, batch_slots=args.slots,
@@ -116,7 +141,7 @@ def main(argv=None):
         engines = [Engine(cfg, params, batch_slots=args.slots,
                           max_len=args.max_len, policy=args.policy,
                           seed=args.seed + i, mesh=m, paged=paged,
-                          metrics=metrics)
+                          metrics=metrics, prefix=prefix)
                    for i, m in enumerate(meshes)]
         if args.chaos:
             from repro.serving.chaos import ChaosEngine, ChaosPlan
@@ -132,12 +157,18 @@ def main(argv=None):
     else:
         eng = Engine(cfg, params, batch_slots=args.slots,
                      max_len=args.max_len, policy=args.policy,
-                     seed=args.seed, paged=paged, metrics=metrics)
+                     seed=args.seed, paged=paged, metrics=metrics,
+                     prefix=prefix)
     rng = np.random.default_rng(args.seed)
+    common = rng.integers(0, cfg.vocab, max(args.shared_prefix, 0)
+                          ).astype(np.int32)
     t0 = time.perf_counter()
     for i in range(args.requests):
         prompt = rng.integers(0, cfg.vocab,
                               args.prompt_len).astype(np.int32)
+        if len(common):
+            prompt = np.concatenate([common, prompt[len(common):]]) \
+                if args.prompt_len > len(common) else common.copy()
         enc = None
         if cfg.is_encdec:
             from repro.models import frontends
@@ -163,6 +194,13 @@ def main(argv=None):
     elif not args.legacy:
         rep.line(f"  sched: {dict(eng.sched.stats)}  "
                  f"report: {eng.cache_report()}")
+    if prefix is not None and not args.legacy:
+        v = metrics.value_sum
+        rep.line(f"  prefix: hits={int(v('prefix_hits_total'))} "
+                 f"hit_tokens={int(v('prefix_hit_tokens_total'))} "
+                 f"cow_forks={int(v('prefix_cow_forks_total'))} "
+                 f"evictions={int(v('prefix_evictions_total'))} "
+                 f"cache_bytes={int(v('prefix_cache_bytes'))}")
     for r in done[:3]:
         ttft = (f"{r.t_first - r.t_submit:.3f}s" if r.t_first
                 else f"n/a ({r.finish_reason})")   # expired/shed: no token

@@ -5,10 +5,15 @@ with ``time.perf_counter()`` (monotonic — wall-clock ``time.time()``
 steps corrupt TTFT/TPOT, which is why the engines stamp perf_counter
 everywhere). The canonical lifecycle is
 
-    queued -> admitted -> prefill -> first_token -> decode -> done
+    queued -> admitted [-> prefix_hit] -> prefill [-> chunked_prefill...]
+           -> first_token -> decode -> done
 
 with ``preempted`` / ``restored`` / ``migrated`` free to interleave
-(possibly repeatedly) between ``admitted`` and ``done``. Derived
+(possibly repeatedly) between ``admitted`` and ``done``. ``prefix_hit``
+marks a fresh admission that attached cached prefix pages (stamped once,
+right after ``admitted``); ``chunked_prefill`` marks every prefill
+continuation chunk under a chunk policy (repeatable, but its FIRST
+occurrence still sits between ``prefill`` and ``first_token``). Derived
 latencies:
 
     queue_time = first admitted - queued       (admission wait)
@@ -26,8 +31,12 @@ import time
 from dataclasses import dataclass, field
 from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
-# lifecycle order used by monotonicity checks (repeatable events excluded)
-LIFECYCLE = ("queued", "admitted", "prefill", "first_token", "decode", "done")
+# lifecycle order used by monotonicity checks. ``prefix_hit`` and
+# ``chunked_prefill`` are optional milestones (prefix-sharing subsystem);
+# ``chunked_prefill`` repeats per continuation chunk, but like ``decode``
+# its first occurrence is still pinned in canonical order.
+LIFECYCLE = ("queued", "admitted", "prefix_hit", "prefill",
+             "chunked_prefill", "first_token", "decode", "done")
 
 
 @dataclass

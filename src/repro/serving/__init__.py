@@ -8,7 +8,10 @@ bytes-per-token comparison across cache families (full KV vs MLA-latent
 vs the paper's SRF state vs SSD), the mesh-mode pool layout /
 router policy / snapshot-overlap notes, and the fault-tolerance story
 (``serving/ft.py``: watchdog + failover; ``serving/chaos.py`` is the
-TEST-ONLY fault injector and is deliberately not exported here).
+TEST-ONLY fault injector and is deliberately not exported here), plus
+the prefix-sharing subsystem (``serving/prefix/``: radix cache,
+copy-on-write paged KV, chunked prefill —
+``Engine(..., prefix=PrefixConfig())`` turns it on).
 ``serving.legacy`` keeps the old per-slot engine as the benchmark
 baseline (deprecated; its import warns).
 """
@@ -17,5 +20,6 @@ from .engine import Engine, Request                     # noqa: F401
 from .ft import FTConfig, ReplicaWatchdog               # noqa: F401
 from .paged_cache import (PagedConfig, PoolPlan, family_for,  # noqa: F401
                           init_pools, plan_for)
+from .prefix import ChunkConfig, PrefixCache, PrefixConfig  # noqa: F401
 from .scheduler import SchedConfig, Scheduler           # noqa: F401
 from .mesh import Router, RouterConfig                  # noqa: F401

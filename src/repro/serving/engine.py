@@ -24,10 +24,11 @@ reserved null page / null slot.
 """
 from __future__ import annotations
 
+import hashlib
 import itertools
 import time
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -39,6 +40,7 @@ from repro.obs import quality as obs_quality
 from repro.obs import trace as obs_trace
 
 from . import paged_cache
+from .prefix import ChunkPolicy, PrefixCache, PrefixConfig, cow
 from .sampler import sample as _sample
 from .scheduler import SchedConfig, Scheduler, Sequence
 
@@ -88,6 +90,16 @@ def _default_sched(cfg, batch_slots: int, max_len: int, plan,
                        policy=policy)
 
 
+def _enc_namespace(enc_emb) -> int:
+    """Prefix-cache namespace for an enc-dec request: a content hash of
+    the encoder features (identical features -> identical memory rows ->
+    identical decoder KV, so sharing is sound; different features must
+    partition the trie)."""
+    h = hashlib.blake2b(np.ascontiguousarray(enc_emb).tobytes(),
+                        digest_size=8)
+    return int.from_bytes(h.digest(), "big")
+
+
 # distinct label value per engine instance: replicas sharing one registry
 # must not share counter children (``router.describe`` reads per-engine)
 _ENGINE_IDS = itertools.count()
@@ -126,7 +138,8 @@ class Engine:
                  policy: str = "fcfs", seed: int = 0, mesh=None,
                  paged: Optional[paged_cache.PagedConfig] = None,
                  metrics: Optional[obs_metrics.MetricsRegistry] = None,
-                 quality_every: int = 64):
+                 quality_every: int = 64,
+                 prefix: Optional[PrefixConfig] = None):
         self.cfg = cfg
         self.plan = paged_cache.plan_for(cfg)
         self.mesh = mesh
@@ -160,6 +173,21 @@ class Engine:
         # the chaos harness simulates stalls by swapping this clock
         self.clock = time.perf_counter
         self._pending_snaps: List[paged_cache.PendingSnapshot] = []
+        # (src, dst) tail-page copies owed to the prefix cache, flushed
+        # as one batched device copy at the end of the prefill step so
+        # donors keep exclusive tail ownership (no mid-decode forks)
+        self._cache_copies: List[Tuple[int, int]] = []
+        # prefix sharing (serving/prefix): pure-constant-state plans have
+        # no pages to share, so the cache is paged-domain only
+        self.prefix: Optional[PrefixCache] = None
+        self._chunk: Optional[ChunkPolicy] = None
+        if prefix is not None and prefix.enabled and self.plan.has_paged:
+            self.prefix = PrefixCache(
+                self.sched.alloc, self.sched_cfg.page_size,
+                paged_cache.page_bytes(self.pools), prefix,
+                metrics=self.metrics, labels={"engine": self.engine_id})
+            self.sched.attach_prefix(self.prefix)
+            self._chunk = ChunkPolicy(prefix.chunk)
         self._init_metrics()
         self._quality_every = (quality_every
                                if getattr(cfg, "attn_impl", None) == "srf"
@@ -184,12 +212,18 @@ class Engine:
         self._c_requests = c("engine_requests_total", "requests finished")
         self._c_prefill_steps = c("engine_prefill_steps_total",
                                   "batched prefill-chunk steps")
+        self._c_prefill_tokens = c("engine_prefill_tokens_total",
+                                   "prompt tokens actually prefilled "
+                                   "(prefix-cache hits skip theirs)")
         self._c_decode_steps = c("engine_decode_steps_total",
                                  "batched decode steps")
         self._c_preemptions = c("engine_preemptions_total",
                                 "copy-on-preempt evictions")
         self._c_expired = c("engine_expired_total",
                             "waiting requests expired past deadline")
+        self._c_cow_forks = c("prefix_cow_forks_total",
+                              "copy-on-write page forks applied (admission "
+                              "boundary + decode divergence)")
         self._h_step = h("engine_step_seconds", "wall time of one engine "
                          "step (the replica-health watchdog reads this)")
         self._h_ttft = h("request_ttft_seconds", "time to first token")
@@ -254,7 +288,21 @@ class Engine:
             req.trace = obs_trace.Trace(uid=req.uid)
         req.trace.stamp("queued", now)
         self.metrics.event("queued", uid=req.uid, engine=self.engine_id)
-        self.sched.submit(req)
+        seq = self.sched.submit(req)
+        if self.prefix is not None and req.enc_emb is not None:
+            # decoder KV depends on the encoder memory: token-equal
+            # prompts under different encoder inputs must never share
+            seq.ns = _enc_namespace(req.enc_emb)
+
+    def prefix_peek(self, req: Request) -> int:
+        """Tokens of ``req``'s prompt this engine could serve from its
+        prefix cache right now — non-pinning, non-LRU-touching (the
+        router's affinity probe)."""
+        if self.prefix is None:
+            return 0
+        ns = _enc_namespace(req.enc_emb) if req.enc_emb is not None else 0
+        return self.prefix.peek(ns, req.prompt,
+                                want_state=bool(self.plan.slot_families))
 
     def run(self, on_step=None) -> List[Request]:
         """Drain all submitted requests; returns the completed ones.
@@ -310,10 +358,18 @@ class Engine:
                     seq.req.trace.stamp("restored", now)
                 self.metrics.event("restored", uid=seq.req.uid,
                                    engine=self.engine_id)
-            elif seq.slot is not None:
-                # constant-state slots are accumulators: a reused slot
-                # must start from zero, not the previous request's state
-                fresh.append(seq)
+            else:
+                if seq.hit_tokens > 0:
+                    if seq.req.trace is not None:
+                        seq.req.trace.stamp("prefix_hit", now)
+                    self.metrics.event("prefix_hit", uid=seq.req.uid,
+                                       engine=self.engine_id,
+                                       tokens=seq.hit_tokens)
+                if seq.slot is not None:
+                    # constant-state slots are accumulators: a reused slot
+                    # must start from zero, not the previous request's
+                    # state
+                    fresh.append(seq)
         if fresh:
             # the enc-dec memory rows are fully overwritten by the encoder
             # below, so their zeroing is skipped (one whole-pool write
@@ -323,7 +379,27 @@ class Engine:
                 zero_memory=self._encode is None)
             if self._encode is not None:
                 self._write_memories(fresh)
+        self._apply_forks(admitted)
+        for seq in admitted:
+            if seq.state_payload is not None:
+                # donor's constant-state snapshot at the matched token
+                # count: restoring it is what makes the shared KV pages
+                # resumable for slot-bearing plans
+                self.pools = paged_cache.restore_page_rows(
+                    self.pools, [], self._slot_ids(seq), seq.state_payload)
+                seq.state_payload = None
         work = self.sched.prefill_work()
+        sc = self.sched_cfg
+        if work and self._chunk is not None \
+                and self.sched.decode_ready() \
+                and self._chunk.spans_steps(work, sc.prefill_chunk,
+                                            sc.prefill_batch) \
+                and self._chunk.decode_turn():
+            # chunked-prefill interleave: yield this step to decode so a
+            # long cold prompt cannot starve running requests' TPOT
+            if self._decode_step(self.sched.decode_ready()):
+                return True
+            work = self.sched.prefill_work()    # decode may have evicted
         if work:
             self._prefill_step(work)
             return True
@@ -331,6 +407,25 @@ class Engine:
         if ready:
             return self._decode_step(ready) or bool(expired)
         return bool(admitted) or bool(expired)
+
+    def _apply_forks(self, seqs: List[Sequence]) -> None:
+        """Apply pending COW forks as ONE batched gather-then-scatter
+        copy (``copy_page_rows`` reads every source from the pre-copy
+        pools, so a page freed and recycled as another fork's destination
+        in the same round can never clobber a source). Admission forks
+        pin their source in the cache until the copy is issued — released
+        here."""
+        forks = [s.fork for s in seqs if s.fork is not None]
+        if not forks:
+            return
+        self.pools = paged_cache.copy_page_rows(
+            self.pools, [f.src for f in forks], [f.dst for f in forks])
+        self._c_cow_forks.inc(len(forks))
+        for s in seqs:
+            if s.fork is not None:
+                if s.fork.pinned_src:
+                    self.prefix.release_fork(s.fork.src)
+                s.fork = None
 
     def _expire(self, seq: Sequence) -> None:
         """Terminal ``timeout``: the request went past its deadline while
@@ -416,11 +511,29 @@ class Engine:
         slots = np.zeros((b,), np.int32)
         last_row = np.zeros((b,), np.int32)
         finishing: List[Optional[Sequence]] = [None] * b
-        for i, seq in enumerate(work):
+        if self._chunk is not None:
+            planned = self._chunk.plan(work, c, b)
+        else:
+            planned = [(s, min(s.prompt_len - s.prefill_pos, c))
+                       for s in work]
+        self._c_prefill_tokens.inc(sum(t for _, t in planned))
+        for i, (seq, take) in enumerate(planned):
             start = seq.prefill_pos
-            if start == 0 and seq.req.trace is not None:
-                seq.req.trace.stamp("prefill")
-            chunk = np.asarray(seq.req.prompt[start:start + c], np.int32)
+            tr = seq.req.trace
+            if tr is not None:
+                # first chunk stamps "prefill" whether it starts at 0 or
+                # at a prefix-cache match boundary; continuations under a
+                # chunk policy stamp "chunked_prefill"
+                if tr.count("prefill") == 0:
+                    tr.stamp("prefill")
+                elif self._chunk is not None:
+                    tr.stamp("chunked_prefill")
+            if self.prefix is not None:
+                # host invariant: prefill writes only land in pages this
+                # request exclusively owns (shared prefixes are read-only)
+                cow.assert_writable(self.sched.alloc, seq.table.pages,
+                                    start, take, sc.page_size)
+            chunk = np.asarray(seq.req.prompt[start:start + take], np.int32)
             n = len(chunk)
             tokens[i, :n] = chunk
             # true absolute positions (rope); the invalid tail rows are
@@ -443,6 +556,10 @@ class Engine:
         for i, seq in enumerate(finishing):
             if seq is None:
                 continue
+            if self.prefix is not None:
+                # cache the fully prefilled prompt BEFORE any finish path
+                # frees its pages — the cache's references keep them alive
+                self._prefix_insert(seq)
             tok = int(toks[i])
             seq.req.out_tokens.append(tok)
             seq.req.t_first = now
@@ -456,7 +573,62 @@ class Engine:
             if tok == seq.req.eos_id or \
                     len(seq.req.out_tokens) >= seq.req.max_new:
                 self._finish(seq, now)
+        self._flush_cache_copies()
         self._c_prefill_steps.inc()
+
+    def _prefix_insert(self, seq: Sequence) -> None:
+        """Donate a fully prefilled prompt to the prefix cache. Slot-
+        bearing plans attach the donor's constant-state snapshot (taken
+        async NOW, before any decode step mutates the slot) so a later
+        hit can resume the SSM exactly at the prompt boundary.
+
+        An unaligned prompt's tail page would become shared the moment
+        it is cached — and the donor's very next decode write would have
+        to COW-fork it, a whole-pool copy landing in a decode token gap
+        (measurably inflating TPOT p95 at high hit rates). So the CACHE
+        takes a private copy of the tail page instead: the copy batches
+        into this prefill-completion step (which already pauses decode)
+        and the donor keeps exclusive ownership of its own tail. Under
+        pool exhaustion the copy page may be unavailable; then the tail
+        is shared as-is and the scheduler's decode-fork site covers the
+        donor's next write."""
+        payload, ptoks = None, 0
+        if self.plan.slot_families and seq.slot is not None:
+            payload = paged_cache.snapshot_page_rows_async(
+                self.pools, [], [seq.slot])
+            self._pending_snaps.append(payload)
+            ptoks = seq.prompt_len
+        pages = list(seq.table.pages)
+        tail_src, cp = None, None
+        if seq.prompt_len % self.sched_cfg.page_size:
+            got = self.sched.alloc.alloc(1)
+            if got is not None:
+                tail_src, cp = pages[-1], got[0]
+                pages[-1] = cp
+        newly = self.prefix.insert(seq.ns, seq.req.prompt, pages, payload,
+                                   payload_tokens=ptoks)
+        if cp is not None:
+            if cp in newly:
+                # our alloc ref on cp is held until the flush so the
+                # page cannot be recycled into another copy's dst first
+                self._cache_copies.append((tail_src, cp))
+            else:                       # tail node existed: copy unused
+                self.sched.alloc.free([cp])
+                self.sched._sync_gauges()
+
+    def _flush_cache_copies(self) -> None:
+        """One batched device copy for every tail page the cache
+        adopted this step (see ``_prefix_insert``), then drop the
+        engine's transient allocation refs (the cache's remain)."""
+        if not self._cache_copies:
+            return
+        self.pools = paged_cache.copy_page_rows(
+            self.pools, [s for s, _ in self._cache_copies],
+            [d for _, d in self._cache_copies])
+        self._c_cow_forks.inc(len(self._cache_copies))
+        self.sched.alloc.free([d for _, d in self._cache_copies])
+        self._cache_copies.clear()
+        self.sched._sync_gauges()
 
     # -- completion ----------------------------------------------------------
 
@@ -493,6 +665,11 @@ class Engine:
     # -- decode -------------------------------------------------------------
 
     def _evict(self, victim: Sequence) -> None:
+        if victim.fork is not None:
+            # a decode fork planned earlier in this same grow loop: its
+            # table already points at the (not-yet-copied) destination, so
+            # the copy must land before the snapshot reads it
+            self._apply_forks([victim])
         snap = paged_cache.snapshot_page_rows_async(
             self.pools, victim.table.pages, self._slot_ids(victim))
         self._pending_snaps.append(snap)
@@ -518,6 +695,8 @@ class Engine:
                 batch.append(seq)
         if not batch:
             return False
+        self._apply_forks(batch)         # COW: diverging writes into
+        #                                  shared pages fork first
         b, m = sc.max_batch, sc.table_width
         tokens = np.zeros((b, 1), np.int32)
         pos = np.zeros((b, 1), np.int32)
@@ -525,6 +704,9 @@ class Engine:
         tables = np.zeros((b, m), np.int32)
         slots = np.zeros((b,), np.int32)
         for i, seq in enumerate(batch):
+            if self.prefix is not None:
+                cow.assert_writable(self.sched.alloc, seq.table.pages,
+                                    seq.table.length, 1, sc.page_size)
             tokens[i, 0] = seq.req.out_tokens[-1]
             pos[i, 0] = seq.table.length
             qv[i, 0] = True

@@ -170,11 +170,27 @@ class Router:
 
     # -- submission ----------------------------------------------------------
 
+    def _affinity_pages(self, eng: Engine, req: Request) -> int:
+        """Prefix-cache affinity bonus in headroom units: pages of the
+        prompt this replica could serve from its cache (0 when the
+        engine has no cache). A hit saves exactly that many page
+        allocations AND their prefill compute, so adding it to headroom
+        prices affinity in the same currency as free capacity."""
+        peek = getattr(eng, "prefix_peek", None)
+        if peek is None:
+            return 0
+        return peek(req) // max(eng.sched_cfg.page_size, 1)
+
     def submit(self, req: Request) -> int:
         """Route to the live replica with the most discounted headroom
         that can hold the request at all; returns the replica index (-1
-        when the request was shed in degraded state)."""
-        hr = {i: self._headroom(self.engines[i]) for i in self._live()}
+        when the request was shed in degraded state). Headroom is
+        credited with prefix-cache affinity — a replica already holding
+        the prompt's prefix admits it cheaper than its raw free pages
+        suggest."""
+        hr = {i: self._headroom(self.engines[i])
+              + self._affinity_pages(self.engines[i], req)
+              for i in self._live()}
         fitting = [i for i in sorted(hr, key=lambda i: -hr[i])
                    if self.engines[i].sched.fits(req)]
         if not fitting:
@@ -370,8 +386,13 @@ class Router:
                             f"({req.retries}/{req.max_retries})")
             return
         hwm = ft_lib.fold_emitted_prefix(req)
+        # affinity counts double for replays: the folded prompt carries
+        # every emitted token, so a survivor holding the original prefix
+        # skips most of the re-prefill the failure forced
         order = sorted(self._live(),
-                       key=lambda i: -self._headroom(self.engines[i]))
+                       key=lambda i: -(self._headroom(self.engines[i])
+                                       + self._affinity_pages(
+                                           self.engines[i], req)))
         for dst_i in order:
             eng = self.engines[dst_i]
             if not eng.sched.fits(req):

@@ -411,6 +411,49 @@ def restore_page_rows(pools: Dict, page_ids: List[int], slot_ids: List[int],
     return out
 
 
+def copy_page_rows(pools: Dict, src_ids: List[int],
+                   dst_ids: List[int]) -> Dict:
+    """COW fork: copy page rows ``src -> dst`` across every paged-domain
+    pool in ONE batched gather-then-scatter (``a.at[:, dst].set(a[:,
+    src])`` reads all sources from the pre-copy pools before any write
+    lands), so a fork destination that recycles a page freed in the same
+    scheduler round can never be read after being clobbered. Slot pools
+    and the enc-dec memory never fork (one constant-size slot per
+    request, never shared).
+
+    The id vectors are padded to power-of-two buckets (floor 16) with
+    null-page self-copies (page 0 -> page 0, reserved scratch): eager
+    jax compiles one kernel per SHAPE, so unpadded variable-length fork
+    batches would trigger a fresh whole-pool scatter compile for every
+    distinct batch size — mid-serve, landing in decode token gaps."""
+    if not src_ids:
+        return pools
+    cap = 16
+    while cap < len(src_ids):
+        cap *= 2
+    pad = [0] * (cap - len(src_ids))          # 0 = reserved null page
+    src = jnp.asarray(list(src_ids) + pad, jnp.int32)
+    dst = jnp.asarray(list(dst_ids) + pad, jnp.int32)
+    out = dict(pools)
+    out["paged"] = _map_segs(pools["paged"],
+                             lambda a: a.at[:, dst].set(a[:, src]))
+    return out
+
+
+def page_bytes(pools: Dict) -> int:
+    """Device bytes ONE paged-domain page occupies across all layers and
+    segments — the unit of the prefix cache's byte budget. Leaves are
+    shaped (L, num_pages, ...), so per-page bytes is nbytes / num_pages."""
+    total = 0
+    for seg in pools["paged"]:
+        if seg is None:
+            continue
+        for leaf in jax.tree.leaves(seg):
+            total += (int(np.prod(leaf.shape)) // leaf.shape[1]
+                      * leaf.dtype.itemsize)
+    return total
+
+
 def apply_moves(pools: Dict, moves: Dict[int, int]) -> Dict:
     """Apply a defrag plan {old: new} to every paged-domain pool (slots
     never fragment: one per request)."""

@@ -1,0 +1,22 @@
+"""Prefix-sharing subsystem for the paged serving engine.
+
+Production prompts are massively redundant (system prompts, few-shot
+templates, encoder memories) — the serving-side mirror of the paper's
+trick of recycling one stored random object across many embeddings.
+This package shares the stored KV pages of a matched prompt prefix
+across requests and pays only the delta:
+
+* ``trie``  — page-granularity radix trie keyed on token ids
+* ``cow``   — copy-on-write planning over the refcounted allocator
+* ``chunk`` — budgeted chunked prefill interleaved with decode
+* ``cache`` — the :class:`PrefixCache` facade + :class:`PrefixConfig`
+
+Wiring: ``Engine(..., prefix=PrefixConfig())`` builds the cache, the
+scheduler consults it at admission, and the router prefers replicas
+already holding the longest match. Greedy outputs are bit-identical to
+the cold-cache path (tested: ``tests/test_prefix_serving.py``).
+"""
+from .cache import PrefixCache, PrefixConfig          # noqa: F401
+from .chunk import ChunkConfig, ChunkPolicy           # noqa: F401
+from .cow import Fork, PrefixMatch                    # noqa: F401
+from .trie import RadixTrie, TrieMatch, TrieNode      # noqa: F401

@@ -31,6 +31,7 @@ from typing import Dict, List, Optional, Tuple
 from repro.obs import metrics as obs_metrics
 
 from .blocks import BlockAllocator, BlockTable
+from .prefix import cow
 
 
 @dataclass(frozen=True)
@@ -57,6 +58,12 @@ class Sequence:
     prefill_pos: int = 0              # prompt tokens already cached
     snapshot: Optional[object] = None  # host pages while preempted
     snapshot_pages: List[int] = field(default_factory=list)
+    # -- prefix sharing (serving/prefix) --
+    ns: int = 0                       # cache namespace (enc-dec: enc hash)
+    hit_tokens: int = 0               # prompt tokens served from the cache
+    shared_pages: List[int] = field(default_factory=list)
+    fork: Optional[cow.Fork] = None   # pending COW copy (engine applies)
+    state_payload: Optional[object] = None  # donor slot-state to restore
 
     @property
     def prompt_len(self) -> int:
@@ -84,7 +91,17 @@ class Scheduler:
         self.waiting: List[Sequence] = []
         self.running: List[Sequence] = []
         self._arrivals = 0
+        self.prefix = None                # PrefixCache (engine attaches)
         self._init_metrics(metrics, labels)
+
+    def attach_prefix(self, cache) -> None:
+        """Attach the engine's :class:`~repro.serving.prefix.PrefixCache`
+        (it shares ``self.alloc``): admission becomes prefix-aware and
+        allocator pressure can evict cache entries. The cache reports
+        back whenever it changes the pool so the scheduler's page gauges
+        stay truthful."""
+        self.prefix = cache
+        cache.on_pool_change = self._sync_gauges
 
     # -- metrics -------------------------------------------------------------
 
@@ -199,6 +216,27 @@ class Scheduler:
             return 0
         return max(1, -(-n_tokens // self.cfg.page_size))
 
+    def _alloc_pages(self, n: int) -> Optional[List[int]]:
+        """Allocate, evicting prefix-cache entries under pressure: the
+        cache is elastic capacity — LRU unpinned leaves are dropped until
+        the allocation fits or the cache runs dry."""
+        pages = self.alloc.alloc(n)
+        if pages is None and self.prefix is not None and \
+                self.prefix.evict_for(n - self.alloc.free_pages) > 0:
+            pages = self.alloc.alloc(n)
+        return pages
+
+    def _lookup_prefix(self, seq: Sequence) -> Optional[cow.PrefixMatch]:
+        """Prefix-cache lookup for a FRESH admission (a preemption
+        snapshot already has its exact pages; restoring shared content
+        into them would alias nothing anyway). Slot-bearing plans only
+        match at a donor's state point — the cache enforces that."""
+        if self.prefix is None or seq.snapshot is not None \
+                or not self.plan.has_paged:
+            return None
+        return self.prefix.lookup(seq.ns, seq.req.prompt,
+                                  want_state=bool(self.plan.slot_families))
+
     def admit(self) -> List[Sequence]:
         """Move waiting sequences into the running set while BOTH domains
         can supply them (pages for the prompt, one constant-state slot).
@@ -206,25 +244,54 @@ class Scheduler:
         back in for those carrying a preemption snapshot and zero the
         (possibly previously used) slots of fresh admits — srf/ssd states
         are accumulators, so a stale slot is live garbage, not masked-out
-        history like a stale KV row."""
+        history like a stale KV row.
+
+        With a prefix cache attached, a fresh admission is charged only
+        its UNSHARED pages: the matched prefix's full pages join the
+        request's table as read-only shared references, prefill resumes
+        at the match boundary, and an unaligned boundary page is
+        scheduled for a COW fork into the request's first fresh page
+        (the engine applies the device copy; see serving/prefix). A
+        failed admission releases the match's pins — next round re-looks
+        it up against a possibly changed cache."""
         admitted = []
         for seq in sorted(self.waiting, key=self._rank):
             if len(self.running) >= self.cfg.max_batch:
                 break
+            match = None
             if seq.snapshot is not None:
                 n = len(seq.snapshot_pages)
             else:
-                n = self._pages_for(max(seq.prompt_len, 1))
-            pages = self.alloc.alloc(n)
+                match = self._lookup_prefix(seq)
+                n = self._pages_for(max(seq.prompt_len, 1)) \
+                    - (len(match.pages) if match is not None else 0)
+            pages = self._alloc_pages(n)
             if pages is None:
+                if match is not None:
+                    self.prefix.release(match)
                 break                    # head-of-line blocks (no starvation)
             if self.slot_alloc is not None:
                 slot = self.slot_alloc.alloc(1)
                 if slot is None:
                     self.alloc.free(pages)
+                    if match is not None:
+                        self.prefix.release(match)
                     break                # slot domain exhausted: same rule
                 seq.slot = slot[0]
-            seq.table.pages = pages
+            if match is not None and match.tokens > 0:
+                # shared prefix pages lead the table; ownership of the
+                # pins transfers to the table (released uniformly later)
+                seq.table.pages = list(match.pages) + pages
+                seq.shared_pages = list(match.pages)
+                seq.prefill_pos = match.tokens
+                seq.table.length = match.tokens
+                seq.hit_tokens = match.tokens
+                seq.state_payload = match.payload
+                if match.fork_src is not None:
+                    seq.fork = cow.Fork(match.fork_src, pages[0],
+                                        pinned_src=True)
+            else:
+                seq.table.pages = pages
             self.waiting.remove(seq)
             self.running.append(seq)
             self._c_admitted.inc()
@@ -256,15 +323,36 @@ class Scheduler:
         need = seq.table.pages_needed(seq.table.length + 1,
                                       self.cfg.page_size)
         if need <= 0:
-            return True, None
-        if len(seq.table.pages) + need > self.cfg.table_width:
-            return False, None           # at capacity: request finishes soon
-        pages = self.alloc.alloc(need)
-        if pages is not None:
-            seq.table.pages.extend(pages)
-            self._g_free_pages.set(self.alloc.free_pages)
-            self._g_used_pages.set(self.alloc.used_pages)
-            return True, None
+            # the next token lands in an existing page — but if that page
+            # is SHARED (prefix-cache / sibling request), writing it would
+            # corrupt every other reader: COW-fork it first. The table
+            # swaps to the fresh page immediately and this request's
+            # reference on the source is dropped — safe because the
+            # device copy (engine-applied, batched gather-then-scatter
+            # reading pre-copy pools) happens before any write lands.
+            pos = seq.table.length
+            idx = cow.decode_fork_index(self.alloc, seq.table.pages, pos,
+                                        self.cfg.page_size)
+            if idx is None:
+                return True, None
+            pages = self._alloc_pages(1)
+            if pages is not None:
+                src = seq.table.pages[idx]
+                seq.fork = cow.Fork(src, pages[0], pinned_src=False)
+                seq.table.pages[idx] = pages[0]
+                self.alloc.free([src])
+                self._g_free_pages.set(self.alloc.free_pages)
+                self._g_used_pages.set(self.alloc.used_pages)
+                return True, None
+        else:
+            if len(seq.table.pages) + need > self.cfg.table_width:
+                return False, None       # at capacity: request finishes soon
+            pages = self._alloc_pages(need)
+            if pages is not None:
+                seq.table.pages.extend(pages)
+                self._g_free_pages.set(self.alloc.free_pages)
+                self._g_used_pages.set(self.alloc.used_pages)
+                return True, None
         for victim in self._victim_order():
             if victim is not seq:
                 return False, victim
@@ -275,6 +363,7 @@ class Scheduler:
     def _release(self, seq: Sequence) -> None:
         self.alloc.free(seq.table.pages)
         seq.table.pages = []
+        seq.shared_pages = []
         if seq.slot is not None:
             self.slot_alloc.free([seq.slot])
             seq.slot = None
@@ -364,6 +453,8 @@ class Scheduler:
         if moves:
             for seq in self.running:
                 seq.table.pages = [moves.get(p, p) for p in seq.table.pages]
+            if self.prefix is not None:
+                self.prefix.remap(moves)
             self._c_defrags.inc()
         return moves
 

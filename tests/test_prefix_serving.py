@@ -1,0 +1,477 @@
+"""Prefix-sharing subsystem: radix cache + copy-on-write paged KV +
+chunked prefill (``serving/prefix/``).
+
+Unit layers pin the refcounted allocator (share / decref / double-free),
+the page-granularity trie (nesting, divergence, pinned-LRU eviction,
+defrag remap), the COW planner, and the chunk policy. The engine matrix
+runs {kv, hybrid, enc-dec} x {hit, partial hit, miss,
+evict-under-pressure, COW divergence} and holds ONE contract across all
+cells: greedy outputs are bit-identical to the cold-cache engine —
+prefix reuse, forks, chunked prefill and cache eviction may change how
+tokens are computed, never which tokens come out. A chaos cell kills a
+replica mid-decode with shared prefixes live and requires the rescue to
+leak zero pages.
+
+Hybrid/ssd caveat pinned here: slot-bearing plans only hit at a donor's
+exact state point (KV pages without the matching SSM state are useless),
+so mid-prompt divergence is a MISS for hybrid while kv/enc-dec still
+reuse the common full pages.
+"""
+import numpy as np
+import pytest
+
+import jax
+
+from repro.configs import registry
+from repro.models import transformer as T
+from repro.obs import MetricsRegistry
+from repro.serving import (BlockAllocator, ChunkConfig, Engine, FTConfig,
+                           PrefixConfig, Request, Router, RouterConfig,
+                           SchedConfig)
+from repro.serving.chaos import ChaosEngine, ChaosPlan
+from repro.serving.prefix import (ChunkPolicy, PrefixCache, RadixTrie,
+                                  cow)
+
+ARCHS = {"kv": "qwen3-4b", "hybrid": "hymba-1.5b",
+         "encdec": "seamless-m4t-large-v2"}
+SCENARIOS = ["hit", "partial", "miss", "evict", "cow"]
+
+_setup_cache = {}
+
+
+def _setup(fam):
+    if fam not in _setup_cache:
+        cfg = registry.reduced(ARCHS[fam], n_layers=2)
+        params = T.init(jax.random.PRNGKey(0), cfg)
+        _setup_cache[fam] = (cfg, params)
+    return _setup_cache[fam]
+
+
+def _enc(cfg, rng):
+    if not cfg.is_encdec:
+        return None
+    from repro.models import frontends
+    return frontends.synthetic_audio_features(rng, cfg)
+
+
+def _drive(eng, reqs):
+    for r in reqs:
+        eng.submit(r)
+    done = eng.run()
+    for r in done:
+        if r.trace is not None:
+            assert r.trace.monotonic(), r.trace.events
+    return {r.uid: list(r.out_tokens) for r in done}
+
+
+def _assert_no_leaks(eng):
+    """After a drain the ONLY live references are the cache's; dropping
+    it must return the pool to exactly zero used pages."""
+    sched = eng.sched
+    if eng.prefix is not None:
+        assert sched.alloc.used_pages == eng.prefix.pages
+        assert sched.alloc.total_refs == eng.prefix.pages
+        eng.prefix.drop_all()
+    assert sched.alloc.used_pages == 0
+    assert sched.alloc.total_refs == 0
+    if sched.slot_alloc is not None:
+        assert sched.slot_alloc.used_pages == 0
+
+
+# ---------------------------------------------------------------------------
+# refcounted allocator (satellite: double-free regression)
+# ---------------------------------------------------------------------------
+
+def test_allocator_double_free_raises_not_relists():
+    """Regression: ``free`` used to silently re-list a page, so a buggy
+    caller could hand the same page to two requests. Now the second free
+    of a dead page must raise, and the free list must never contain a
+    live or duplicated id."""
+    a = BlockAllocator(num_pages=8, page_size=4)
+    p = a.alloc(2)
+    assert a.free(p) == sorted(p)
+    with pytest.raises(ValueError, match="double free"):
+        a.free(p)
+    assert a.free_pages == 7
+    with pytest.raises(ValueError, match="double free|foreign"):
+        a.free([99])
+
+
+def test_allocator_share_and_refcounted_free():
+    a = BlockAllocator(num_pages=8, page_size=4)
+    (pg,) = a.alloc(1)
+    a.share([pg])
+    assert a.refcount(pg) == 2 and a.is_shared(pg)
+    assert a.free([pg]) == []            # decref only: still referenced
+    assert a.used_pages == 1
+    assert not a.is_shared(pg)
+    assert a.free([pg]) == [pg]          # last ref: actually released
+    assert a.used_pages == 0
+    with pytest.raises(ValueError):
+        a.free([pg])
+    with pytest.raises(ValueError, match="unallocated"):
+        a.share([pg])
+
+
+def test_allocator_defrag_remaps_refcounts():
+    a = BlockAllocator(num_pages=16, page_size=4)
+    p1 = a.alloc(3)
+    p2 = a.alloc(2)
+    a.share(p2)
+    a.free(p1)
+    moves = a.defrag_plan()
+    live = [moves.get(p, p) for p in p2]
+    assert all(a.refcount(p) == 2 for p in live)
+    assert a.total_refs == 4
+
+
+# ---------------------------------------------------------------------------
+# radix trie
+# ---------------------------------------------------------------------------
+
+def test_trie_nesting_and_divergence():
+    t = RadixTrie(page_size=4)
+    new, node = t.insert(0, [1, 2, 3, 4, 5, 6], [10, 11])
+    assert new == [10, 11] and node.key == (5, 6)
+    # longer prompt nests: shared full page reused, fresh tail diverges
+    new2, _ = t.insert(0, [1, 2, 3, 4, 9, 9], [10, 12])
+    assert new2 == [12]
+    assert t.n_nodes == 3
+    m = t.walk(0, [1, 2, 3, 4, 5, 6, 7, 8])
+    assert m.tokens == 6 and m.pages == [10] and m.boundary_page == 11
+    # divergence INSIDE page one: sibling partial leaves, zero sharing
+    m = t.walk(0, [1, 2, 9, 9])
+    assert m.tokens == 2 and m.pages == [] and m.boundary_page == 10
+    # namespaces partition: same tokens, other ns, no match
+    assert t.walk(7, [1, 2, 3, 4]).tokens == 0
+
+
+def test_trie_insert_page_count_validated():
+    t = RadixTrie(page_size=4)
+    with pytest.raises(ValueError):
+        t.insert(0, [1, 2, 3, 4, 5], [10])
+    with pytest.raises(ValueError):
+        t.insert(0, [], [])
+
+
+def test_trie_remove_leaf_only_and_remap():
+    t = RadixTrie(page_size=2)
+    t.insert(0, [1, 2, 3], [5, 6])
+    (inner, leaf) = (t.walk(0, [1, 2, 3]).nodes)
+    with pytest.raises(ValueError):
+        t.remove(inner)
+    assert t.remove(leaf) == 6
+    assert t.n_nodes == 1
+    t.remap({5: 9})
+    assert t.walk(0, [1, 2]).pages == [9]
+
+
+def test_trie_lru_order_and_pinning():
+    alloc = BlockAllocator(num_pages=8, page_size=2)
+    cache = PrefixCache(alloc, page_size=2, page_bytes=16)
+    pa = alloc.alloc(1)
+    pb = alloc.alloc(1)
+    cache.insert(0, [1, 2], pa)
+    cache.insert(0, [3, 4], pb)
+    alloc.free(pa)                       # cache now sole owner of pa
+    alloc.free(pb)
+    m = cache.lookup(0, [3, 4, 5])       # pins pb (refcount 2)
+    assert m is not None and m.tokens == 2
+    cache.trie.walk(0, [1, 2])           # touch pa: pinned pb is now LRU
+    # pressure eviction takes the LRU UNPINNED leaf — pa, not pinned pb
+    assert cache.evict_for(1) == 1
+    assert cache.trie.walk(0, [3, 4]).tokens == 2
+    assert cache.trie.walk(0, [1, 2]).tokens == 0
+    cache.release(m)
+    _ = cache.evict_for(1)
+    assert alloc.used_pages == 0
+
+
+def test_cache_byte_budget_lru():
+    alloc = BlockAllocator(num_pages=16, page_size=2)
+    cache = PrefixCache(alloc, page_size=2, page_bytes=100,
+                        cfg=PrefixConfig(cache_bytes=250))
+    for i, toks in enumerate(([1, 2], [3, 4], [5, 6])):
+        pg = alloc.alloc(1)
+        cache.insert(7, toks, pg)
+        alloc.free(pg)
+    # 3 pages = 300 bytes > 250: the OLDEST insert was evicted
+    assert cache.pages == 2
+    assert cache.bytes <= 250
+    assert cache.trie.walk(7, [1, 2]).tokens == 0
+    assert cache.trie.walk(7, [5, 6]).tokens == 2
+
+
+# ---------------------------------------------------------------------------
+# COW planning
+# ---------------------------------------------------------------------------
+
+def test_cow_plan_match_and_decode_fork_index():
+    t = RadixTrie(page_size=4)
+    t.insert(0, list(range(10)), [3, 4, 5])
+    raw = t.walk(0, list(range(10)))
+    shared, fork = cow.plan_match(raw.nodes, 9, page_size=4)
+    assert shared == [3, 4] and fork == 5     # 9 = 2 full pages + 1
+    shared, fork = cow.plan_match(raw.nodes, 8, page_size=4)
+    assert shared == [3, 4] and fork is None  # aligned: no boundary
+    a = BlockAllocator(num_pages=8, page_size=4)
+    (pg,) = a.alloc(1)
+    assert cow.decode_fork_index(a, [pg], 2, 4) is None
+    a.share([pg])
+    assert cow.decode_fork_index(a, [pg], 2, 4) == 0
+    with pytest.raises(AssertionError):
+        cow.assert_writable(a, [pg], 0, 4, 4)
+    a.free([pg])
+    cow.assert_writable(a, [pg], 0, 4, 4)
+
+
+# ---------------------------------------------------------------------------
+# chunk policy
+# ---------------------------------------------------------------------------
+
+def test_chunk_policy_decode_cadence_and_budget():
+    pol = ChunkPolicy(ChunkConfig(chunk_tokens=6, decode_every=3))
+    turns = [pol.decode_turn() for _ in range(6)]
+    assert turns == [False, False, True, False, False, True]
+    assert ChunkPolicy(ChunkConfig(decode_every=0)).decode_turn() is False
+
+    class S:
+        def __init__(self, plen, pos):
+            self.prompt_len, self.prefill_pos = plen, pos
+    work = [S(20, 0), S(20, 16), S(8, 0)]
+    plan = ChunkPolicy(ChunkConfig(chunk_tokens=6)).plan(
+        work, per_row=8, max_rows=4)
+    # greedy in rank order: head row takes the whole budget
+    assert [(id(s), n) for s, n in plan] == [(id(work[0]), 6)]
+    plan = ChunkPolicy(ChunkConfig(chunk_tokens=10)).plan(
+        work, per_row=8, max_rows=4)
+    assert [n for _, n in plan] == [8, 2]
+    # zero budget still guarantees head progress
+    plan = ChunkPolicy(ChunkConfig(chunk_tokens=1)).plan(
+        work, per_row=8, max_rows=4)
+    assert [n for _, n in plan] == [1]
+
+
+# ---------------------------------------------------------------------------
+# engine matrix: {kv, hybrid, encdec} x scenarios, bit-identical greedy
+# ---------------------------------------------------------------------------
+
+def _scenario_waves(fam, cfg, scenario):
+    """Two request waves (warm-up donors, then the measured wave) built
+    so each scenario exercises its path for this family. Prompts are
+    copied per engine run."""
+    rng = np.random.default_rng(0)
+    shared = rng.integers(1, cfg.vocab, 36).astype(np.int32)
+    enc = _enc(cfg, rng)
+    tails = [rng.integers(1, cfg.vocab, 3 + i).astype(np.int32)
+             for i in range(5)]
+    donors = [Request(uid=100, prompt=shared.copy(), max_new=2,
+                      enc_emb=enc)]
+    if scenario in ("hit", "evict", "cow"):
+        wave = [Request(uid=i, prompt=np.concatenate([shared, t]),
+                        max_new=6, enc_emb=enc)
+                for i, t in enumerate(tails)]
+    elif scenario == "partial":
+        # diverge INSIDE the donor's second page: kv/enc-dec reuse the
+        # first full page, hybrid misses (no state at the divergence)
+        wave = [Request(uid=i,
+                        prompt=np.concatenate([shared[:20], t, t]),
+                        max_new=6, enc_emb=enc)
+                for i, t in enumerate(tails)]
+    elif scenario == "miss":
+        wave = [Request(uid=i,
+                        prompt=rng.integers(1, cfg.vocab,
+                                            20 + i).astype(np.int32),
+                        max_new=6, enc_emb=enc)
+                for i in range(5)]
+    return donors, wave
+
+
+def _fresh(reqs):
+    return [Request(uid=r.uid, prompt=r.prompt.copy(), max_new=r.max_new,
+                    enc_emb=r.enc_emb) for r in reqs]
+
+
+@pytest.mark.parametrize("scenario", SCENARIOS)
+@pytest.mark.parametrize("fam", sorted(ARCHS))
+def test_prefix_matrix_bit_identical_greedy(fam, scenario):
+    cfg, params = _setup(fam)
+    donors, wave = _scenario_waves(fam, cfg, scenario)
+    kw = dict(batch_slots=4, max_len=64)
+    if scenario == "evict":
+        # tight paged pool: wave admissions must reclaim cached pages
+        kw = dict(batch_slots=4, max_len=64,
+                  sched=SchedConfig(max_batch=2, prefill_batch=2,
+                                    prefill_chunk=16, page_size=8,
+                                    num_pages=12, table_width=7))
+
+    cold = Engine(cfg, params, **kw)
+    _drive(cold, _fresh(donors))
+    want = _drive(cold, _fresh(wave))
+    _assert_no_leaks(cold)
+
+    warm = Engine(cfg, params, prefix=PrefixConfig(
+        chunk=ChunkConfig(chunk_tokens=16)), **kw)
+    _drive(warm, _fresh(donors))
+    got = _drive(warm, _fresh(wave))
+    v = warm.metrics.value_sum
+
+    assert got == want, f"{fam}/{scenario}: warm cache changed tokens"
+    hit_toks = v("prefix_hit_tokens_total")
+    if scenario in ("hit", "cow"):
+        assert hit_toks > 0
+    elif scenario == "partial":
+        if fam == "hybrid":
+            # slot-bearing plans need a donor state point: divergence
+            # inside the prompt means NO usable state -> full prefill
+            assert hit_toks == 0
+        else:
+            # kv/enc-dec reuse the common full pages (16 of 20 shared
+            # tokens sit in page one; the rest re-prefills)
+            assert hit_toks > 0
+    elif scenario == "miss":
+        assert hit_toks == 0
+        assert v("prefix_lookups_total") > 0
+    elif scenario == "evict":
+        assert v("prefix_evictions_total") > 0
+    if scenario == "cow":
+        # boundary forks at admission (36 % 16 != 0) and/or the donor
+        # forking its own tail page at first decode after donating
+        assert v("prefix_cow_forks_total") > 0
+    _assert_no_leaks(warm)
+
+
+@pytest.mark.parametrize("fam", sorted(ARCHS))
+def test_prefix_trace_milestones(fam):
+    """A hit request's trace carries ``prefix_hit`` between admission and
+    prefill; a long chunked cold prompt carries ``chunked_prefill``
+    continuations. Both must keep the lifecycle monotonic."""
+    cfg, params = _setup(fam)
+    donors, wave = _scenario_waves(fam, cfg, "hit")
+    eng = Engine(cfg, params, batch_slots=4, max_len=64,
+                 prefix=PrefixConfig(chunk=ChunkConfig(chunk_tokens=8)))
+    _drive(eng, _fresh(donors))
+    reqs = _fresh(wave)
+    _drive(eng, reqs)
+    hits = [r for r in reqs if r.trace.count("prefix_hit")]
+    assert hits, "no request hit the warmed cache"
+    for r in hits:
+        assert r.trace.count("prefix_hit") == 1
+        assert r.trace.monotonic()
+    # a 39+-token prompt at chunk_tokens=8 needs >= 2 chunks even after
+    # the prefix hit; cold donors need >= 4
+    chunked = [r for r in reqs if r.trace.count("chunked_prefill")]
+    assert chunked
+    _assert_no_leaks(eng)
+
+
+def test_prefix_cache_disabled_for_pure_constant_state():
+    """srf/ssd plans have no paged domain — nothing to share; the engine
+    must serve with the cache off rather than build a useless trie."""
+    cfg = registry.reduced("mamba2-2.7b", n_layers=2)
+    params = T.init(jax.random.PRNGKey(0), cfg)
+    eng = Engine(cfg, params, batch_slots=2, max_len=64,
+                 prefix=PrefixConfig())
+    assert eng.prefix is None
+    rng = np.random.default_rng(0)
+    reqs = [Request(uid=i, prompt=rng.integers(1, cfg.vocab, 8)
+                    .astype(np.int32), max_new=4) for i in range(3)]
+    out = _drive(eng, reqs)
+    assert all(len(t) == 4 for t in out.values())
+
+
+def test_exact_duplicate_prompt_hits_and_bit_matches():
+    """plen-1 cap: an exact duplicate still shares every full page below
+    the cap but MUST re-prefill at least the last token to produce its
+    own first-token logits."""
+    cfg, params = _setup("kv")
+    rng = np.random.default_rng(3)
+    prompt = rng.integers(1, cfg.vocab, 33).astype(np.int32)
+
+    def run(prefix):
+        eng = Engine(cfg, params, batch_slots=2, max_len=64, prefix=prefix)
+        a = _drive(eng, [Request(uid=0, prompt=prompt.copy(), max_new=6)])
+        b = _drive(eng, [Request(uid=1, prompt=prompt.copy(), max_new=6)])
+        if prefix is not None:
+            v = eng.metrics.value_sum
+            assert v("prefix_hit_tokens_total") == 32   # 33 - 1
+            _assert_no_leaks(eng)
+        return a[0], b[1]
+
+    assert run(None) == run(PrefixConfig())
+
+
+# ---------------------------------------------------------------------------
+# chaos: replica death with shared prefixes live
+# ---------------------------------------------------------------------------
+
+def test_chaos_kill_replica_with_shared_prefixes_leaks_nothing():
+    """PR 7 failover x prefix sharing: kill a replica mid-decode while
+    its cache donates pages to running requests. Rescued requests replay
+    on the survivor (re-attaching through ITS cache at admission) with
+    bit-identical greedy outputs, and neither replica leaks a page."""
+    cfg, params = _setup("kv")
+    rng = np.random.default_rng(0)
+    shared = rng.integers(1, cfg.vocab, 36).astype(np.int32)
+    blue = [np.concatenate([shared,
+                            rng.integers(1, cfg.vocab, 3 + i)
+                            .astype(np.int32)]) for i in range(8)]
+
+    def mk_reqs():
+        return [Request(uid=i, prompt=p.copy(), max_new=8)
+                for i, p in enumerate(blue)]
+
+    # undisturbed single-engine reference (cold cache)
+    ref = Engine(cfg, params, batch_slots=2, max_len=64)
+    want = _drive(ref, mk_reqs())
+
+    reg = MetricsRegistry()
+    engines = [Engine(cfg, params, batch_slots=2, max_len=64, seed=i,
+                      metrics=reg, prefix=PrefixConfig())
+               for i in range(2)]
+    inner = list(engines)
+    engines[1] = ChaosEngine(engines[1], ChaosPlan("raise", at_step=6))
+    router = Router(engines, cfg=RouterConfig(migrate=False), metrics=reg,
+                    ft=FTConfig(grace_steps=2, stuck_rounds=3))
+    reqs = mk_reqs()
+    for r in reqs:
+        router.submit(r)
+    router.run()
+
+    assert all(r.done for r in reqs)
+    assert all(r.finish_reason in ("eos", "length") for r in reqs)
+    assert {r.uid: list(r.out_tokens) for r in reqs} == want
+    assert reg.value_sum("router_quarantined_total") == 1
+    assert reg.value_sum("prefix_hit_tokens_total") > 0
+    # zero leaked pages on BOTH replicas: after the drain every live
+    # reference is cache-held; dropping the caches empties the pools
+    for eng in inner:
+        _assert_no_leaks(eng)
+
+
+def test_router_prefers_prefix_affinity():
+    """Equal-headroom replicas: the one whose cache already holds the
+    prompt's prefix must win placement."""
+    cfg, params = _setup("kv")
+    rng = np.random.default_rng(1)
+    shared = rng.integers(1, cfg.vocab, 36).astype(np.int32)
+    engines = [Engine(cfg, params, batch_slots=2, max_len=64, seed=i,
+                      prefix=PrefixConfig()) for i in range(2)]
+    router = Router(engines, cfg=RouterConfig(migrate=False))
+    # warm both caches with equal page counts (equal raw headroom) but
+    # only replica 1 holds THIS prompt's prefix
+    other = rng.integers(1, cfg.vocab, 36).astype(np.int32)
+    engines[0].submit(Request(uid=49, prompt=other, max_new=2))
+    engines[0].run()
+    engines[1].submit(Request(uid=50, prompt=shared.copy(), max_new=2))
+    engines[1].run()
+    assert engines[1].prefix_peek(
+        Request(uid=51, prompt=shared.copy(), max_new=2)) > 0
+    tail = rng.integers(1, cfg.vocab, 4).astype(np.int32)
+    dest = router.submit(Request(uid=0,
+                                 prompt=np.concatenate([shared, tail]),
+                                 max_new=4))
+    assert dest == 1
+    router.run()
+    for eng in engines:
+        _assert_no_leaks(eng)

@@ -3,7 +3,12 @@ evict / finish sequences over every pool-plan shape must never leak
 capacity —
 
   * free + used page count is conserved in BOTH index domains,
-  * no page (and no constant-state slot) ever serves two requests,
+  * without a prefix cache, no page (and never a constant-state slot)
+    serves two requests; WITH one, sharing is refcounted: every live
+    allocator reference is exactly one block-table entry or one trie
+    node (conservation weighted by refcount), no page is freed while
+    any reference remains, and a COW fork never leaves a request about
+    to write a page it does not exclusively own,
   * waiting sequences hold no device capacity at all,
   * the null page / null slot (id 0) is never handed out,
   * request conservation in the metrics registry: submitted + adopted ==
@@ -15,7 +20,10 @@ Two layers: a deterministic seeded fuzz that ALWAYS runs, and a
 hypothesis-driven version (optional dependency, like in
 ``test_structured.py``) that explores adversarial op orderings when the
 library is installed. Both share the same op interpreter and invariant
-checker.
+checker; a ``prefix=True`` mode attaches a :class:`PrefixCache` (tight
+byte budget) and emulates the engine's side of the contract — applying
+admission forks, inserting completed prompts, dropping the cache at
+drain.
 
 The companion engine-level regression for the PR 4 zeroing bug
 (constant-state slots must start from zero on reuse) lives in
@@ -23,12 +31,15 @@ The companion engine-level regression for the PR 4 zeroing bug
 the ENGINE's device-side duty, the scheduler only hands out ids.
 """
 import random
+from collections import Counter
 
 import numpy as np
 import pytest
 
 from repro.configs import registry
-from repro.serving import SchedConfig, Scheduler, plan_for
+from repro.serving import (PrefixConfig, SchedConfig, Scheduler,
+                           plan_for)
+from repro.serving.prefix import PrefixCache, cow
 
 try:
     from hypothesis import given, settings, strategies as st
@@ -51,9 +62,12 @@ _CAP = _SCHED.table_width * _SCHED.page_size
 
 
 class _Req:
-    def __init__(self, uid, plen, max_new):
+    def __init__(self, uid, plen, max_new, fill=0):
         self.uid = uid
-        self.prompt = np.zeros((plen,), np.int32)
+        # a tiny token alphabet: same-fill prompts of different lengths
+        # nest (deep trie paths), different fills diverge in page one
+        # (sibling partial leaves)
+        self.prompt = np.full((plen,), fill, np.int32)
         self.max_new = max_new
         self.priority = 0
 
@@ -62,9 +76,23 @@ def _check_invariants(sched: Scheduler):
     a = sched.alloc
     assert a.free_pages + a.used_pages == a.num_pages - 1
     owned = [p for s in sched.running for p in s.table.pages]
-    assert len(owned) == len(set(owned)), "page serves two requests"
-    assert set(owned) == a._allocated, "allocator/table drift"
     assert 0 not in owned, "null page handed out"
+    if sched.prefix is None:
+        assert len(owned) == len(set(owned)), "page serves two requests"
+        assert set(owned) == a._allocated, "allocator/table drift"
+    else:
+        cached = sched.prefix.page_ids()
+        assert 0 not in cached, "null page cached"
+        assert set(owned) | set(cached) == a._allocated, \
+            "allocator/table/cache drift"
+        # refcount-weighted conservation: every live reference is
+        # exactly one table entry or one trie node — nothing freed
+        # while referenced, no reference unaccounted for
+        want = Counter(owned) + Counter(cached)
+        for pg, n in want.items():
+            assert a.refcount(pg) == n, \
+                f"page {pg}: {a.refcount(pg)} refs vs {n} owners"
+        assert a.total_refs == len(owned) + len(cached)
     if sched.slot_alloc is not None:
         sa = sched.slot_alloc
         assert sa.free_pages + sa.used_pages == sa.num_pages - 1
@@ -94,64 +122,120 @@ def _check_invariants(sched: Scheduler):
         assert v("sched_used_slots") == sched.slot_alloc.used_pages
 
 
-def _run_ops(plan, ops):
+def _engine_side(sched, admitted):
+    """Emulate the engine's host-side admission duties: apply pending
+    COW forks (drop the admission pin), consume the state payload."""
+    for s in admitted:
+        if s.snapshot is not None:
+            sched.restored(s)                          # engine swaps in
+            continue
+        if s.fork is not None:                         # engine copies page
+            if s.fork.pinned_src:
+                sched.prefix.release_fork(s.fork.src)
+            s.fork = None
+        s.state_payload = None
+
+
+def _maybe_insert(sched, seq, inserted):
+    """Engine contract: a fully prefilled prompt is donated to the cache
+    exactly once, BEFORE any finish path frees its pages."""
+    if sched.prefix is None or seq.req.uid in inserted \
+            or not sched.plan.has_paged:
+        return
+    inserted.add(seq.req.uid)
+    sched.prefix.insert(seq.ns, seq.req.prompt, list(seq.table.pages),
+                        payload="slot-state-bytes",
+                        payload_tokens=seq.prompt_len)
+
+
+def _run_ops(plan, ops, prefix=False):
     """Interpret (op, r) pairs against a fresh scheduler, checking the
     invariants after every op, then drain and require nothing leaked."""
     sched = Scheduler(_SCHED, plan)
+    if prefix:
+        # tight byte budget (6 of 12 usable pages) so budget eviction
+        # fires under fuzz, on top of allocator-pressure eviction
+        sched.attach_prefix(PrefixCache(
+            sched.alloc, _SCHED.page_size, page_bytes=64,
+            cfg=PrefixConfig(cache_bytes=64 * 6)))
+    inserted = set()
     uid = 0
     for op, r in ops:
         if op == 0:                                    # submit
             plen = r % 10 + 1
-            sched.submit(_Req(uid, plen, min(_CAP - plen, r % 6 + 1)))
+            sched.submit(_Req(uid, plen, min(_CAP - plen, r % 6 + 1),
+                              fill=r % 2))
             uid += 1
         elif op == 1:                                  # admit (+restore)
-            for s in sched.admit():
-                if s.snapshot is not None:
-                    sched.restored(s)                  # engine swaps in
+            _engine_side(sched, sched.admit())
         elif op == 2 and sched.running:                # prefill progress
             for s in sched.prefill_work():
                 n = min(s.prompt_len - s.prefill_pos, _SCHED.prefill_chunk)
+                if sched.prefix is not None:
+                    # engine guard: prefill writes land only in pages
+                    # this request exclusively owns
+                    cow.assert_writable(sched.alloc, s.table.pages,
+                                        s.prefill_pos, n,
+                                        _SCHED.page_size)
                 s.prefill_pos += n
                 s.table.length = s.prefill_pos
+                if s.prefill_done:
+                    _maybe_insert(sched, s, inserted)
         elif op == 3 and sched.running:                # decode growth
             seq = sched.running[r % len(sched.running)]
             if not seq.prefill_done:
                 continue
             ok, victim = sched.grow_for_decode(seq)
             if ok:
+                seq.fork = None                        # engine copies page
+                if sched.prefix is not None:
+                    # post-fork: the write target is exclusively owned
+                    cow.assert_writable(sched.alloc, seq.table.pages,
+                                        seq.table.length, 1,
+                                        _SCHED.page_size)
                 seq.table.length += 1
             elif victim is not None:                   # engine evicts
+                victim.fork = None
                 sched.evicted(victim, snapshot="host-bytes")
         elif op == 4 and sched.running:                # finish
+            # (cache insertion happened at prefill completion in op 2 —
+            # the engine's contract; by finish time the table may carry
+            # decode-grown pages beyond the prompt)
             sched.finished(sched.running[r % len(sched.running)])
         _check_invariants(sched)
     # drain: everything still queued can eventually run — blocked only
-    # by capacity, never by a leak
+    # by capacity, never by a leak (the prefix cache yields its unpinned
+    # pages under allocator pressure, so it must never starve admission)
     for _ in range(200):
         if not sched.waiting:
             break
-        for s in sched.admit():
-            if s.snapshot is not None:
-                sched.restored(s)
+        _engine_side(sched, sched.admit())
         for s in list(sched.running):
             sched.finished(s)
         _check_invariants(sched)
     assert not sched.waiting, "leaked capacity starved the queue"
     for s in list(sched.running):
         sched.finished(s)
+    if sched.prefix is not None:
+        # with no requests live, every remaining reference is the cache's
+        assert sched.alloc.used_pages == sched.prefix.pages
+        assert sched.alloc.total_refs == sched.prefix.pages
+        sched.prefix.drop_all()
     assert sched.alloc.used_pages == 0
     if sched.slot_alloc is not None:
         assert sched.slot_alloc.used_pages == 0
 
 
+@pytest.mark.parametrize("prefix", [False, True], ids=["cold", "prefix"])
 @pytest.mark.parametrize("plan_name", sorted(PLANS))
-def test_scheduler_never_leaks_capacity_seeded_fuzz(plan_name):
-    """Always-run layer: 60 deterministic random op sequences per plan."""
+def test_scheduler_never_leaks_capacity_seeded_fuzz(plan_name, prefix):
+    """Always-run layer: 60 deterministic random op sequences per plan,
+    with and without a prefix cache attached (refcounted sharing)."""
     rng = random.Random(0xC0FFEE ^ hash(plan_name) % (1 << 30))
     for _ in range(60):
         ops = [(rng.randint(0, 4), rng.randint(0, 1 << 16))
                for _ in range(rng.randint(0, 80))]
-        _run_ops(PLANS[plan_name], ops)
+        _run_ops(PLANS[plan_name], ops, prefix=prefix)
 
 
 if HAVE_HYPOTHESIS:
@@ -159,9 +243,11 @@ if HAVE_HYPOTHESIS:
     @given(plan_name=st.sampled_from(sorted(PLANS)),
            ops=st.lists(st.tuples(st.integers(0, 4),
                                   st.integers(0, 2 ** 16)),
-                        max_size=80))
-    def test_scheduler_never_leaks_capacity_hypothesis(plan_name, ops):
-        _run_ops(PLANS[plan_name], ops)
+                        max_size=80),
+           prefix=st.booleans())
+    def test_scheduler_never_leaks_capacity_hypothesis(plan_name, ops,
+                                                       prefix):
+        _run_ops(PLANS[plan_name], ops, prefix=prefix)
 
 
 def test_conservation_holds_across_migration():
