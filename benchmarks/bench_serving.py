@@ -153,10 +153,16 @@ def _bench_failover(concurrency: int = 16, seed: int = 0) -> Dict:
 
     Note the replicas step serially in this process (no real device
     parallelism), so the dip measures replay overhead, not the halved
-    fleet capacity a production deployment would also see."""
+    fleet capacity a production deployment would also see.
+
+    The killed run also records span timelines on both replicas and the
+    router, exports them as one merged Chrome-trace JSON
+    (``TRACE_failover.json``; load in Perfetto), and verifies the
+    quarantine -> rescue -> replay chain is present and uid-correlated
+    in the exported events."""
     from repro.configs import registry
     from repro.models import transformer as T
-    from repro.obs import MetricsRegistry
+    from repro.obs import MetricsRegistry, SpanRecorder, chrome_trace
     from repro.serving import Engine, FTConfig, Router
     from repro.serving.chaos import ChaosEngine, ChaosPlan
 
@@ -164,14 +170,17 @@ def _bench_failover(concurrency: int = 16, seed: int = 0) -> Dict:
     params = T.init(jax.random.PRNGKey(0), cfg)
     slots = max(2, min(concurrency, 16) // 2)   # per replica
 
-    def serve(kill: bool, n: int = concurrency) -> Dict:
+    def serve(kill: bool, n: int = concurrency, recorders=None) -> Dict:
         reg = MetricsRegistry()
+        spans = recorders or [None] * 3
         engines = [Engine(cfg, params, batch_slots=slots, max_len=64,
-                          seed=seed + i, metrics=reg) for i in range(2)]
+                          seed=seed + i, metrics=reg, spans=spans[i])
+                   for i in range(2)]
         if kill:
             engines[1] = ChaosEngine(engines[1],
                                      ChaosPlan("raise", at_step=6))
-        router = Router(engines, metrics=reg, ft=FTConfig())
+        router = Router(engines, metrics=reg, ft=FTConfig(),
+                        spans=spans[2])
         reqs = _requests(cfg, n, seed)
         wall, toks, _, _ = _drive(router, reqs)
         return {"reg": reg, "wall": wall, "toks": toks,
@@ -182,7 +191,14 @@ def _bench_failover(concurrency: int = 16, seed: int = 0) -> Dict:
     serve(kill=False, n=4)      # warm the jit caches: without this the
     clean = serve(kill=False)   # clean run eats compile time and the
                                 # "dip" comes out negative
-    killed = serve(kill=True)
+    recorders = [SpanRecorder(replica=i) for i in range(3)]
+    killed = serve(kill=True, recorders=recorders)
+    trace = chrome_trace(recorders)
+    trace_path = os.environ.get("REPRO_BENCH_TRACE_JSON",
+                                "TRACE_failover.json")
+    with open(trace_path, "w") as f:
+        json.dump(trace, f)
+        f.write("\n")
     evs = killed["reg"].events
     t_q = next((e["t"] for e in evs if e["event"] == "quarantined"), None)
     t_home = [e["t"] for e in evs
@@ -209,7 +225,34 @@ def _bench_failover(concurrency: int = 16, seed: int = 0) -> Dict:
         "replay_extra_steps": killed["steps"] - clean["steps"],
         "rescue_latency_s": rescue_s,
         "tokens_match_clean": bool(killed["out"] == clean["out"]),
+        "trace": _verify_failover_trace(trace, trace_path),
     }
+
+
+def _verify_failover_trace(trace: Dict, path: str) -> Dict:
+    """Check the exported chaos-kill Chrome trace actually tells the
+    failover story: a quarantine instant on the router timeline followed
+    by per-request rescue (waiting seq adopted) or replay (running seq
+    re-prefilled) instants, every one uid-tagged and timestamped at or
+    after the quarantine — i.e. the recovery of each request can be
+    followed through the merged timeline by its uid."""
+    evs = trace["traceEvents"]
+    inst = [e for e in evs if e.get("ph") == "i"]
+    t_q = min((e["ts"] for e in inst if e["name"] == "quarantine"),
+              default=None)
+    rescue = {e["args"]["uid"]: e["ts"] for e in inst
+              if e["name"] == "rescue"}
+    replay = {e["args"]["uid"]: e["ts"] for e in inst
+              if e["name"] == "replay"}
+    moved = {**rescue, **replay}
+    correlated = (t_q is not None and len(moved) > 0
+                  and all(u is not None for u in moved)
+                  and all(t >= t_q for t in moved.values()))
+    return {"path": path, "events": len(evs),
+            "timelines": len({e.get("pid") for e in evs}),
+            "quarantine": sum(e["name"] == "quarantine" for e in inst),
+            "rescue_uids": sorted(rescue), "replay_uids": sorted(replay),
+            "chain_uid_correlated": bool(correlated)}
 
 
 def _failover_rows(rec: Dict) -> List[str]:
@@ -225,6 +268,10 @@ def _failover_rows(rec: Dict) -> List[str]:
         f"latency_s={rec['rescue_latency_s']}"
         f"|extra_steps={rec['replay_extra_steps']}"
         f"|match={rec['tokens_match_clean']}|failed={kd['failed']}",
+        f"serving/failover/trace/c{c},0,"
+        f"events={rec['trace']['events']}"
+        f"|timelines={rec['trace']['timelines']}"
+        f"|chain_uid_correlated={rec['trace']['chain_uid_correlated']}",
     ]
 
 

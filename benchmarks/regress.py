@@ -1,0 +1,267 @@
+"""Perf-regression gate over the committed ``BENCH_*.json`` runs.
+
+Every benchmark suite in this repo emits a ``BENCH_<name>.json`` payload
+(nested dicts / record lists of numeric cells). This module folds those
+payloads into a line-per-run history file (``BENCH_history.jsonl``) and
+checks fresh runs against per-cell thresholds derived from the history
+baseline, so a slowdown fails loudly instead of rotting silently:
+
+    PYTHONPATH=src python -m benchmarks.regress --record   # fold runs in
+    PYTHONPATH=src python -m benchmarks.regress --check    # gate (CI)
+
+The gate is also reachable as ``benchmarks/run.py --check`` and from the
+launch smoke path as ``launch/dryrun.py --check-bench``.
+
+Cells are matched to direction-aware rules by name suffix: throughput
+cells (``tok_s``, ``req_s``, ``speedup*``, ``*reduction_x``) must not
+drop below ``1/tol`` of the baseline median; latency cells (``ttft/tpot
+p95``, ``us_per_tok``, ``*_us``) must not exceed ``tol`` times it; bool
+invariant cells (``*match*``, ``*ok``, ``conservation*``) must stay
+truthy. Everything else (shapes, counts, error magnitudes) is carried in
+the history for reference but not gated. Tolerances are deliberately
+loose (2x) — the gate exists to catch real regressions (a kernel losing
+its fusion, paged attention falling back to the legacy path), not CI
+timing jitter.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import re
+import statistics
+import sys
+from typing import Dict, Iterable, List, Optional, Tuple
+
+HISTORY = "BENCH_history.jsonl"
+
+#: Payload keys that identify a run rather than measure it.
+META_KEYS = {"bench", "smoke", "backend", "shape", "plan", "f", "device",
+             "note", "seed"}
+
+#: Keys used (in order) to give list-of-record rows a stable path segment
+#: that survives row reordering across runs.
+ID_KEYS = ("family", "arch", "kind", "epilogue", "name", "mode", "case",
+           "concurrency", "replicas", "n")
+
+# (pattern, direction, tolerance). Direction "higher": fresh must be
+# >= baseline / tol. "lower": fresh must be <= baseline * tol.
+# "truthy": fresh must be truthy whenever the baseline was.
+RULES: List[Tuple[re.Pattern, str, float]] = [
+    (re.compile(r"(^|\.)(tok_s|req_s|requests_per_s)$"), "higher", 2.0),
+    (re.compile(r"(speedup(_vs_[a-z0-9_]+)?|reduction_x|hit_rate)$"),
+     "higher", 2.0),
+    (re.compile(r"(ttft_ms_p95|tpot_ms_p95|us_per_tok)$"), "lower", 2.0),
+    (re.compile(r"(_us|_ms|_seconds|overhead)$"), "lower", 3.0),
+    (re.compile(r"(match|conservation|identical|correlated)[a-z_]*$"
+                r"|(^|[._])ok$"), "truthy", 0.0),
+]
+
+
+def rule_for(cell: str) -> Optional[Tuple[str, float]]:
+    """(direction, tol) for the first rule matching ``cell``, or None."""
+    for pat, direction, tol in RULES:
+        if pat.search(cell):
+            return direction, tol
+    return None
+
+
+# -- flattening ---------------------------------------------------------------
+
+def _row_key(row: dict, idx: int) -> str:
+    parts = [f"{k}={row[k]}" for k in ID_KEYS if k in row
+             and isinstance(row[k], (str, int))]
+    return ",".join(parts) if parts else str(idx)
+
+
+def _walk(node, path: str, out: Dict[str, object]) -> None:
+    if isinstance(node, dict):
+        for k, v in node.items():
+            if not path and k in META_KEYS:
+                continue
+            _walk(v, f"{path}.{k}" if path else str(k), out)
+    elif isinstance(node, list):
+        for i, v in enumerate(node):
+            seg = _row_key(v, i) if isinstance(v, dict) else str(i)
+            _walk(v, f"{path}[{seg}]", out)
+    elif isinstance(node, bool):
+        out[path] = node
+    elif isinstance(node, (int, float)):
+        out[path] = float(node)
+
+
+def flatten_cells(payload: dict) -> Dict[str, object]:
+    """Numeric/bool leaves of a BENCH payload keyed by a dotted path
+    that is stable across runs (list rows keyed by their identity
+    fields, not their index)."""
+    out: Dict[str, object] = {}
+    _walk(payload, "", out)
+    return out
+
+
+def bench_name(payload: dict) -> str:
+    name = str(payload.get("bench", "unknown"))
+    if payload.get("smoke"):
+        name += "_smoke"
+    return name
+
+
+# -- history ------------------------------------------------------------------
+
+def load_history(path: str = HISTORY) -> Dict[str, List[Dict[str, object]]]:
+    """history file -> {bench_name: [cells, ...]} oldest first."""
+    hist: Dict[str, List[Dict[str, object]]] = {}
+    if not os.path.exists(path):
+        return hist
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            entry = json.loads(line)
+            hist.setdefault(entry["bench"], []).append(entry["cells"])
+    return hist
+
+
+def record(payload: dict, path: str = HISTORY) -> str:
+    """Append one history line for ``payload``; returns the bench name."""
+    name = bench_name(payload)
+    entry = {"bench": name, "cells": flatten_cells(payload)}
+    with open(path, "a") as f:
+        f.write(json.dumps(entry, sort_keys=True) + "\n")
+    return name
+
+
+def baseline(runs: Iterable[Dict[str, object]]) -> Dict[str, object]:
+    """Per-cell baseline over history runs: median for numbers, any-true
+    for bools (an invariant that ever held must keep holding)."""
+    acc: Dict[str, list] = {}
+    for cells in runs:
+        for k, v in cells.items():
+            acc.setdefault(k, []).append(v)
+    out: Dict[str, object] = {}
+    for k, vs in acc.items():
+        if all(isinstance(v, bool) for v in vs):
+            out[k] = any(vs)
+        else:
+            out[k] = statistics.median(float(v) for v in vs)
+    return out
+
+
+# -- the gate -----------------------------------------------------------------
+
+def check_cells(fresh: Dict[str, object], base: Dict[str, object],
+                bench: str = "") -> List[str]:
+    """Violation strings for gated cells of ``fresh`` vs ``base``.
+    Cells absent from either side are skipped (suites grow cells over
+    time; a vanished cell is a code-review matter, not a perf gate)."""
+    bad: List[str] = []
+    where = f"{bench}:" if bench else ""
+    for cell, ref in sorted(base.items()):
+        if cell not in fresh:
+            continue
+        rule = rule_for(cell)
+        if rule is None:
+            continue
+        direction, tol = rule
+        got = fresh[cell]
+        if direction == "truthy":
+            if ref and not got:
+                bad.append(f"{where}{cell}: invariant went falsy "
+                           f"(baseline {ref!r}, got {got!r})")
+            continue
+        ref_f, got_f = float(ref), float(got)
+        if direction == "higher" and ref_f > 0 and got_f < ref_f / tol:
+            bad.append(f"{where}{cell}: {got_f:.4g} < baseline "
+                       f"{ref_f:.4g} / {tol:g} (throughput regression)")
+        elif direction == "lower" and ref_f > 0 and got_f > ref_f * tol:
+            bad.append(f"{where}{cell}: {got_f:.4g} > baseline "
+                       f"{ref_f:.4g} * {tol:g} (latency regression)")
+    return bad
+
+
+def check_payload(payload: dict,
+                  history: Dict[str, List[Dict[str, object]]]) -> List[str]:
+    """Gate one fresh payload against its bench's history baseline.
+    A bench with no history yet passes (nothing to regress against)."""
+    runs = history.get(bench_name(payload))
+    if not runs:
+        return []
+    return check_cells(flatten_cells(payload), baseline(runs),
+                       bench_name(payload))
+
+
+def discover(bench_dir: str = ".") -> List[str]:
+    """The committed/fresh BENCH payload files, history excluded."""
+    return sorted(p for p in glob.glob(os.path.join(bench_dir,
+                                                    "BENCH_*.json")))
+
+
+def check_files(paths: Iterable[str], history_path: str = HISTORY,
+                reporter=None) -> List[str]:
+    """Gate every payload file; returns all violations. ``reporter`` is
+    an ``obs.report.Reporter``-like object (``.line(msg)``) for
+    progress; silent when None."""
+    history = load_history(history_path)
+    bad: List[str] = []
+    for p in paths:
+        with open(p) as f:
+            payload = json.load(f)
+        name = bench_name(payload)
+        errs = check_payload(payload, history)
+        bad.extend(errs)
+        if reporter is not None:
+            n = len(history.get(name, ()))
+            status = ("no-history" if not n
+                      else f"FAIL({len(errs)})" if errs else "ok")
+            gated = sum(1 for c in flatten_cells(payload)
+                        if rule_for(c)) if n else 0
+            reporter.line(f"[regress] {name}: {status} "
+                          f"(runs={n} gated_cells={gated})")
+    return bad
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("files", nargs="*",
+                    help="BENCH_*.json payloads; default: discover in "
+                         "--bench-dir")
+    ap.add_argument("--bench-dir", default=".",
+                    help="where BENCH_*.json and the history live")
+    ap.add_argument("--history", default=None,
+                    help="history jsonl path (default <bench-dir>/"
+                         f"{HISTORY})")
+    ap.add_argument("--record", action="store_true",
+                    help="fold the payloads into the history instead of "
+                         "gating")
+    ap.add_argument("--check", action="store_true",
+                    help="gate the payloads against the history "
+                         "(default action)")
+    args = ap.parse_args(argv)
+
+    from repro.obs.report import Reporter
+    rep = Reporter(prefix="")
+    history_path = args.history or os.path.join(args.bench_dir, HISTORY)
+    paths = args.files or discover(args.bench_dir)
+    if not paths:
+        rep.line(f"[regress] no BENCH_*.json under {args.bench_dir}")
+        return 0
+
+    if args.record:
+        for p in paths:
+            with open(p) as f:
+                name = record(json.load(f), history_path)
+            rep.line(f"[regress] recorded {name} <- {p}")
+        return 0
+
+    bad = check_files(paths, history_path, reporter=rep)
+    for msg in bad:
+        rep.line(f"[regress] REGRESSION {msg}")
+    rep.line(f"[regress] {'FAIL' if bad else 'PASS'}: "
+             f"{len(bad)} violation(s) across {len(paths)} payload(s)")
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

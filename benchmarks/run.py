@@ -1,7 +1,9 @@
 """Benchmark harness — one module per paper table/claim. Prints
-``name,us_per_call,derived`` CSV rows (spec format).
+``name,us_per_call,derived`` CSV rows (spec format) through the obs
+Reporter (the serving stack's single print sink).
 
     PYTHONPATH=src python -m benchmarks.run [--only coherence,speed]
+    PYTHONPATH=src python -m benchmarks.run --check   # + regression gate
 """
 from __future__ import annotations
 
@@ -9,6 +11,8 @@ import argparse
 import os
 import sys
 import time
+
+from repro.obs.report import Reporter
 
 SUITES = ["coherence", "speed", "fused", "pipeline", "compression",
           "srf_attention", "kernel_quality",
@@ -24,21 +28,40 @@ def main(argv=None):
                     help="comma list of suites; default all")
     ap.add_argument("--roofline-in", default=None,
                     help="dryrun jsonl to append roofline rows")
+    ap.add_argument("--check", action="store_true",
+                    help="after the suites, gate the BENCH_*.json "
+                         "payloads against BENCH_history.jsonl "
+                         "(benchmarks/regress.py); nonzero exit on a "
+                         "regression")
+    ap.add_argument("--bench-dir", default=".",
+                    help="where BENCH_*.json / BENCH_history.jsonl live "
+                         "(for --check)")
     args = ap.parse_args(argv)
     picked = args.only.split(",") if args.only else SUITES
 
-    print("name,us_per_call,derived")
+    rep = Reporter()
+    rep.line("name,us_per_call,derived")
     for suite in picked:
         mod = __import__(f"benchmarks.bench_{suite}", fromlist=["run"])
         t0 = time.time()
         for row in mod.run():
-            print(row, flush=True)
-        print(f"suite/{suite}/total,{(time.time()-t0)*1e6:.0f},done",
-              flush=True)
+            rep.line(str(row))
+        rep.line(f"suite/{suite}/total,{(time.time()-t0)*1e6:.0f},done")
     if args.roofline_in and os.path.exists(args.roofline_in):
         from benchmarks import roofline
         for row in roofline.run(args.roofline_in):
-            print(row)
+            rep.line(str(row))
+    if args.check:
+        from benchmarks import regress
+        paths = regress.discover(args.bench_dir)
+        history = os.path.join(args.bench_dir, regress.HISTORY)
+        bad = regress.check_files(paths, history, reporter=rep)
+        for msg in bad:
+            rep.line(f"[regress] REGRESSION {msg}")
+        rep.line(f"[regress] {'FAIL' if bad else 'PASS'}: "
+                 f"{len(bad)} violation(s) across {len(paths)} "
+                 f"payload(s)")
+        return 1 if bad else 0
     return 0
 
 

@@ -28,6 +28,7 @@ the roofline terms (trip-count-aware HLO walk; see hlo_analysis.py).
 """
 import argparse
 import dataclasses
+import importlib.util
 import json
 import sys
 import time
@@ -38,6 +39,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import registry, shapes as shp
+from repro.obs.report import Reporter
 from repro.distributed import sharding as S
 from repro.launch import hlo_analysis as H
 from repro.launch import mesh as M
@@ -47,6 +49,33 @@ from repro.models import transformer as T
 from repro.optim import adamw
 
 HBM_PER_CHIP = 16 * 1024 ** 3   # v5e
+
+
+def check_bench(bench_dir: Optional[str] = None, reporter=None) -> int:
+    """``--check-bench``: run the perf-regression gate
+    (``benchmarks/regress.py``) over the committed ``BENCH_*.json``
+    payloads vs ``BENCH_history.jsonl``. The benchmarks tree is not a
+    package on ``PYTHONPATH=src``, so the module is loaded by file path;
+    ``REPRO_BENCH_DIR`` overrides the default (cwd = repo root)."""
+    rep = reporter or Reporter()
+    bench_dir = bench_dir or os.environ.get("REPRO_BENCH_DIR", ".")
+    mod_path = os.path.join(bench_dir, "benchmarks", "regress.py")
+    if not os.path.exists(mod_path):
+        mod_path = os.path.join(bench_dir, "regress.py")
+    if not os.path.exists(mod_path):
+        rep.line(f"[regress] no regress.py under {bench_dir}")
+        return 1
+    spec = importlib.util.spec_from_file_location("_bench_regress", mod_path)
+    regress = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(regress)
+    paths = regress.discover(bench_dir)
+    history = os.path.join(bench_dir, regress.HISTORY)
+    bad = regress.check_files(paths, history, reporter=rep)
+    for msg in bad:
+        rep.line(f"[regress] REGRESSION {msg}")
+    rep.line(f"[regress] {'FAIL' if bad else 'PASS'}: {len(bad)} "
+             f"violation(s) across {len(paths)} payload(s)")
+    return 1 if bad else 0
 
 
 def _mem_summary(compiled) -> Dict[str, float]:
@@ -452,7 +481,18 @@ def main(argv=None):
                     help="prefix-sharing smoke: 8 shared-prefix requests, "
                          "hit-rate > 0, bit-match vs cold cache, zero "
                          "leaked pages")
+    ap.add_argument("--check-bench", action="store_true",
+                    help="perf-regression gate: check the committed "
+                         "BENCH_*.json payloads against "
+                         "BENCH_history.jsonl (benchmarks/regress.py); "
+                         "REPRO_BENCH_DIR overrides the repo-root default")
+    ap.add_argument("--bench-dir", default=None,
+                    help="bench payload/history dir for --check-bench")
     args = ap.parse_args(argv)
+
+    rep = Reporter()
+    if args.check_bench:
+        return check_bench(args.bench_dir, reporter=rep)
 
     if (args.pipeline or args.serve_mesh or args.serve_chaos
             or args.serve_prefix):
@@ -463,7 +503,7 @@ def main(argv=None):
                if args.serve_chaos
                else serve_prefix_smoke(args.arch or "qwen3-4b"))
         line = json.dumps(rec, default=float)
-        print(line, flush=True)
+        rep.line(line)
         if args.out:
             with open(args.out, "a") as f:
                 f.write(line + "\n")
@@ -497,7 +537,7 @@ def main(argv=None):
                        overrides=overrides, hlo_dir=args.hlo_dir)
         ok = ok and rec["ok"]
         line = json.dumps(rec, default=float)
-        print(line, flush=True)
+        rep.line(line)
         if args.out:
             with open(args.out, "a") as f:
                 f.write(line + "\n")

@@ -52,6 +52,9 @@ from repro import obs
 from repro.configs import registry
 from repro.launch import mesh as mesh_lib
 from repro.models import transformer as model_lib
+from repro.obs import export as trace_export
+from repro.obs import quality as quality_lib
+from repro.obs import spans as spans_lib
 from repro.obs.report import Reporter
 from repro.serving import Engine, PagedConfig, Request, Router
 
@@ -113,6 +116,17 @@ def main(argv=None):
     ap.add_argument("--kernel-timing", action="store_true",
                     help="record per-dispatch kernel wall times (eager "
                          "dispatches only; serializes the device pipeline)")
+    ap.add_argument("--quality-every", type=int, default=64,
+                    help="decode steps between SRF row-gaussianity quality "
+                         "probes (srf_row_* gauges; 0 disables)")
+    ap.add_argument("--quality-tol", type=float,
+                    default=quality_lib.DRIFT_TOL,
+                    help="row-moment drift tolerance; past it the engine "
+                         "emits a quality_drift registry event")
+    ap.add_argument("--trace-out", default=None, metavar="FILE",
+                    help="record span timelines on every replica and the "
+                         "router, write a merged Chrome-trace JSON here "
+                         "at exit (load in Perfetto / chrome://tracing)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -120,6 +134,12 @@ def main(argv=None):
     metrics = obs.MetricsRegistry()
     if args.kernel_timing:
         obs.enable_kernel_timing(metrics)
+    tracing = args.trace_out is not None and not args.legacy
+    recorders = [spans_lib.SpanRecorder(replica=i)
+                 for i in range(max(args.replicas, 1))] if tracing else []
+
+    def _spans(i):
+        return recorders[i] if tracing else None
     overrides = {"attn_impl": args.attn} if args.attn else {}
     cfg = registry.reduced(args.arch, **overrides)
     params = model_lib.init(jax.random.PRNGKey(args.seed), cfg)
@@ -141,7 +161,9 @@ def main(argv=None):
         engines = [Engine(cfg, params, batch_slots=args.slots,
                           max_len=args.max_len, policy=args.policy,
                           seed=args.seed + i, mesh=m, paged=paged,
-                          metrics=metrics, prefix=prefix)
+                          metrics=metrics, prefix=prefix,
+                          quality_every=args.quality_every,
+                          quality_tol=args.quality_tol, spans=_spans(i))
                    for i, m in enumerate(meshes)]
         if args.chaos:
             from repro.serving.chaos import ChaosEngine, ChaosPlan
@@ -152,13 +174,19 @@ def main(argv=None):
                 engines[rep_i], ChaosPlan(kind, at_step=int(step_s or 5)))
             rep.line(f"[chaos] replica {rep_i}: {kind}@{step_s or 5} "
                      "(test-only fault injection)")
+        if tracing:
+            # the router's own spans (scoring, quarantine/rescue/replay)
+            # merge as one extra timeline row past the replica rows
+            recorders.append(spans_lib.SpanRecorder(replica=len(engines)))
         eng = Router(engines, metrics=metrics,
-                     ft=FTConfig() if args.ft else None)
+                     ft=FTConfig() if args.ft else None,
+                     spans=recorders[-1] if tracing else None)
     else:
         eng = Engine(cfg, params, batch_slots=args.slots,
                      max_len=args.max_len, policy=args.policy,
                      seed=args.seed, paged=paged, metrics=metrics,
-                     prefix=prefix)
+                     prefix=prefix, quality_every=args.quality_every,
+                     quality_tol=args.quality_tol, spans=_spans(0))
     rng = np.random.default_rng(args.seed)
     common = rng.integers(0, cfg.vocab, max(args.shared_prefix, 0)
                           ).astype(np.int32)
@@ -207,6 +235,13 @@ def main(argv=None):
         rep.line(f"  req{r.uid}: ttft={ttft} out={r.out_tokens[:8]}...")
     if args.metrics or args.metrics_out:
         rep.final(metrics, done, dump_path=args.metrics_out)
+    if tracing:
+        n = trace_export.dump_chrome_trace(args.trace_out, recorders)
+        spans = sum(len(r) for r in recorders)
+        dropped = sum(r.dropped for r in recorders)
+        rep.line(f"[trace] {args.trace_out}: {n} events from {spans} "
+                 f"spans across {len(recorders)} timelines"
+                 + (f" ({dropped} dropped)" if dropped else ""))
     if args.kernel_timing and not metrics.snapshot()["histograms"].get(
             "kernel_dispatch_seconds"):
         rep.line("[metrics] kernel-timing: no eager dispatches recorded — "

@@ -13,10 +13,14 @@ annotates kernel dispatches with ``jax.named_scope`` and, opt-in,
 times each eager dispatch into the registry. ``obs.quality`` samples
 the paper's row-statistics (Def. 1 calibration) from live serving
 params. ``obs.report`` owns all human-facing printing for the serving
-launcher.
+launcher. ``obs.spans`` records ring-buffered begin/end span timelines
+over the serving hot path and ``obs.export`` renders them as
+Chrome-trace JSON that Perfetto loads directly.
 """
 from .metrics import (Counter, Gauge, Histogram,        # noqa: F401
                       MetricsRegistry, StatsView)
 from .trace import Trace, latency_summary, percentiles  # noqa: F401
 from .profiling import (annotate, dispatch,             # noqa: F401
                         disable_kernel_timing, enable_kernel_timing)
+from .spans import Span, SpanRecorder                   # noqa: F401
+from .export import chrome_trace, dump_chrome_trace     # noqa: F401

@@ -343,8 +343,17 @@ class MetricsRegistry:
         return out
 
     @staticmethod
-    def _lbl(m: _Metric, key: Tuple[str, ...]) -> str:
-        return ",".join(f'{n}="{v}"' for n, v in zip(m.labelnames, key))
+    def _escape_label_value(v: str) -> str:
+        """Prometheus exposition escaping: backslash, double-quote and
+        newline must be escaped inside label values or the scrape line
+        is unparseable (tenant namespaces are user-supplied strings)."""
+        return (v.replace("\\", r"\\").replace("\n", r"\n")
+                 .replace('"', r'\"'))
+
+    @classmethod
+    def _lbl(cls, m: _Metric, key: Tuple[str, ...]) -> str:
+        return ",".join(f'{n}="{cls._escape_label_value(v)}"'
+                        for n, v in zip(m.labelnames, key))
 
     def prometheus_text(self, quantiles=(0.5, 0.95, 0.99)) -> str:
         """Prometheus exposition format; histograms export summary-style

@@ -25,6 +25,21 @@ from typing import Dict, Optional
 import jax
 import numpy as np
 
+#: Default drift tolerance on the Def. 1 row moments: rows of a healthy
+#: structured block are ~N(0, 1), so |row mean| and |row var - 1| both
+#: sit well under this for any calibrated pipeline.
+DRIFT_TOL = 0.5
+
+
+def moments_drifted(stats: Optional[Dict[str, float]],
+                    tol: float = DRIFT_TOL) -> bool:
+    """Whether a probe's row-gaussianity moments are out of tolerance
+    (the engine emits a ``quality_drift`` registry event when so)."""
+    if not stats:
+        return False
+    return (stats.get("srf_row_mean_abs_max", 0.0) > tol
+            or stats.get("srf_row_var_err_max", 0.0) > tol)
+
 
 def _find_srf_params(params):
     """First layer's per-head SRF pipeline params inside a serving

@@ -64,8 +64,20 @@ class Reporter:
                 f"preempt={int(registry.value_sum('engine_preemptions_total'))} "
                 f"migrations="
                 f"{int(registry.value_sum('router_migrations_total'))}"
+                + self._prefix_fragment(registry)
                 + self._ft_fragment(registry))
         return on_step
+
+    @staticmethod
+    def _prefix_fragment(registry) -> str:
+        """Prefix-cache hit rate for the periodic line — only printed
+        once any lookup has happened, so cache-less runs keep the exact
+        pre-prefix line format."""
+        lookups = registry.value_sum("prefix_lookups_total")
+        if not lookups:
+            return ""
+        hits = registry.value_sum("prefix_hits_total")
+        return f" hit_rate={hits / lookups:.2f}"
 
     @staticmethod
     def _ft_fragment(registry) -> str:
@@ -114,6 +126,14 @@ class Reporter:
             heads = registry.snapshot()["gauges"].get("router_headroom", {})
             self.line(f"[metrics] router submitted={int(sub)} "
                       f"migrations={int(mig)} headroom={heads}")
+        lookups = registry.value_sum("prefix_lookups_total")
+        if lookups:
+            self.line(
+                f"[metrics] prefix lookups={int(lookups)} "
+                f"hits={int(registry.value_sum('prefix_hits_total'))} "
+                f"hit_rate={registry.value_sum('prefix_hits_total') / lookups:.2f} "
+                f"hit_tokens="
+                f"{int(registry.value_sum('prefix_hit_tokens_total'))}")
         ft = self._ft_fragment(registry)
         if ft:
             self.line("[metrics] ft" + ft)

@@ -37,12 +37,13 @@ import numpy as np
 from repro.launch import steps as step_lib
 from repro.obs import metrics as obs_metrics
 from repro.obs import quality as obs_quality
+from repro.obs import spans as obs_spans
 from repro.obs import trace as obs_trace
 
 from . import paged_cache
 from .prefix import ChunkPolicy, PrefixCache, PrefixConfig, cow
 from .sampler import sample as _sample
-from .scheduler import SchedConfig, Scheduler, Sequence
+from .scheduler import SchedConfig, Scheduler, Sequence, tenant_of
 
 
 @dataclass
@@ -60,6 +61,9 @@ class Request:
     #                                  requests finish as 'timeout' instead
     #                                  of serving late (running ones finish)
     max_retries: int = 2             # replica-failure rescue budget
+    namespace: str = ""              # tenant id: per-tenant accounting labels
+    #                                  + prefix-cache partition ("" = default
+    #                                  tenant, labelled "-")
     out_tokens: List[int] = field(default_factory=list)
     done: bool = False
     finish_reason: str = ""          # eos | length | timeout | shed | failed
@@ -98,6 +102,20 @@ def _enc_namespace(enc_emb) -> int:
     h = hashlib.blake2b(np.ascontiguousarray(enc_emb).tobytes(),
                         digest_size=8)
     return int.from_bytes(h.digest(), "big")
+
+
+def _cache_namespace(req) -> int:
+    """Prefix-cache trie namespace for a request: partitioned by tenant
+    (requests from different namespaces must never share cache state —
+    isolation beats reuse across trust boundaries) and, for enc-dec, by
+    encoder-content hash. A default-tenant text-only request keeps
+    ``ns=0``, bit-identical to the pre-tenant trie layout."""
+    ns = _enc_namespace(req.enc_emb) if req.enc_emb is not None else 0
+    tenant = getattr(req, "namespace", "")
+    if tenant:
+        h = hashlib.blake2b(tenant.encode("utf-8"), digest_size=8)
+        ns ^= int.from_bytes(h.digest(), "big")
+    return ns
 
 
 # distinct label value per engine instance: replicas sharing one registry
@@ -139,20 +157,24 @@ class Engine:
                  paged: Optional[paged_cache.PagedConfig] = None,
                  metrics: Optional[obs_metrics.MetricsRegistry] = None,
                  quality_every: int = 64,
-                 prefix: Optional[PrefixConfig] = None):
+                 quality_tol: float = obs_quality.DRIFT_TOL,
+                 prefix: Optional[PrefixConfig] = None,
+                 spans: Optional[obs_spans.SpanRecorder] = None):
         self.cfg = cfg
         self.plan = paged_cache.plan_for(cfg)
         self.mesh = mesh
         self.paged = paged or paged_cache.PagedConfig()
         self.metrics = metrics if metrics is not None \
             else obs_metrics.MetricsRegistry()
+        self.spans = spans if spans is not None else obs_spans.NOOP
         self.engine_id = str(next(_ENGINE_IDS))
         if sched is None:
             sched = _default_sched(cfg, batch_slots, max_len, self.plan,
                                    policy)
         self.sched_cfg = sched
         self.sched = Scheduler(sched, self.plan, metrics=self.metrics,
-                               labels={"engine": self.engine_id})
+                               labels={"engine": self.engine_id},
+                               spans=self.spans)
         self.pools = paged_cache.init_pools(cfg, sched.num_pages,
                                             sched.page_size,
                                             num_slots=self.sched.num_slots,
@@ -185,13 +207,15 @@ class Engine:
             self.prefix = PrefixCache(
                 self.sched.alloc, self.sched_cfg.page_size,
                 paged_cache.page_bytes(self.pools), prefix,
-                metrics=self.metrics, labels={"engine": self.engine_id})
+                metrics=self.metrics, labels={"engine": self.engine_id},
+                spans=self.spans)
             self.sched.attach_prefix(self.prefix)
-            self._chunk = ChunkPolicy(prefix.chunk)
+            self._chunk = ChunkPolicy(prefix.chunk, spans=self.spans)
         self._init_metrics()
         self._quality_every = (quality_every
                                if getattr(cfg, "attn_impl", None) == "srf"
                                else 0)
+        self._quality_tol = quality_tol
         # primed so the FIRST decode step publishes a sample — short runs
         # (fewer than quality_every steps) still see the live gauge
         self._steps_since_quality = max(0, self._quality_every - 1)
@@ -231,6 +255,22 @@ class Engine:
                          "after the first")
         self._h_queue = h("request_queue_seconds", "submit -> admission")
         self._h_e2e = h("request_e2e_seconds", "submit -> done")
+        # per-tenant accounting (fairness substrate): same registry,
+        # {engine, tenant} labels; children bound lazily per namespace
+        tl = ("engine", "tenant")
+        self._ct_prefill = m.counter(
+            "tenant_prefill_tokens_total",
+            "prompt tokens prefilled, by tenant namespace", tl)
+        self._ct_decode = m.counter(
+            "tenant_decode_tokens_total",
+            "decode tokens generated, by tenant namespace", tl)
+        self._ct_requests = m.counter(
+            "tenant_requests_total",
+            "requests finished, by tenant namespace", tl)
+        self._ct_expired = m.counter(
+            "tenant_expired_total",
+            "requests expired past deadline, by tenant namespace", tl)
+        self._tenant_children: Dict[str, Dict[str, object]] = {}
         self.stats = obs_metrics.StatsView({
             "tokens": self._c_tokens.value,
             "requests": self._c_requests.value,
@@ -239,6 +279,20 @@ class Engine:
             "preemptions": self._c_preemptions.value,
         })
         self._sample_memory_gauges()
+
+    def _tenant(self, req) -> Dict[str, object]:
+        """Bound per-tenant counter children for a request's namespace
+        (cached — binding is a dict insert, incrementing is one add)."""
+        t = tenant_of(req)
+        ch = self._tenant_children.get(t)
+        if ch is None:
+            lab = {"engine": self.engine_id, "tenant": t}
+            ch = {"prefill": self._ct_prefill.labels(**lab),
+                  "decode": self._ct_decode.labels(**lab),
+                  "requests": self._ct_requests.labels(**lab),
+                  "expired": self._ct_expired.labels(**lab)}
+            self._tenant_children[t] = ch
+        return ch
 
     def _sample_memory_gauges(self) -> None:
         """Device-memory gauges from the pool container (pools are
@@ -270,6 +324,9 @@ class Engine:
                                 "statistics (Def. 1)", ("engine", "stat"))
         for k, v in stats.items():
             gq.labels(engine=self.engine_id, stat=k).set(v)
+        if obs_quality.moments_drifted(stats, self._quality_tol):
+            self.metrics.event("quality_drift", engine=self.engine_id,
+                               tol=self._quality_tol, **stats)
 
     # -- public API ---------------------------------------------------------
 
@@ -289,10 +346,11 @@ class Engine:
         req.trace.stamp("queued", now)
         self.metrics.event("queued", uid=req.uid, engine=self.engine_id)
         seq = self.sched.submit(req)
-        if self.prefix is not None and req.enc_emb is not None:
-            # decoder KV depends on the encoder memory: token-equal
-            # prompts under different encoder inputs must never share
-            seq.ns = _enc_namespace(req.enc_emb)
+        if self.prefix is not None:
+            # decoder KV depends on the encoder memory, and tenants must
+            # not share cache state: token-equal prompts under different
+            # encoder inputs or namespaces never cross-match
+            seq.ns = _cache_namespace(req)
 
     def prefix_peek(self, req: Request) -> int:
         """Tokens of ``req``'s prompt this engine could serve from its
@@ -300,8 +358,7 @@ class Engine:
         router's affinity probe)."""
         if self.prefix is None:
             return 0
-        ns = _enc_namespace(req.enc_emb) if req.enc_emb is not None else 0
-        return self.prefix.peek(ns, req.prompt,
+        return self.prefix.peek(_cache_namespace(req), req.prompt,
                                 want_state=bool(self.plan.slot_families))
 
     def run(self, on_step=None) -> List[Request]:
@@ -328,11 +385,15 @@ class Engine:
         Returns False when nothing could run (allocator exhausted).
 
         Timed through ``self.clock`` (exactly two reads per step) into
-        ``engine_step_seconds`` — the replica-health signal."""
+        ``engine_step_seconds`` — the replica-health signal. Spans use
+        ``perf_counter`` directly and never touch ``self.clock`` (the
+        chaos harness's stall clock counts its reads)."""
         t0 = self.clock()
+        tok = self.spans.begin("engine_step")
         try:
             return self._step_once()
         finally:
+            self.spans.end(tok)
             self._h_step.observe(self.clock() - t0)
 
     def _step_once(self) -> bool:
@@ -421,6 +482,7 @@ class Engine:
         self.pools = paged_cache.copy_page_rows(
             self.pools, [f.src for f in forks], [f.dst for f in forks])
         self._c_cow_forks.inc(len(forks))
+        self.spans.instant("cow_fork", pages=len(forks))
         for s in seqs:
             if s.fork is not None:
                 if s.fork.pinned_src:
@@ -441,6 +503,7 @@ class Engine:
             if req.trace.e2e is not None:
                 self._h_e2e.observe(req.trace.e2e)
         self._c_expired.inc()
+        self._tenant(req)["expired"].inc()
         self.metrics.event("expired", uid=req.uid, engine=self.engine_id)
 
     @staticmethod
@@ -494,14 +557,18 @@ class Engine:
             temps[i] = s.req.temperature
             ks[i] = s.req.top_k
             ps[i] = s.req.top_p
+        stok = self.spans.begin("sample")
         self._rng, sub = jax.random.split(self._rng)
         toks = _sample(sub, rows, jnp.asarray(temps), jnp.asarray(ks),
                        jnp.asarray(ps))
-        return np.asarray(toks)
+        out = np.asarray(toks)
+        self.spans.end(stok)
+        return out
 
     # -- prefill ------------------------------------------------------------
 
     def _prefill_step(self, work: List[Sequence]) -> None:
+        stok = self.spans.begin("prefill_step")
         sc = self.sched_cfg
         b, c, m = sc.prefill_batch, sc.prefill_chunk, sc.table_width
         tokens = np.zeros((b, c), np.int32)
@@ -518,6 +585,9 @@ class Engine:
                        for s in work]
         self._c_prefill_tokens.inc(sum(t for _, t in planned))
         for i, (seq, take) in enumerate(planned):
+            self._tenant(seq.req)["prefill"].inc(take)
+            self.spans.instant("prefill_chunk", uid=seq.req.uid,
+                               tokens=take)
             start = seq.prefill_pos
             tr = seq.req.trace
             if tr is not None:
@@ -566,6 +636,7 @@ class Engine:
             if seq.req.trace is not None:
                 seq.req.trace.stamp("first_token", now)
             self._c_tokens.inc()
+            self._tenant(seq.req)["decode"].inc()
             # the first token can already satisfy eos/max_new — finishing
             # here keeps max_new=1 at exactly one emitted token and frees
             # the pages/slot a step earlier (previously such a request
@@ -575,6 +646,8 @@ class Engine:
                 self._finish(seq, now)
         self._flush_cache_copies()
         self._c_prefill_steps.inc()
+        stok.args["rows"] = len(planned)
+        self.spans.end(stok)
 
     def _prefix_insert(self, seq: Sequence) -> None:
         """Donate a fully prefilled prompt to the prefix cache. Slot-
@@ -626,6 +699,7 @@ class Engine:
             self.pools, [s for s, _ in self._cache_copies],
             [d for _, d in self._cache_copies])
         self._c_cow_forks.inc(len(self._cache_copies))
+        self.spans.instant("cache_tail_copy", pages=len(self._cache_copies))
         self.sched.alloc.free([d for _, d in self._cache_copies])
         self._cache_copies.clear()
         self.sched._sync_gauges()
@@ -658,6 +732,7 @@ class Engine:
         if tpot is not None:
             self._h_tpot.observe(tpot)
         self._c_requests.inc()
+        self._tenant(req)["requests"].inc()
         self.metrics.event("done", uid=req.uid, engine=self.engine_id,
                            tokens=len(req.out_tokens))
         self.sched.finished(seq)
@@ -674,6 +749,7 @@ class Engine:
             self.pools, victim.table.pages, self._slot_ids(victim))
         self._pending_snaps.append(snap)
         self.sched.evicted(victim, snap)
+        self.spans.instant("preempt", uid=victim.req.uid)
         if victim.req.trace is not None:
             victim.req.trace.stamp("preempted")
         self.metrics.event("preempted", uid=victim.req.uid,
@@ -681,6 +757,13 @@ class Engine:
         self._c_preemptions.inc()
 
     def _decode_step(self, ready: List[Sequence]) -> bool:
+        stok = self.spans.begin("decode_step")
+        try:
+            return self._decode_once(ready, stok)
+        finally:
+            self.spans.end(stok)
+
+    def _decode_once(self, ready: List[Sequence], stok) -> bool:
         sc = self.sched_cfg
         batch: List[Sequence] = []
         for seq in ready:
@@ -723,10 +806,12 @@ class Engine:
                     seq.req.trace.count("decode") == 0:
                 seq.req.trace.stamp("decode", now)
             self._c_tokens.inc()
+            self._tenant(seq.req)["decode"].inc()
             if tok == seq.req.eos_id or \
                     len(seq.req.out_tokens) >= seq.req.max_new:
                 self._finish(seq, now)
         self._c_decode_steps.inc()
+        stok.args["rows"] = len(batch)
         self._maybe_sample_quality()
         return True
 

@@ -36,6 +36,8 @@ from typing import List, Optional, Set, Tuple
 
 import numpy as np
 
+from repro.obs import spans as obs_spans
+
 from .engine import Request
 
 
@@ -59,8 +61,9 @@ class ReplicaWatchdog:
     device traffic, no timers of its own.
     """
 
-    def __init__(self, n_replicas: int, cfg: FTConfig):
+    def __init__(self, n_replicas: int, cfg: FTConfig, spans=None):
         self.cfg = cfg
+        self.spans = spans if spans is not None else obs_spans.NOOP
         self.ema: List[Optional[float]] = [None] * n_replicas
         self.flags: List[int] = [0] * n_replicas
         self.stuck: List[int] = [0] * n_replicas
@@ -103,6 +106,8 @@ class ReplicaWatchdog:
         # because the no-op steps are FAST
         if has_work and not progressed:
             self.stuck[idx] += 1
+            self.spans.instant("watchdog_flag", replica_idx=idx,
+                               flag="stuck", rounds=self.stuck[idx])
             if self.stuck[idx] >= cfg.stuck_rounds:
                 return (f"stuck: no progress for {self.stuck[idx]} "
                         "consecutive rounds with work queued")
@@ -115,6 +120,8 @@ class ReplicaWatchdog:
             med = self._peer_median(idx)
             if med is not None and self.ema[idx] > cfg.threshold * med:
                 self.flags[idx] += 1
+                self.spans.instant("watchdog_flag", replica_idx=idx,
+                                   flag="slow", rounds=self.flags[idx])
                 if self.flags[idx] >= cfg.grace_steps:
                     return (f"slow: step-time ema {self.ema[idx]:.4g}s > "
                             f"{cfg.threshold}x peer median {med:.4g}s for "

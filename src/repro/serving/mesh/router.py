@@ -42,11 +42,12 @@ from typing import Dict, List, Optional, Set
 import jax
 
 from repro.obs import metrics as obs_metrics
+from repro.obs import spans as obs_spans
 from repro.obs import trace as obs_trace
 
 from .. import ft as ft_lib
 from ..engine import Engine, Request
-from ..scheduler import Sequence
+from ..scheduler import Sequence, tenant_of
 
 
 @dataclass(frozen=True)
@@ -66,7 +67,7 @@ class Router:
     def __init__(self, engines: List[Engine],
                  cfg: Optional[RouterConfig] = None,
                  metrics: Optional[obs_metrics.MetricsRegistry] = None,
-                 ft: Optional[ft_lib.FTConfig] = None):
+                 ft: Optional[ft_lib.FTConfig] = None, spans=None):
         if not engines:
             raise ValueError("router needs >= 1 engine replica")
         fam = engines[0].plan.name
@@ -86,7 +87,9 @@ class Router:
         # single scrape still covers the whole deployment.
         self.metrics = metrics if metrics is not None \
             else obs_metrics.MetricsRegistry()
-        self.watchdog = (ft_lib.ReplicaWatchdog(len(engines), ft)
+        self.spans = spans if spans is not None else obs_spans.NOOP
+        self.watchdog = (ft_lib.ReplicaWatchdog(len(engines), ft,
+                                                spans=self.spans)
                          if ft is not None else None)
         self._c_submitted = self.metrics.counter(
             "router_submitted_total", "requests routed to a replica")
@@ -111,6 +114,10 @@ class Router:
         self._c_revived = self.metrics.counter(
             "router_revived_total", "quarantined replicas rejoined after "
             "a successful probe")
+        self._c_tenant_shed = self.metrics.counter(
+            "router_tenant_shed_total",
+            "new requests rejected in degraded state, by tenant "
+            "namespace", ("tenant",))
         self._g_headroom = self.metrics.gauge(
             "router_headroom", "discounted free capacity per replica "
             "(pages/slots minus queued demand)", ("replica",))
@@ -188,29 +195,36 @@ class Router:
         credited with prefix-cache affinity — a replica already holding
         the prompt's prefix admits it cheaper than its raw free pages
         suggest."""
-        hr = {i: self._headroom(self.engines[i])
-              + self._affinity_pages(self.engines[i], req)
-              for i in self._live()}
-        fitting = [i for i in sorted(hr, key=lambda i: -hr[i])
-                   if self.engines[i].sched.fits(req)]
-        if not fitting:
-            raise ValueError(
-                f"request uid={req.uid} fits no replica "
-                f"(prompt={len(req.prompt)} + max_new={req.max_new})")
-        best = fitting[0]
-        if (self.ft is not None and self.state == "degraded"
-                and hr[best] < self._demand_req(self.engines[best], req)):
-            # degradation ladder, first rung: rejecting a NEW request is
-            # strictly cheaper than queueing it into an exhausted pool,
-            # where admitting it could only proceed by evicting running
-            # work (reject-new before evict-running)
-            return self._shed(req)
-        eng = self.engines[best]
-        eng.submit(req)
-        self.home[req.uid] = best
-        self._c_submitted.inc()
-        self.metrics.event("routed", uid=req.uid, replica=best)
-        return best
+        stok = self.spans.begin("router_score", uid=req.uid)
+        try:
+            hr = {i: self._headroom(self.engines[i])
+                  + self._affinity_pages(self.engines[i], req)
+                  for i in self._live()}
+            fitting = [i for i in sorted(hr, key=lambda i: -hr[i])
+                       if self.engines[i].sched.fits(req)]
+            if not fitting:
+                raise ValueError(
+                    f"request uid={req.uid} fits no replica "
+                    f"(prompt={len(req.prompt)} + max_new={req.max_new})")
+            best = fitting[0]
+            stok.args["replica"] = best
+            if (self.ft is not None and self.state == "degraded"
+                    and hr[best] < self._demand_req(self.engines[best],
+                                                    req)):
+                # degradation ladder, first rung: rejecting a NEW request
+                # is strictly cheaper than queueing it into an exhausted
+                # pool, where admitting it could only proceed by evicting
+                # running work (reject-new before evict-running)
+                stok.args["replica"] = -1
+                return self._shed(req)
+            eng = self.engines[best]
+            eng.submit(req)
+            self.home[req.uid] = best
+            self._c_submitted.inc()
+            self.metrics.event("routed", uid=req.uid, replica=best)
+            return best
+        finally:
+            self.spans.end(stok)
 
     def _shed(self, req: Request) -> int:
         req.done = True
@@ -222,6 +236,8 @@ class Router:
         req.trace.stamp("queued", now)
         req.trace.stamp("done", now)
         self._c_shed.inc()
+        self._c_tenant_shed.labels(tenant=tenant_of(req)).inc()
+        self.spans.instant("shed", uid=req.uid, tenant=tenant_of(req))
         self.metrics.event("shed", uid=req.uid)
         return -1
 
@@ -334,6 +350,7 @@ class Router:
             self.watchdog.mark_dead(idx)
         self._c_quarantined.inc()
         self._g_dead.set(len(self.dead))
+        self.spans.instant("quarantine", replica_idx=idx, reason=reason)
         self.metrics.event("quarantined", replica=idx, reason=reason)
         self._rescue(idx)
 
@@ -367,6 +384,8 @@ class Router:
                 self._c_rescued.inc()
                 if seq.req.trace is not None:
                     seq.req.trace.stamp("rescued")
+                self.spans.instant("rescue", uid=seq.req.uid,
+                                   src=idx, dst=dst_i)
                 self.metrics.event("rescued", uid=seq.req.uid,
                                    src=idx, dst=dst_i)
             else:
@@ -403,6 +422,8 @@ class Router:
             self._c_replayed.inc()
             if req.trace is not None:
                 req.trace.stamp("replayed")
+            self.spans.instant("replay", uid=req.uid, src=src_i,
+                               dst=dst_i, prefix_tokens=hwm)
             self.metrics.event("replayed", uid=req.uid, src=src_i,
                                dst=dst_i, prefix_tokens=hwm)
             return
@@ -416,6 +437,7 @@ class Router:
         if req.trace is not None:
             req.trace.stamp("done", now)
         self._c_failed.inc()
+        self.spans.instant("rescue_failed", uid=req.uid, reason=why)
         self.metrics.event("rescue_failed", uid=req.uid, reason=why)
 
     def revive(self, idx: int) -> bool:
@@ -446,6 +468,7 @@ class Router:
                 self.watchdog.revive(idx)
             self._c_revived.inc()
             self._g_dead.set(len(self.dead))
+            self.spans.instant("revive", replica_idx=idx)
             self.metrics.event("revived", replica=idx)
         return ok
 

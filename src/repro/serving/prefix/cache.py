@@ -33,6 +33,7 @@ from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
 from repro.obs import metrics as obs_metrics
+from repro.obs import spans as obs_spans
 
 from . import cow
 from .chunk import ChunkConfig
@@ -53,11 +54,12 @@ class PrefixCache:
 
     def __init__(self, alloc, page_size: int, page_bytes: int,
                  cfg: Optional[PrefixConfig] = None, metrics=None,
-                 labels: Optional[Dict[str, str]] = None):
+                 labels: Optional[Dict[str, str]] = None, spans=None):
         self.alloc = alloc
         self.page_size = page_size
         self.page_bytes = max(int(page_bytes), 1)
         self.cfg = cfg or PrefixConfig()
+        self.spans = spans if spans is not None else obs_spans.NOOP
         self.trie = RadixTrie(page_size)
         self._payload_bytes: Dict[int, int] = {}     # node id -> bytes
         # invoked whenever the cache changes the ALLOCATOR's free/used
@@ -92,7 +94,35 @@ class PrefixCache:
                           "references (pages + slot-state payloads)")
         self._g_pages = g("prefix_cache_pages", "pages the cache holds a "
                           "reference on")
+        self._g_hit_rate = g("prefix_hit_rate", "hits / lookups over the "
+                             "engine's lifetime (derived gauge)")
+        # per-tenant attribution: the existing unlabelled-by-tenant
+        # counters stay the engine-level truth; these children break
+        # the same probes down by namespace for fairness accounting
+        self._labels = labels
+        tl = tuple(labels) + ("tenant",)
+        self._c_t_lookups = self.metrics.counter(
+            "prefix_tenant_lookups_total",
+            "prefix-cache lookups by tenant namespace", tl)
+        self._c_t_hits = self.metrics.counter(
+            "prefix_tenant_hits_total",
+            "prefix-cache hits by tenant namespace", tl)
+        self._tenant_children: Dict[str, tuple] = {}
         self._sync_gauges()
+
+    def _tenant(self, tenant: str):
+        pair = self._tenant_children.get(tenant)
+        if pair is None:
+            kw = dict(self._labels, tenant=tenant)
+            pair = (self._c_t_lookups.labels(**kw),
+                    self._c_t_hits.labels(**kw))
+            self._tenant_children[tenant] = pair
+        return pair
+
+    def _update_hit_rate(self) -> None:
+        lookups = self._c_lookups.value()
+        if lookups:
+            self._g_hit_rate.set(self._c_hits.value() / lookups)
 
     def _sync_gauges(self) -> None:
         self._g_bytes.set(self.bytes)
@@ -115,22 +145,30 @@ class PrefixCache:
 
     # -- lookup / insert -----------------------------------------------------
 
-    def lookup(self, ns: int, tokens, want_state: bool = False
+    def lookup(self, ns: int, tokens, want_state: bool = False,
+               tenant: str = "-", uid: Optional[int] = None
                ) -> Optional[cow.PrefixMatch]:
         """Longest usable match for a prompt; pins every returned page
         (one allocator reference each) until admission transfers or
         :meth:`release` drops them. Returns None on a miss."""
         self._c_lookups.inc()
+        t_lookups, t_hits = self._tenant(tenant)
+        t_lookups.inc()
         plen = len(tokens)
         raw = self.trie.walk(ns, tokens)
         m, payload, ptoks = self._usable(raw, plen, want_state)
         if m <= 0:
+            self._update_hit_rate()
             return None
         shared, fork_src = cow.plan_match(raw.nodes, m, self.page_size)
         self.alloc.share(shared + ([fork_src] if fork_src is not None
                                    else []))
         self._c_hits.inc()
+        t_hits.inc()
         self._c_hit_tokens.inc(m)
+        self._update_hit_rate()
+        self.spans.instant("prefix_hit", uid=uid, tokens=m,
+                           pages=len(shared), tenant=tenant)
         return cow.PrefixMatch(ns=ns, tokens=m, pages=shared,
                                fork_src=fork_src, payload=payload,
                                payload_tokens=ptoks)
@@ -180,6 +218,8 @@ class PrefixCache:
         if new_pages:
             self.alloc.share(new_pages)
             self._c_inserted.inc(len(new_pages))
+            self.spans.instant("prefix_insert", pages=len(new_pages),
+                               tokens=len(tokens))
         if payload is not None and node.payload is None:
             node.payload = payload
             node.payload_tokens = payload_tokens
@@ -194,6 +234,7 @@ class PrefixCache:
         pg = self.trie.remove(leaf)
         self._payload_bytes.pop(id(leaf), None)
         self._c_evictions.inc()
+        self.spans.instant("prefix_evict")
         return len(self.alloc.free([pg]))
 
     def evict_for(self, n: int) -> int:

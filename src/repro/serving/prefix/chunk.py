@@ -26,6 +26,8 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import List, Tuple
 
+from repro.obs import spans as obs_spans
+
 
 @dataclass(frozen=True)
 class ChunkConfig:
@@ -39,8 +41,9 @@ class ChunkConfig:
 class ChunkPolicy:
     """Host-side pacing state; one per engine."""
 
-    def __init__(self, cfg: ChunkConfig):
+    def __init__(self, cfg: ChunkConfig, spans=None):
         self.cfg = cfg
+        self.spans = spans if spans is not None else obs_spans.NOOP
         self._mixed_steps = 0
 
     def spans_steps(self, work, per_row: int, max_rows: int) -> bool:
@@ -65,7 +68,10 @@ class ChunkPolicy:
         if self.cfg.decode_every <= 0:
             return False
         self._mixed_steps += 1
-        return self._mixed_steps % self.cfg.decode_every == 0
+        if self._mixed_steps % self.cfg.decode_every == 0:
+            self.spans.instant("decode_yield", mixed_steps=self._mixed_steps)
+            return True
+        return False
 
     def plan(self, work, per_row: int,
              max_rows: int) -> List[Tuple[object, int]]:

@@ -29,6 +29,7 @@ from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
 from repro.obs import metrics as obs_metrics
+from repro.obs import spans as obs_spans
 
 from .blocks import BlockAllocator, BlockTable
 from .prefix import cow
@@ -46,6 +47,12 @@ class SchedConfig:
                                 # (0: derive max_batch + 1; unused when the
                                 # plan has no constant-state component)
     policy: str = "fcfs"        # fcfs | priority
+
+
+def tenant_of(req) -> str:
+    """Metric label value for a request's tenant namespace. The default
+    (unset) namespace is ``"-"`` so the label is never empty."""
+    return getattr(req, "namespace", "") or "-"
 
 
 @dataclass
@@ -79,9 +86,10 @@ class Scheduler:
     (anything exposing ``has_paged`` / ``needs_slot`` works)."""
 
     def __init__(self, cfg: SchedConfig, plan, metrics=None,
-                 labels: Optional[Dict[str, str]] = None):
+                 labels: Optional[Dict[str, str]] = None, spans=None):
         self.cfg = cfg
         self.plan = plan
+        self.spans = spans if spans is not None else obs_spans.NOOP
         self.alloc = BlockAllocator(cfg.num_pages, cfg.page_size)
         self.num_slots = 0
         self.slot_alloc: Optional[BlockAllocator] = None
@@ -114,6 +122,7 @@ class Scheduler:
         self.metrics = metrics if metrics is not None \
             else obs_metrics.MetricsRegistry()
         labels = dict(labels or {"engine": "-"})
+        self._labels = labels
         ln = tuple(labels)
         c = lambda name, help: self.metrics.counter(  # noqa: E731
             name, help, ln).labels(**labels)
@@ -137,6 +146,13 @@ class Scheduler:
         self._g_used_pages = g("sched_used_pages", "paged-domain used pages")
         self._g_free_slots = g("sched_free_slots", "slot-domain free slots")
         self._g_used_slots = g("sched_used_slots", "slot-domain used slots")
+        # per-tenant fairness substrate: pages currently held by RUNNING
+        # sequences, broken down by the request's namespace (vanished
+        # tenants are zeroed, not deleted — scrapes see the drop)
+        self._g_tenant_pages = self.metrics.gauge(
+            "tenant_pages_held", "paged-domain pages held by running "
+            "sequences, by tenant namespace", ln + ("tenant",))
+        self._tenant_page_children: Dict[str, object] = {}
         self.stats = obs_metrics.StatsView({
             "admitted": self._c_admitted.value,
             "preemptions": self._c_preempted.value,
@@ -154,6 +170,20 @@ class Scheduler:
         if self.slot_alloc is not None:
             self._g_free_slots.set(self.slot_alloc.free_pages)
             self._g_used_slots.set(self.slot_alloc.used_pages)
+        held: Dict[str, int] = {}
+        for seq in self.running:
+            t = tenant_of(seq.req)
+            held[t] = held.get(t, 0) + len(seq.table.pages)
+        for t, n in held.items():
+            ch = self._tenant_page_children.get(t)
+            if ch is None:
+                ch = self._g_tenant_pages.labels(
+                    **dict(self._labels, tenant=t))
+                self._tenant_page_children[t] = ch
+            ch.set(n)
+        for t, ch in self._tenant_page_children.items():
+            if t not in held:
+                ch.set(0)
 
     # -- ordering -----------------------------------------------------------
 
@@ -235,7 +265,9 @@ class Scheduler:
                 or not self.plan.has_paged:
             return None
         return self.prefix.lookup(seq.ns, seq.req.prompt,
-                                  want_state=bool(self.plan.slot_families))
+                                  want_state=bool(self.plan.slot_families),
+                                  tenant=tenant_of(seq.req),
+                                  uid=seq.req.uid)
 
     def admit(self) -> List[Sequence]:
         """Move waiting sequences into the running set while BOTH domains
@@ -254,6 +286,7 @@ class Scheduler:
         (the engine applies the device copy; see serving/prefix). A
         failed admission releases the match's pins — next round re-looks
         it up against a possibly changed cache."""
+        tok = self.spans.begin("admit")
         admitted = []
         for seq in sorted(self.waiting, key=self._rank):
             if len(self.running) >= self.cfg.max_batch:
@@ -298,6 +331,9 @@ class Scheduler:
             admitted.append(seq)
         if admitted:
             self._sync_gauges()
+        tok.args["admitted"] = len(admitted)
+        tok.args["waiting"] = len(self.waiting)
+        self.spans.end(tok)
         return admitted
 
     # -- prefill ------------------------------------------------------------
@@ -410,6 +446,8 @@ class Scheduler:
             seq.snapshot_pages = []
             self._c_finished.inc()
             self._c_expired.inc()
+            self.spans.instant("expired", uid=seq.req.uid,
+                               tenant=tenant_of(seq.req))
         if out:
             self._g_waiting.set(len(self.waiting))
         return out

@@ -121,6 +121,49 @@ def test_prometheus_text_format():
     assert 'c_seconds_count{engine="0"} 1' in text
 
 
+def test_prometheus_label_value_escaping():
+    # Prometheus exposition: backslash, newline and double-quote inside
+    # a label VALUE must be escaped; ordinary values pass through
+    # byte-identical (pinned by test_prometheus_text_format above).
+    reg = MetricsRegistry()
+    c = reg.counter("esc_total", "", ("tenant",))
+    c.labels(tenant='a"b\\c\nd').inc()
+    text = reg.prometheus_text()
+    assert r'esc_total{tenant="a\"b\\c\nd"} 1' in text
+    assert MetricsRegistry._escape_label_value("plain-0") == "plain-0"
+
+
+def test_prometheus_empty_histogram_and_label_only_series():
+    # A histogram that was registered but never observed must still
+    # export valid exposition (TYPE line, zero count, no quantile lines
+    # that would divide by an empty sample), and a labelled metric with
+    # no bound children exports just its header.
+    reg = MetricsRegistry()
+    reg.histogram("idle_seconds", "never observed")
+    reg.counter("unbound_total", "no children yet", ("engine",))
+    text = reg.prometheus_text()
+    assert "# TYPE idle_seconds summary" in text
+    assert "# TYPE unbound_total counter" in text
+    lines = [l for l in text.splitlines() if l.startswith("idle_seconds")]
+    for line in lines:
+        assert "quantile" not in line or not line.endswith("nan")
+    h = reg.histogram("idle_seconds", "")
+    assert h.labels().count() == 0 and h.labels().sum() == 0.0
+
+
+def test_noop_registry_snapshot_shape():
+    # The disabled registry's snapshot must be shape-compatible with the
+    # enabled one (same top-level keys), so reporters can read either.
+    live = MetricsRegistry().snapshot()
+    noop = MetricsRegistry(enabled=False).snapshot()
+    assert set(noop) == set(live)
+    assert all(noop[k] in ({}, [], 0) for k in noop)
+    reg = MetricsRegistry(enabled=False)
+    h = reg.histogram("h_seconds")
+    h.observe(1.0)
+    assert reg.snapshot()["histograms"] == {}
+
+
 def test_stats_view_is_read_only_live_mapping():
     reg = MetricsRegistry()
     c = reg.counter("tok_total")
@@ -302,20 +345,114 @@ def test_reporter_periodic_and_final(tmp_path):
 
 
 # ---------------------------------------------------------------------------
+# per-tenant accounting
+# ---------------------------------------------------------------------------
+
+def test_tenant_accounting_labels_flow_through_engine():
+    from repro.configs import registry
+    from repro.models import transformer as T
+    from repro.serving import Engine, Request
+    cfg = registry.reduced("qwen3-4b", n_layers=2)
+    params = T.init(jax.random.PRNGKey(0), cfg)
+    reg = MetricsRegistry()
+    eng = Engine(cfg, params, batch_slots=4, max_len=64, metrics=reg)
+    for i, ns in enumerate(["acme", "acme", "globex", ""]):
+        eng.submit(Request(uid=i, prompt=np.arange(5, dtype=np.int32),
+                           max_new=4, namespace=ns))
+    eng.run()
+    lab = {"engine": eng.engine_id}
+
+    def by_tenant(name):
+        c = reg.counter(name, "", ("engine", "tenant"))
+        return {t: c.labels(**lab, tenant=t).value()
+                for t in ("acme", "globex", "-")}
+
+    reqs = by_tenant("tenant_requests_total")
+    assert reqs == {"acme": 2, "globex": 1, "-": 1}   # "" renders as "-"
+    dec = by_tenant("tenant_decode_tokens_total")
+    assert dec["acme"] == 8 and dec["globex"] == 4 and dec["-"] == 4
+    pre = by_tenant("tenant_prefill_tokens_total")
+    assert sum(pre.values()) == reg.value_sum("engine_prefill_tokens_total")
+    assert reg.value_sum("tenant_decode_tokens_total") == \
+        reg.value_sum("engine_tokens_total")
+    # pages all released after drain: every tenant gauge back at zero
+    g = reg.gauge("tenant_pages_held", "", ("engine", "tenant"))
+    for t in ("acme", "globex", "-"):
+        assert g.labels(**lab, tenant=t).value() == 0
+
+
+def test_tenant_namespaces_partition_prefix_cache():
+    """Two tenants sending the IDENTICAL prompt must not share cached
+    pages; two requests of one tenant must."""
+    from repro.configs import registry
+    from repro.models import transformer as T
+    from repro.serving import ChunkConfig, Engine, PrefixConfig, Request
+    cfg = registry.reduced("qwen3-4b", n_layers=2)
+    params = T.init(jax.random.PRNGKey(0), cfg)
+    reg = MetricsRegistry()
+    eng = Engine(cfg, params, batch_slots=2, max_len=64, metrics=reg,
+                 prefix=PrefixConfig(chunk=ChunkConfig(chunk_tokens=16)))
+    prompt = np.arange(20, dtype=np.int32)
+
+    def serve_one(uid, ns):
+        eng.submit(Request(uid=uid, prompt=prompt.copy(), max_new=2,
+                           namespace=ns))
+        eng.run()
+        return reg.value_sum("prefix_hits_total")
+
+    assert serve_one(0, "acme") == 0          # cold
+    assert serve_one(1, "globex") == 0        # same tokens, other tenant
+    assert serve_one(2, "acme") == 1          # same tenant: hits
+    hits = reg.counter("prefix_tenant_hits_total", "",
+                       ("engine", "tenant"))
+    assert hits.labels(engine=eng.engine_id, tenant="acme").value() == 1
+    assert hits.labels(engine=eng.engine_id, tenant="globex").value() == 0
+
+
+# ---------------------------------------------------------------------------
 # lint pin: the serving stack never prints directly
 # ---------------------------------------------------------------------------
 
 def test_no_bare_print_in_serving():
     """All human-facing serving output routes through obs.report.Reporter;
-    a bare print() in the serving stack or the launcher bypasses the
-    registry and drifts from the metrics report."""
+    a bare print() in the serving stack, the launchers, or the bench
+    harness bypasses the registry and drifts from the metrics report."""
+    repo = SRC.parent
     files = sorted((SRC / "repro" / "serving").rglob("*.py"))
     files.append(SRC / "repro" / "launch" / "serve.py")
+    files.append(SRC / "repro" / "launch" / "dryrun.py")
+    files.append(repo / "benchmarks" / "run.py")
     pat = re.compile(r"(?<![\w.])print\(")
     offenders = []
     for f in files:
         for i, line in enumerate(f.read_text().splitlines(), 1):
             if pat.search(line):
-                offenders.append(f"{f.relative_to(SRC)}:{i}: {line.strip()}")
+                offenders.append(
+                    f"{f.relative_to(repo)}:{i}: {line.strip()}")
     assert not offenders, "bare print() in the serving stack:\n" + \
         "\n".join(offenders)
+
+
+def test_metric_name_table_in_readme_is_complete():
+    """serving/README.md documents every metric series the stack
+    registers. Registered names are collected statically (string-literal
+    first argument of counter()/gauge()/histogram() calls under
+    src/repro/serving and src/repro/obs), so adding a metric without
+    documenting it fails this pin."""
+    pat = re.compile(r'\.(?:counter|gauge|histogram)\(\s*"([a-z0-9_]+)"',
+                     re.S)
+    # registration through the local one-letter factory aliases some
+    # modules bind (c = metrics.counter(...).labels(...), etc.)
+    alias = re.compile(r'(?<![\w.])[cgh]\(\s*"([a-z0-9_]+)"', re.S)
+    names = set()
+    for root in (SRC / "repro" / "serving", SRC / "repro" / "obs"):
+        for f in sorted(root.rglob("*.py")):
+            text = f.read_text()
+            names.update(pat.findall(text))
+            names.update(alias.findall(text))
+    assert len(names) > 20, "metric-name scrape came back implausibly thin"
+    readme = (SRC / "repro" / "serving" / "README.md").read_text()
+    missing = sorted(n for n in names if n not in readme)
+    assert not missing, \
+        "metrics registered but undocumented in serving/README.md: " + \
+        ", ".join(missing)

@@ -1,0 +1,193 @@
+"""Perf-regression gate (benchmarks/regress.py): flattening stability,
+direction-aware rules, the committed-baseline pass, and the synthetic
+slowdown that must fail. The benchmarks tree is not a package under
+``PYTHONPATH=src``, so the module is loaded by file path — the same way
+``launch/dryrun.py --check-bench`` loads it."""
+import importlib.util
+import json
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parent.parent
+
+spec = importlib.util.spec_from_file_location(
+    "regress", REPO / "benchmarks" / "regress.py")
+regress = importlib.util.module_from_spec(spec)
+spec.loader.exec_module(regress)
+
+
+PAYLOAD = {
+    "bench": "toy", "smoke": False, "backend": "cpu",
+    "results": [
+        {"kind": "circulant", "fused_us": 100.0, "dense_us": 400.0,
+         "speedup_vs_dense": 4.0, "match_dense": True},
+        {"kind": "toeplitz", "fused_us": 120.0, "dense_us": 360.0,
+         "speedup_vs_dense": 3.0, "match_dense": True},
+    ],
+    "paged": {"tok_s": 50.0, "ttft_ms_p95": 20.0, "tpot_ms_p95": 5.0},
+}
+
+
+# ---------------------------------------------------------------------------
+# flattening
+# ---------------------------------------------------------------------------
+
+def test_flatten_uses_identity_keys_not_indices():
+    cells = regress.flatten_cells(PAYLOAD)
+    assert cells["results[kind=circulant].fused_us"] == 100.0
+    assert cells["results[kind=circulant].match_dense"] is True
+    assert cells["paged.tok_s"] == 50.0
+    assert "backend" not in cells and "bench" not in cells
+    # row reorder does not move cells (index-keyed flattening would)
+    flipped = dict(PAYLOAD, results=list(reversed(PAYLOAD["results"])))
+    assert regress.flatten_cells(flipped) == cells
+
+
+def test_bench_name_distinguishes_smoke():
+    assert regress.bench_name({"bench": "serving"}) == "serving"
+    assert regress.bench_name({"bench": "serving", "smoke": True}) \
+        == "serving_smoke"
+
+
+def test_rules_direction_aware():
+    assert regress.rule_for("paged.tok_s")[0] == "higher"
+    assert regress.rule_for("x.speedup_vs_dense")[0] == "higher"
+    assert regress.rule_for("shared_prefix.prefill_reduction_x")[0] \
+        == "higher"
+    assert regress.rule_for("paged.ttft_ms_p95")[0] == "lower"
+    assert regress.rule_for("r.us_per_tok")[0] == "lower"
+    assert regress.rule_for("r.match_dense")[0] == "truthy"
+    assert regress.rule_for("chaos_smoke.ok")[0] == "truthy"
+    assert regress.rule_for("x.conservation_holds")[0] == "truthy"
+    assert regress.rule_for("failover.trace.chain_uid_correlated")[0] \
+        == "truthy"
+    assert regress.rule_for("concurrency") is None   # counts ungated
+    assert regress.rule_for("results[k].storage_floats") is None
+
+
+# ---------------------------------------------------------------------------
+# history + baseline
+# ---------------------------------------------------------------------------
+
+def test_record_and_load_history_roundtrip(tmp_path):
+    hist = tmp_path / "h.jsonl"
+    assert regress.record(PAYLOAD, str(hist)) == "toy"
+    regress.record(PAYLOAD, str(hist))
+    loaded = regress.load_history(str(hist))
+    assert list(loaded) == ["toy"] and len(loaded["toy"]) == 2
+    assert loaded["toy"][0]["paged.tok_s"] == 50.0
+
+
+def test_baseline_median_and_bool_any():
+    base = regress.baseline([{"a": 1.0, "ok": True},
+                             {"a": 3.0, "ok": False},
+                             {"a": 100.0}])
+    assert base["a"] == 3.0          # median, robust to one outlier
+    assert base["ok"] is True        # an invariant that ever held, holds
+
+
+# ---------------------------------------------------------------------------
+# the gate
+# ---------------------------------------------------------------------------
+
+def _history_of(payload, n=1):
+    return {regress.bench_name(payload):
+            [regress.flatten_cells(payload)] * n}
+
+
+def test_gate_passes_on_identical_run():
+    assert regress.check_payload(PAYLOAD, _history_of(PAYLOAD)) == []
+
+
+def test_gate_passes_within_tolerance():
+    jittered = json.loads(json.dumps(PAYLOAD))
+    jittered["paged"]["tok_s"] = 30.0          # 0.6x: above the 1/2 floor
+    jittered["paged"]["ttft_ms_p95"] = 35.0    # 1.75x: under the 2x bar
+    assert regress.check_payload(jittered, _history_of(PAYLOAD)) == []
+
+
+def test_gate_fails_on_synthetic_slowdown():
+    degraded = json.loads(json.dumps(PAYLOAD))
+    degraded["paged"]["tok_s"] = 10.0          # 5x throughput collapse
+    degraded["paged"]["ttft_ms_p95"] = 200.0   # 10x latency blowup
+    degraded["results"][0]["match_dense"] = False
+    bad = regress.check_payload(degraded, _history_of(PAYLOAD))
+    assert len(bad) == 3
+    joined = "\n".join(bad)
+    assert "paged.tok_s" in joined and "throughput regression" in joined
+    assert "paged.ttft_ms_p95" in joined and "latency regression" in joined
+    assert "match_dense" in joined and "falsy" in joined
+
+
+def test_gate_skips_unknown_bench_and_new_cells():
+    assert regress.check_payload(PAYLOAD, {}) == []    # no history yet
+    grown = json.loads(json.dumps(PAYLOAD))
+    grown["paged"]["req_s"] = 1.0              # new cell, no baseline
+    assert regress.check_payload(grown, _history_of(PAYLOAD)) == []
+
+
+def test_check_files_end_to_end(tmp_path):
+    hist = tmp_path / "BENCH_history.jsonl"
+    good = tmp_path / "BENCH_toy.json"
+    good.write_text(json.dumps(PAYLOAD))
+    regress.record(PAYLOAD, str(hist))
+    assert regress.check_files([str(good)], str(hist)) == []
+    degraded = json.loads(json.dumps(PAYLOAD))
+    degraded["paged"]["tok_s"] = 1.0
+    good.write_text(json.dumps(degraded))
+    bad = regress.check_files([str(good)], str(hist))
+    assert bad and "toy:paged.tok_s" in bad[0]
+
+
+# ---------------------------------------------------------------------------
+# the committed baseline: what CI actually gates on
+# ---------------------------------------------------------------------------
+
+def test_committed_payloads_pass_committed_history():
+    """The repo's own BENCH_*.json must pass against the repo's own
+    BENCH_history.jsonl — this is exactly what ``launch/dryrun.py
+    --check-bench`` (and ``benchmarks/run.py --check``) run in CI."""
+    hist = REPO / "BENCH_history.jsonl"
+    assert hist.exists(), "committed BENCH_history.jsonl is missing"
+    paths = regress.discover(str(REPO))
+    assert len(paths) >= 4, "committed BENCH payloads went missing"
+    bad = regress.check_files(paths, str(hist))
+    assert bad == [], "committed payloads regress vs committed history:" \
+        "\n" + "\n".join(bad)
+
+
+def test_committed_history_covers_key_cells():
+    hist = regress.load_history(str(REPO / "BENCH_history.jsonl"))
+    serving = regress.baseline(hist["serving"])
+    gated = [c for c in serving if regress.rule_for(c)]
+    # the headline serving cells the issue names are actually gated
+    assert any(c.endswith(".tok_s") for c in gated)
+    assert any(c.endswith("ttft_ms_p95") for c in gated)
+    assert any(c.endswith("tpot_ms_p95") for c in gated)
+    assert any("prefill_reduction_x" in c for c in gated)
+    assert any(c.endswith("req_s") for c in gated)
+
+
+def test_dryrun_check_bench_entrypoint(capsys):
+    """--check-bench loads regress.py by file path and gates the
+    committed payloads; it must exit 0 on the committed tree."""
+    import os
+    import sys
+    sys.modules.pop("repro.launch.dryrun", None)
+    prev_flags = os.environ.get("XLA_FLAGS")
+    os.environ["REPRO_DRYRUN_DEVICES"] = "1"
+    try:
+        from repro.launch import dryrun
+        code = dryrun.check_bench(str(REPO))
+    finally:
+        os.environ.pop("REPRO_DRYRUN_DEVICES", None)
+        # the dryrun module sets XLA_FLAGS at import; jax is long since
+        # initialized here (inert in-process) but restore it anyway
+        if prev_flags is None:
+            os.environ.pop("XLA_FLAGS", None)
+        else:
+            os.environ["XLA_FLAGS"] = prev_flags
+    out = capsys.readouterr().out
+    assert code == 0
+    assert "[regress] PASS" in out
