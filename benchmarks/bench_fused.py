@@ -2,9 +2,11 @@
 three-dispatch pipeline (hd_preprocess -> structured.matvec -> pointwise f)
 vs the dense O(mn) matmul, per structured kind x epilogue.
 
-Emits machine-readable ``BENCH_fused.json`` (per-kind / per-epilogue us)
-so the perf trajectory accumulates across PRs, plus the CSV rows of the
-bench harness. ``python -m benchmarks.bench_fused`` runs the full
+Emits machine-readable ``BENCH_fused.json`` (per-kind / per-epilogue us,
+plus the seeded-vs-materialized cell: zero-storage in-kernel
+regeneration throughput ratio, weight-bytes reduction, and the
+seeded==oracle bit-match invariant) so the perf trajectory accumulates
+across PRs, plus the CSV rows of the bench harness. ``python -m benchmarks.bench_fused`` runs the full
 acceptance shape (B=256, n=1024, m=4096); the run.py suite calls
 ``run()`` which uses a small smoke shape to keep the suite fast.
 
@@ -130,6 +132,47 @@ def _bench_one(kind: str, epilogue: str, b: int, n: int, m: int,
             "speedup_vs_dense": round(dense_us / fused_us, 3)}
 
 
+def _bench_seeded(b: int, n: int, m: int, reps: int, patience: int,
+                  max_reps: int) -> Dict:
+    """Seeded (in-kernel regenerated, zero-storage) vs materialized fused
+    spinner on the same shape/route: throughput ratio plus the weight-
+    bytes reduction the seed mode buys, and the bit-match invariant the
+    whole mode rests on (seeded == materialized generator-oracle)."""
+    from repro.kernels import seedgen
+    pipe_m = spinner.single("circulant", m=m, n=n, f="cos_sin")
+    pipe_s = spinner.single("circulant", m=m, n=n, f="cos_sin", seeded=True)
+    params_m = pipe_m.init(jax.random.PRNGKey(0))
+    params_s = pipe_s.init(jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (b, n)) * 0.3
+    use_pallas = None if jax.default_backend() == "tpu" else False
+
+    def mat(p, xx):
+        return pipe_m.apply(p, xx, use_pallas=use_pallas)
+
+    def seeded(p, xx):
+        return pipe_s.apply(p, xx, use_pallas=use_pallas)
+
+    mat_us, seeded_us = _time_interleaved(
+        [(mat, (params_m, x)), (seeded, (params_s, x))],
+        reps=reps, patience=patience, max_reps=max_reps)
+
+    bytes_of = lambda params: sum(
+        int(l.size) * l.dtype.itemsize
+        for l in jax.tree_util.tree_leaves(params))
+    wb_m, wb_s = bytes_of(params_m), bytes_of(params_s)
+    oracle = (seedgen.seeded_params("circulant", n, m,
+                                    params_s[0]["seed"]),)
+    bit = bool(jnp.array_equal(pipe_s.apply(params_s, x, use_pallas=False),
+                               pipe_m.apply(oracle, x, use_pallas=False)))
+    return {"materialized_us": round(mat_us, 1),
+            "seeded_us": round(seeded_us, 1),
+            "speedup_vs_materialized": round(mat_us / seeded_us, 3),
+            "weight_bytes_materialized": wb_m,
+            "weight_bytes_seeded": wb_s,
+            "weight_bytes_reduction_x": round(wb_m / wb_s, 1),
+            "oracle_bitmatch": bit}
+
+
 def bench(shape=FULL_SHAPE, kinds=KINDS, epilogues=EPILOGUES,
           reps: int = 15, smoke: bool = False) -> Dict:
     b, n, m = shape
@@ -147,6 +190,7 @@ def bench(shape=FULL_SHAPE, kinds=KINDS, epilogues=EPILOGUES,
         "shape": {"batch": b, "n": n, "m": m},
         "plan": {k: list(kops.spinner_plan(k, n, m)) for k in kinds},
         "results": results,
+        "seeded": _bench_seeded(b, n, m, reps, patience, max_reps),
     }
     default = "BENCH_fused_smoke.json" if smoke else "BENCH_fused.json"
     path = os.environ.get("REPRO_BENCH_FUSED_JSON", default)
@@ -158,11 +202,19 @@ def bench(shape=FULL_SHAPE, kinds=KINDS, epilogues=EPILOGUES,
 
 def _rows(payload: Dict) -> List[str]:
     b, n, m = (payload["shape"][k] for k in ("batch", "n", "m"))
-    return [f"fused/{r['kind']}/{r['epilogue']}/{b}x{n}x{m},"
+    rows = [f"fused/{r['kind']}/{r['epilogue']}/{b}x{n}x{m},"
             f"{r['fused_us']:.1f},"
             f"unfused_us={r['unfused_us']:.1f};dense_us={r['dense_us']:.1f};"
             f"speedup={r['speedup_vs_unfused']:.2f}"
             for r in payload["results"]]
+    s = payload["seeded"]
+    rows.append(
+        f"fused/seeded/circulant/cos_sin/{b}x{n}x{m},{s['seeded_us']:.1f},"
+        f"materialized_us={s['materialized_us']:.1f};"
+        f"speedup={s['speedup_vs_materialized']:.2f};"
+        f"weight_bytes_reduction_x={s['weight_bytes_reduction_x']:.0f};"
+        f"oracle_bitmatch={int(s['oracle_bitmatch'])}")
+    return rows
 
 
 def run() -> List[str]:

@@ -23,6 +23,9 @@ class SRFAttnConfig:
     feature: str = "softmax_pos"
     r: int = 1                      # displacement rank (ldr)
     chunk: int = 128                # causal chunk
+    seeded: bool = False            # zero-storage projections regenerated
+                                    # from one uint32 seed per head; unlocks
+                                    # per-request embed_seed personalization
 
 
 @dataclass(frozen=True)

@@ -203,6 +203,12 @@ class SpinnerBlock:
     use ``scale = 1/sqrt(n)`` to stay variance-preserving — a raw
     row-Gaussian block multiplies input norms by ~sqrt(n), which would
     de-calibrate every kernel estimator downstream of a deep stack.
+
+    ``seeded=True`` is the zero-storage mode: ``init`` samples ONE uint32
+    seed instead of arrays, and every matrix entry (generator core AND
+    the HD diagonals) is regenerated at its position inside the kernel
+    (``kernels.seedgen``). ``materialize`` / diagnostics rebuild the
+    oracle params transiently. Builtin kinds only.
     """
     kind: str = "circulant"
     m: int = 128
@@ -211,6 +217,7 @@ class SpinnerBlock:
     use_hd: bool = True           # paper Step-1 preconditioner
     ldr_nnz: int = 4
     scale: float = 1.0            # fixed output scaling (fused)
+    seeded: bool = False          # zero-storage: params are one uint32 seed
 
     def __post_init__(self):
         kind_def(self.kind)       # raises on unknown kinds
@@ -219,6 +226,11 @@ class SpinnerBlock:
                              f"m={self.m}, n={self.n}")
         if self.use_hd and not transforms.is_pow2(self.n):
             raise ValueError(f"use_hd requires power-of-two n, got {self.n}")
+        if self.seeded and self.kind not in structured.KINDS:
+            raise ValueError(
+                f"seeded mode regenerates params positionally and only "
+                f"supports builtin kinds {structured.KINDS}, got "
+                f"{self.kind!r}")
 
     # --- accounting ---------------------------------------------------------
 
@@ -229,6 +241,8 @@ class SpinnerBlock:
 
     @property
     def storage(self) -> int:
+        if self.seeded:           # one uint32 seed regenerates everything
+            return 1
         base = int(kind_def(self.kind).storage(self.m, self.n, self.r))
         return base + (2 * self.n if self.use_hd else 0)
 
@@ -243,6 +257,12 @@ class SpinnerBlock:
     # --- protocol -----------------------------------------------------------
 
     def init(self, rng: jax.Array, dtype=jnp.float32) -> Dict[str, jax.Array]:
+        if self.seeded:
+            # the WHOLE parameterization is one uint32 scalar; dtype only
+            # governs activations (seeded generation is always f32)
+            seed = jax.random.randint(rng, (), 0, jnp.iinfo(jnp.int32).max,
+                                      dtype=jnp.int32)
+            return {"seed": seed.astype(jnp.uint32)}
         kg, k0, k1 = jax.random.split(rng, 3)
         params = kind_def(self.kind).init(kg, self.m, self.n, self.r,
                                           self.ldr_nnz, dtype)
@@ -250,6 +270,18 @@ class SpinnerBlock:
             params["d0"] = transforms.sample_signs(k0, self.n, dtype)
             params["d1"] = transforms.sample_signs(k1, self.n, dtype)
         return params
+
+    def _oracle_params(self, params: Dict[str, jax.Array]
+                       ) -> Dict[str, jax.Array]:
+        """Seeded blocks: the materialized twin of the seed (transient,
+        ``structured.init`` shapes). Materialized blocks: passthrough."""
+        if not self.seeded:
+            return params
+        from repro.kernels import seedgen           # deferred: kernels import core
+        return seedgen.seeded_params(self.kind, self.n, self.m,
+                                     params["seed"], r=self.r,
+                                     ldr_nnz=self.ldr_nnz,
+                                     use_hd=self.use_hd)
 
     def apply(self, params: Dict[str, jax.Array], x: jax.Array, *,
               epilogue: str = "identity", y_scale: float = 1.0,
@@ -264,6 +296,13 @@ class SpinnerBlock:
         if x.shape[-1] != self.n:
             raise ValueError(f"expected last dim {self.n}, got {x.shape}")
         y_scale = float(self.scale) * y_scale     # block scaling, fused
+        if self.seeded:
+            from repro.kernels import ops as kops   # deferred: kernels import core
+            return kops.spinner_project_seeded(
+                self.kind, params["seed"], x, self.m, r=self.r,
+                ldr_nnz=self.ldr_nnz, use_hd=self.use_hd, epilogue=epilogue,
+                y_scale=y_scale, out_scale=out_scale, grouped=grouped,
+                use_pallas=use_pallas)
         if kind_def(self.kind).fused:
             from repro.kernels import ops as kops   # deferred: kernels import core
             return kops.spinner_project(self.kind, params, x, self.m,
@@ -295,7 +334,9 @@ class SpinnerBlock:
         return one(params, x)
 
     def materialize(self, params: Dict[str, jax.Array]) -> jax.Array:
-        """Dense (m, n) matrix of the whole block scale . A . [D1 H D0]."""
+        """Dense (m, n) matrix of the whole block scale . A . [D1 H D0].
+        Seeded blocks regenerate the oracle params on demand."""
+        params = self._oracle_params(params)
         a = kind_def(self.kind).materialize(params, self.m, self.n)
         if self.use_hd:
             h = transforms.hadamard(self.n, a.dtype)
@@ -306,6 +347,7 @@ class SpinnerBlock:
 
     def row_gaussianity_moments(self, params) -> Tuple[jax.Array, jax.Array]:
         """Per-row mean/var of A (each row ~ N(0, I) by Def. 1)."""
+        params = self._oracle_params(params)
         a = kind_def(self.kind).materialize(params, self.m, self.n)
         return a.mean(axis=1), a.var(axis=1)
 
@@ -503,9 +545,10 @@ def as_pipeline(obj) -> SpinnerPipeline:
 
 def single(kind: str = "circulant", m: int = 128, n: int = 128, *,
            r: int = 1, use_hd: bool = True, ldr_nnz: int = 4,
-           f: str = "identity") -> SpinnerPipeline:
+           f: str = "identity", seeded: bool = False) -> SpinnerPipeline:
     """The paper's P-model: one structured block + f."""
-    return SpinnerPipeline((SpinnerBlock(kind, m, n, r, use_hd, ldr_nnz),), f)
+    return SpinnerPipeline(
+        (SpinnerBlock(kind, m, n, r, use_hd, ldr_nnz, seeded=seeded),), f)
 
 
 def chain(blocks: Sequence[SpinnerBlock], f: str = "identity"
@@ -515,7 +558,8 @@ def chain(blocks: Sequence[SpinnerBlock], f: str = "identity"
 
 def hd_chain(kind: str = "circulant", n: int = 128, m: int = 128,
              depth: int = 3, *, r: int = 1, ldr_nnz: int = 4,
-             use_hd: bool = True, f: str = "identity") -> SpinnerPipeline:
+             use_hd: bool = True, f: str = "identity",
+             seeded: bool = False) -> SpinnerPipeline:
     """Stacked construction  HD_k ... HD_2 HD_1  (TripleSpin at depth 3):
     ``depth - 1`` square (n -> n) spinner blocks followed by one
     (n -> m) block, every block carrying its own preconditioner
@@ -528,10 +572,11 @@ def hd_chain(kind: str = "circulant", n: int = 128, m: int = 128,
     if depth < 1:
         raise ValueError(f"depth must be >= 1, got {depth}")
     inv = 1.0 / math.sqrt(n)
-    sq = tuple(SpinnerBlock(kind, n, n, r, use_hd, ldr_nnz, scale=inv)
+    sq = tuple(SpinnerBlock(kind, n, n, r, use_hd, ldr_nnz, scale=inv,
+                            seeded=seeded)
                for _ in range(depth - 1))
     return SpinnerPipeline(
-        sq + (SpinnerBlock(kind, m, n, r, use_hd, ldr_nnz),), f)
+        sq + (SpinnerBlock(kind, m, n, r, use_hd, ldr_nnz, seeded=seeded),), f)
 
 
 # ---------------------------------------------------------------------------

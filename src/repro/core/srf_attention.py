@@ -40,6 +40,8 @@ class SRFConfig:
     chunk: int = 128            # causal chunk length
     depth: int = 1              # spinner blocks (depth > 1: stacked d -> d
                                 # blocks before the d -> m projection)
+    seeded: bool = False        # zero-storage projections (params are one
+                                # uint32 seed per head per block)
 
     @property
     def pipeline(self) -> spinner.SpinnerPipeline:
@@ -48,7 +50,8 @@ class SRFConfig:
         see spinner.hd_chain) so softmax features stay calibrated."""
         return spinner.hd_chain(self.kind, n=self.head_dim,
                                 m=self.n_features, depth=self.depth,
-                                r=self.r, use_hd=self.use_hd)
+                                r=self.r, use_hd=self.use_hd,
+                                seeded=self.seeded)
 
     @property
     def spec(self):
@@ -73,17 +76,49 @@ def init(rng: jax.Array, cfg: SRFConfig, n_kv_heads: int,
     return jax.vmap(lambda k: pipe.init(k, dtype))(keys)
 
 
-def feature_map(cfg: SRFConfig, params, x: jax.Array, is_query: bool) -> jax.Array:
+def _fold_embed(params, embed_seeds: jax.Array, h: int):
+    """Personalize per-head seed params with per-request embed seeds.
+
+    Each block's ``{"seed": (H,)}`` becomes ``{"seed": (H*B,)}``: seed 0 is
+    the sentinel for "base projection" (the head seed passes through
+    unfolded), any other value derives an independent per-(head, request)
+    sub-stream via ``seedgen.fold_seed``. One ``jnp.where`` keeps mixed
+    batches (some personalized, some base) in a single jit program."""
+    from repro.kernels import seedgen                    # deferred
+    e = jnp.asarray(embed_seeds, jnp.uint32)             # (B,)
+
+    def fold_leaf(hs):                                   # (H,) -> (H*B,)
+        folded = seedgen.fold_seed(hs[:, None], e[None, :])
+        return jnp.where(e[None, :] == 0, hs[:, None], folded).reshape(-1)
+
+    return tuple({"seed": fold_leaf(p["seed"])} for p in params)
+
+
+def feature_map(cfg: SRFConfig, params, x: jax.Array, is_query: bool,
+                embed_seeds=None) -> jax.Array:
     """(B, H, L, d) -> (B, H, L, feat_dim). Softmax-kernel scaling d^-1/4 is
     folded in so phi(q).phi(k) ~ exp(q.k/sqrt(d)) (up to a global constant
     that cancels in the normalizer).
 
     All H per-head pipelines run as ONE grouped fused-spinner dispatch per
     block (kernels.ops.spinner_project: HD + implicit-tile projection + f
-    in a single pass) instead of a vmap of per-head projection pipelines."""
+    in a single pass) instead of a vmap of per-head projection pipelines.
+
+    ``embed_seeds``: optional (B,) uint32 per-request projection seeds
+    (seeded mode only; 0 = base projection). When given, groups become
+    per-(head, request) so every request runs its own personalized
+    zero-storage projection — still one dispatch per block, no
+    materialized weights."""
     scale = cfg.head_dim ** -0.25
     b, h, l, d = x.shape
-    xg = x.transpose(1, 0, 2, 3).reshape(h, b * l, d)    # head-major groups
+    if embed_seeds is not None:
+        if not cfg.seeded:
+            raise ValueError("embed_seeds requires SRFConfig.seeded=True")
+        # (head, request)-major groups: G = H*B, one seed per group
+        xg = x.transpose(1, 0, 2, 3).reshape(h * b, l, d)
+        params = _fold_embed(params, embed_seeds, h)
+    else:
+        xg = x.transpose(1, 0, 2, 3).reshape(h, b * l, d)  # head-major groups
     pipe = cfg.pipeline
 
     if cfg.feature == "softmax_pos":

@@ -27,6 +27,7 @@ from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import transforms
 from repro.obs import profiling as _prof
@@ -35,6 +36,7 @@ from . import circulant as _circ
 from . import fwht as _fwht
 from . import paged_gather as _pgather
 from . import ref as _ref
+from . import seedgen as _seedgen
 from . import spinner as _spin
 from . import srf_decode as _dec
 
@@ -163,7 +165,7 @@ _plan_cache: Dict[tuple, Tuple[int, int]] = {}
 
 def _spinner_vmem_bytes(kind: str, n: int, m: int, tb: int, tm: int,
                         use_hd: bool, epilogue: str,
-                        itemsize: int = 4) -> int:
+                        itemsize: int = 4, seeded: bool = False) -> int:
     """Resident bytes of one spinner program (VMEM feasibility model).
 
     Input/output tiles, generators, and d0/d1 are VMEM-resident at the
@@ -184,6 +186,11 @@ def _spinner_vmem_bytes(kind: str, n: int, m: int, tb: int, tm: int,
         by += (a * a + b * b) * f32                  # hadamard factors
         by += 2 * n * itemsize                       # d0 / d1
         by += tb * n * f32                           # sandwich intermediate
+    if seeded:
+        # no resident generators; the counter-PRNG's uint32 grids and
+        # Box-Muller temporaries live alongside the regenerated tile
+        by += 2 * tm * n * 4
+        return by
     if kind in ("circulant", "skew_circulant"):
         by += 2 * n * -(-m // n) * itemsize          # doubled generators
     elif kind in ("toeplitz", "hankel"):
@@ -194,7 +201,8 @@ def _spinner_vmem_bytes(kind: str, n: int, m: int, tb: int, tm: int,
 
 def spinner_plan(kind: str, n: int, m: int, *, use_hd: bool = True,
                  epilogue: str = "identity", dtype=jnp.float32,
-                 budget: int = _VMEM_BUDGET) -> Tuple[int, int]:
+                 budget: int = _VMEM_BUDGET,
+                 seeded: bool = False) -> Tuple[int, int]:
     """Pick (block_b, block_m) for the spinner kernel: sweep the candidate
     grid against the VMEM budget, preferring large row tiles (they
     amortize grid overhead) then large batch tiles. Cached per shape AND
@@ -202,7 +210,7 @@ def spinner_plan(kind: str, n: int, m: int, *, use_hd: bool = True,
     the two must not share a plan (a bf16 warm-up would hand f32 an
     over-budget block). Serving factories pre-warm it (launch/steps.py)."""
     dt = jnp.dtype(dtype)
-    key = (kind, n, m, use_hd, epilogue, dt.name, budget)
+    key = (kind, n, m, use_hd, epilogue, dt.name, budget, seeded)
     if key in _plan_cache:
         return _plan_cache[key]
     best = (_BLOCK_B_CANDIDATES[-1], _BLOCK_M_CANDIDATES[-1])
@@ -212,7 +220,7 @@ def spinner_plan(kind: str, n: int, m: int, *, use_hd: bool = True,
             break
         for tb in _BLOCK_B_CANDIDATES:
             if _spinner_vmem_bytes(kind, n, m, tb, min(tm, m), use_hd,
-                                   epilogue, dt.itemsize) <= budget:
+                                   epilogue, dt.itemsize, seeded) <= budget:
                 best = (tb, tm)
                 found = True
                 break
@@ -333,3 +341,120 @@ def spinner_project(kind: str, params: Dict[str, jax.Array], x: jax.Array,
                               y_scale=y_scale, out_scale=out_scale,
                               grouped=grouped, route=route,
                               block_b=block_b, block_m=block_m))
+
+
+# ---------------------------------------------------------------------------
+# seed mode: zero-storage spinner (one uint32 per projection)
+# ---------------------------------------------------------------------------
+
+def _spinner_seeded_vjp(kind: str, m: int, r: int, ldr_nnz: int,
+                        use_hd: bool, epilogue: str, y_scale: float,
+                        out_scale: float, tb: int, tm: int, interpret: bool):
+    """Seeded Pallas forward + jnp-reference backward. The backward
+    regenerates the oracle params from the seeds and differentiates the
+    materialized reference w.r.t. x only — the seeds are integers, their
+    cotangent is the symbolic float0 zero."""
+    fwd_fn = functools.partial(
+        _spin.spinner_project_seeded_pallas, kind, m=m, use_hd=use_hd,
+        epilogue=epilogue, y_scale=y_scale, out_scale=out_scale,
+        block_b=tb, block_m=tm, interpret=interpret)
+
+    @jax.custom_vjp
+    def f(seeds, x):
+        return fwd_fn(seeds, x)
+
+    def fwd(seeds, x):
+        return f(seeds, x), (seeds, x)
+
+    def bwd(res, dy):
+        seeds, x = res
+        n = x.shape[-1]
+        params = _seedgen.grouped_params(kind, n, m, seeds, r=r,
+                                         ldr_nnz=ldr_nnz, use_hd=use_hd)
+        _, vjp = jax.vjp(
+            lambda xx: _ref.spinner_project_ref(
+                kind, params["g"], xx, m, d0=params.get("d0"),
+                d1=params.get("d1"), h=params.get("h"), epilogue=epilogue,
+                y_scale=y_scale, out_scale=out_scale), x)
+        dx, = vjp(dy)
+        return np.zeros(seeds.shape, jax.dtypes.float0), dx
+
+    f.defvjp(fwd, bwd)
+    return f
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "kind", "m", "r", "ldr_nnz", "use_hd", "epilogue", "y_scale",
+    "out_scale", "grouped", "route", "block_b", "block_m"))
+def _spinner_seeded_call(kind, seeds, x, m, *, r, ldr_nnz, use_hd, epilogue,
+                         y_scale, out_scale, grouped, route, block_b,
+                         block_m):
+    """Single jit entry for the seeded routes (mirror of _spinner_call)."""
+    n = x.shape[-1]
+    if grouped:
+        gsz, lead = x.shape[0], x.shape[1:-1]
+        xf = x.reshape(gsz, -1, n)
+        sd = seeds.astype(jnp.uint32).reshape(gsz)
+    else:
+        gsz, lead = 1, x.shape[:-1]
+        xf = x.reshape(1, -1, n)
+        sd = jnp.asarray(seeds, jnp.uint32).reshape(1)
+    if route == "ref":
+        y = _ref.spinner_project_seeded_ref(kind, sd, xf, m, r=r,
+                                            ldr_nnz=ldr_nnz, use_hd=use_hd,
+                                            epilogue=epilogue,
+                                            y_scale=y_scale,
+                                            out_scale=out_scale)
+    else:
+        fn = _spinner_seeded_vjp(kind, m, r, ldr_nnz, use_hd, epilogue,
+                                 y_scale, out_scale, block_b, block_m,
+                                 interpret=(route == "interpret"))
+        y = fn(sd, xf)
+    out_dim = 2 * m if epilogue == "cos_sin" else m
+    shape = ((gsz,) + lead + (out_dim,)) if grouped else (lead + (out_dim,))
+    return y.reshape(shape)
+
+
+def spinner_project_seeded(kind: str, seeds: jax.Array, x: jax.Array,
+                           m: int, *, r: int = 1, ldr_nnz: int = 4,
+                           use_hd: bool = True, epilogue: str = "identity",
+                           y_scale: float = 1.0, out_scale: float = 1.0,
+                           grouped: bool = False,
+                           use_pallas: Optional[bool] = None,
+                           block_b: Optional[int] = None,
+                           block_m: Optional[int] = None) -> jax.Array:
+    """Zero-storage  f(y_scale * A . D1 H D0 . x) * out_scale  where the
+    whole projection — generator core AND the HD Rademacher diagonals —
+    is regenerated on the fly from ``seeds`` (uint32; scalar, or (G,)
+    with ``grouped=True``). No (m,)- or (m,n)-sized parameter tensor ever
+    exists: the Pallas routes generate entries in VMEM per tile; the ref
+    route materializes the oracle params transiently inside its trace.
+
+    Same routing contract as :func:`spinner_project` (``ldr`` and custom
+    shapes take the ref path); bit-identical to running the materialized
+    spinner on ``kernels.seedgen.seeded_params(...)`` on the interpret /
+    ref routes. Differentiable w.r.t. ``x``.
+    """
+    n = x.shape[-1]
+    work = (x.size // n) * n * m
+
+    pallas_ok = (kind in _spin.PALLAS_KINDS
+                 and (not use_hd or transforms.is_pow2(n))
+                 and n <= 8192 and n + m - 1 <= (1 << 22))
+    route = _route(use_pallas, work, auto_interpret=False)
+    if not pallas_ok:
+        route = "ref"
+    if route != "ref" and (block_b is None or block_m is None):
+        auto_b, auto_m = spinner_plan(kind, n, m, use_hd=use_hd,
+                                      epilogue=epilogue, dtype=x.dtype,
+                                      seeded=True)
+        block_b = block_b or auto_b
+        block_m = block_m or auto_m
+    return _prof.dispatch(
+        "spinner_project_seeded",
+        lambda: _spinner_seeded_call(kind, seeds, x, m, r=r,
+                                     ldr_nnz=ldr_nnz, use_hd=use_hd,
+                                     epilogue=epilogue, y_scale=y_scale,
+                                     out_scale=out_scale, grouped=grouped,
+                                     route=route, block_b=block_b,
+                                     block_m=block_m))

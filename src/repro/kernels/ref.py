@@ -147,6 +147,28 @@ def spinner_project_ref(kind: str, g: jax.Array, x: jax.Array, m: int,
     return jax.vmap(fn, in_axes=axes)(g, h, d0, d1, x)
 
 
+def spinner_project_seeded_ref(kind: str, seeds: jax.Array, x: jax.Array,
+                               m: int, *, r: int = 1, ldr_nnz: int = 4,
+                               use_hd: bool = True,
+                               epilogue: str = "identity",
+                               y_scale: float = 1.0,
+                               out_scale: float = 1.0) -> jax.Array:
+    """Seed-mode reference: rebuild the exact param dict the seed encodes
+    (``kernels.seedgen.seeded_params`` — the generator oracle) and run the
+    materialized reference on it. Params exist only transiently inside
+    the trace; nothing is stored between calls. Bit-identical to calling
+    :func:`spinner_project_ref` on the oracle params by construction, and
+    differentiable w.r.t. ``x`` (the generation subgraph is constant)."""
+    from . import seedgen
+    n = x.shape[-1]
+    params = seedgen.grouped_params(kind, n, m, seeds.reshape(-1), r=r,
+                                    ldr_nnz=ldr_nnz, use_hd=use_hd)
+    return spinner_project_ref(kind, params["g"], x, m,
+                               d0=params.get("d0"), d1=params.get("d1"),
+                               h=params.get("h"), epilogue=epilogue,
+                               y_scale=y_scale, out_scale=out_scale)
+
+
 def srf_decode_ref(s: jax.Array, z: jax.Array, phi_q: jax.Array,
                    phi_k: jax.Array, v: jax.Array, eps: float = 1e-6
                    ) -> Tuple[jax.Array, jax.Array, jax.Array]:

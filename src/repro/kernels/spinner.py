@@ -51,6 +51,8 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core import transforms
 
+from . import seedgen
+
 EPILOGUES = ("identity", "relu", "heaviside", "sign", "exp", "cos_sin")
 PALLAS_KINDS = ("circulant", "skew_circulant", "toeplitz", "hankel",
                 "unstructured")
@@ -94,6 +96,18 @@ def _regen_tile(kind, gt, j, *, n, m, tm, nb, gl):
     raise ValueError(kind)
 
 
+def _write_tile(o_ref, y, epilogue: str, sq_ref, out_scale: float):
+    """Fused epilogue + the single write-back (shared by the materialized
+    and the seeded kernels — identical tail, bit for bit)."""
+    if epilogue == "cos_sin":
+        s = out_scale
+        o_ref[0, :, 0, :] = (jnp.cos(y) * s).astype(o_ref.dtype)
+        o_ref[0, :, 1, :] = (jnp.sin(y) * s).astype(o_ref.dtype)
+    else:
+        sq = sq_ref[...] if epilogue == "exp" else None
+        o_ref[0] = _apply_epilogue(y, epilogue, sq, out_scale).astype(o_ref.dtype)
+
+
 def _spinner_kernel(*refs, kind: str, n: int, m: int, tb: int, tm: int,
                     a: int, b: int, nb: int, gl: int, use_hd: bool,
                     epilogue: str, y_scale: float, out_scale: float):
@@ -132,13 +146,7 @@ def _spinner_kernel(*refs, kind: str, n: int, m: int, tb: int, tm: int,
                             preferred_element_type=jnp.float32)  # (tb, tm)
     if y_scale != 1.0:
         y = y * y_scale
-    if epilogue == "cos_sin":
-        s = out_scale
-        o_ref[0, :, 0, :] = (jnp.cos(y) * s).astype(o_ref.dtype)
-        o_ref[0, :, 1, :] = (jnp.sin(y) * s).astype(o_ref.dtype)
-    else:
-        sq = sq_ref[...] if epilogue == "exp" else None
-        o_ref[0] = _apply_epilogue(y, epilogue, sq, out_scale).astype(o_ref.dtype)
+    _write_tile(o_ref, y, epilogue, sq_ref, out_scale)
 
 
 def _gen_table(kind: str, g: jax.Array, n: int) -> jax.Array:
@@ -218,6 +226,127 @@ def spinner_project_pallas(kind: str, g: jax.Array, x: jax.Array, m: int,
     kernel = functools.partial(
         _spinner_kernel, kind=kind, n=n, m=m, tb=tb, tm=tm, a=a, b=b,
         nb=nb, gl=gl, use_hd=use_hd, epilogue=epilogue,
+        y_scale=y_scale, out_scale=out_scale)
+    y = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        scratch_shapes=[pltpu.VMEM((tb, n), jnp.float32),
+                        pltpu.VMEM((tb, 1), jnp.float32)],
+        interpret=interpret,
+    )(*inputs)
+    if epilogue == "cos_sin":
+        y = y.reshape(gsz, bsz, 2 * m)           # row-major: [cos | sin]
+    return y
+
+
+# ---------------------------------------------------------------------------
+# seed mode: regenerate g / D0 / D1 from a 32-bit seed INSIDE the kernel
+# ---------------------------------------------------------------------------
+
+def _seeded_spinner_kernel(*refs, kind: str, n: int, m: int, tb: int,
+                           tm: int, a: int, b: int, nb: int, use_hd: bool,
+                           epilogue: str, y_scale: float, out_scale: float):
+    """The fused spinner with ZERO generator inputs: every A-tile entry
+    and both HD diagonals are regenerated in VMEM from the group's seed
+    via the counter-based PRNG (kernels/seedgen.py). HBM traffic is x in,
+    f(y) out, and one uint32 per group — the O(1)-storage limit of the
+    paper's randomness recycling.
+
+    Values are generated at FLAT PARAM POSITIONS, so they match the
+    materialized ``seedgen.seeded_params`` oracle bit for bit and are
+    independent of the (tb, tm) tiling the autotuner picks.
+    """
+    it = iter(refs)
+    x_ref = next(it)
+    seed_ref = next(it)                          # (1, 1) uint32 per group
+    if use_hd:
+        ha_ref, hb_ref = next(it), next(it)
+    o_ref = next(it)
+    hd_ref = next(it)                            # VMEM scratch (tb, n) f32
+    sq_ref = next(it)                            # VMEM scratch (tb, 1) f32
+    j = pl.program_id(2)
+    seed = seed_ref[0, 0]
+
+    @pl.when(j == 0)
+    def _hd():                                   # once per (group, batch tile)
+        x = x_ref[0].astype(jnp.float32)         # (tb, n)
+        if epilogue == "exp":                    # ||v|| = ||x|| (HD isometry)
+            sq_ref[...] = 0.5 * jnp.sum(x * x, axis=-1, keepdims=True)
+        if use_hd:
+            pos = jax.lax.broadcasted_iota(jnp.int32, (1, n), 1)
+            d0 = seedgen.sign_at(seed, seedgen.DOM_D0, pos)
+            d1 = seedgen.sign_at(seed, seedgen.DOM_D1, pos)
+            u = x * d0
+            z = jnp.dot(u.reshape(tb * a, b), hb_ref[...],
+                        preferred_element_type=jnp.float32)
+            z = z.reshape(tb, a, b).transpose(0, 2, 1).reshape(tb * b, a)
+            w = jnp.dot(z, ha_ref[...], preferred_element_type=jnp.float32)
+            w = w.reshape(tb, b, a).transpose(0, 2, 1).reshape(tb, n)
+            x = w * (1.0 / math.sqrt(n)) * d1
+        hd_ref[...] = x
+
+    v = hd_ref[...]                              # (tb, n) f32
+    rows = j * tm + jax.lax.broadcasted_iota(jnp.int32, (tm, n), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (tm, n), 1)
+    tile = seedgen.gen_tile(kind, seed, rows, cols, n=n, m=m, nb=nb)
+    y = jax.lax.dot_general(v, tile, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (tb, tm)
+    if y_scale != 1.0:
+        y = y * y_scale
+    _write_tile(o_ref, y, epilogue, sq_ref, out_scale)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "kind", "m", "use_hd", "epilogue", "y_scale", "out_scale",
+    "block_b", "block_m", "interpret"))
+def spinner_project_seeded_pallas(kind: str, seeds: jax.Array, x: jax.Array,
+                                  m: int, use_hd: bool = True,
+                                  epilogue: str = "identity",
+                                  y_scale: float = 1.0,
+                                  out_scale: float = 1.0,
+                                  block_b: int = 256, block_m: int = 512,
+                                  interpret: bool = True) -> jax.Array:
+    """Seed-mode twin of :func:`spinner_project_pallas`.
+
+    x: (G, B, n) -> (G, B, m) ((G, B, 2m) for cos_sin); ``seeds``: (G,)
+    uint32, one independent projection per group. No generator, d0 or d1
+    tensors exist anywhere — each grid step regenerates what it consumes.
+    """
+    assert epilogue in EPILOGUES, epilogue
+    assert kind in PALLAS_KINDS, kind
+    gsz, bsz, n = x.shape
+    if use_hd:
+        assert transforms.is_pow2(n), f"HD needs power-of-two n, got {n}"
+    tb = min(block_b, bsz)
+    tm = min(block_m, m)
+    nb = -(-m // n) if kind in ("circulant", "skew_circulant") else 1
+    grid = (gsz, pl.cdiv(bsz, tb), pl.cdiv(m, tm))
+
+    in_specs = [pl.BlockSpec((1, tb, n), lambda gi, i, j: (gi, i, 0)),
+                pl.BlockSpec((1, 1), lambda gi, i, j: (gi, 0))]
+    inputs = [x, seeds.astype(jnp.uint32).reshape(gsz, 1)]
+    a = b = 1
+    if use_hd:
+        a, b = transforms.kron_factors(n)
+        ha = transforms.hadamard(a, jnp.float32, normalized=False)
+        hb = transforms.hadamard(b, jnp.float32, normalized=False)
+        in_specs += [pl.BlockSpec((a, a), lambda gi, i, j: (0, 0)),
+                     pl.BlockSpec((b, b), lambda gi, i, j: (0, 0))]
+        inputs += [ha, hb]
+
+    if epilogue == "cos_sin":
+        out_shape = jax.ShapeDtypeStruct((gsz, bsz, 2, m), x.dtype)
+        out_specs = pl.BlockSpec((1, tb, 2, tm), lambda gi, i, j: (gi, i, 0, j))
+    else:
+        out_shape = jax.ShapeDtypeStruct((gsz, bsz, m), x.dtype)
+        out_specs = pl.BlockSpec((1, tb, tm), lambda gi, i, j: (gi, i, j))
+
+    kernel = functools.partial(
+        _seeded_spinner_kernel, kind=kind, n=n, m=m, tb=tb, tm=tm, a=a, b=b,
+        nb=nb, use_hd=use_hd, epilogue=epilogue,
         y_scale=y_scale, out_scale=out_scale)
     y = pl.pallas_call(
         kernel,

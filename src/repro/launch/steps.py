@@ -45,7 +45,7 @@ def _prewarm_srf_spinner(cfg) -> None:
         epis = last if i == pipe.depth - 1 else ("identity",)
         for epi in epis:
             kops.spinner_plan(blk.kind, blk.n, blk.m, use_hd=blk.use_hd,
-                              epilogue=epi, dtype=dtype)
+                              epilogue=epi, dtype=dtype, seeded=blk.seeded)
 
 
 @dataclass(frozen=True)
@@ -141,12 +141,27 @@ def make_paged_step(cfg, mesh=None, paged=None, params_sds=None):
     ``params_sds`` (any tree of arrays or ShapeDtypeStructs, e.g. the
     engine's real params) supplies the parameter shapes the in_specs are
     derived from, avoiding an abstract re-trace of ``model.init``.
+
+    Seeded-SRF configs (``cfg.srf.seeded``) get an EIGHTH positional
+    argument ``embed_seeds (B,) uint32`` — per-request projection seeds
+    (0 = base projection); non-seeded configs keep the 7-arg signature
+    so existing call sites and jit caches are untouched.
     """
     _prewarm_srf_spinner(cfg)
+    seeded_srf = (getattr(cfg, "attn_impl", None) == "srf"
+                  and getattr(cfg.srf, "seeded", False))
 
-    def paged_step(params, pools, tokens, positions, q_valid, tables, slots):
-        return model.paged_step(params, cfg, pools, tokens, positions,
-                                q_valid, tables, slots)
+    if seeded_srf:
+        def paged_step(params, pools, tokens, positions, q_valid, tables,
+                       slots, embed_seeds):
+            return model.paged_step(params, cfg, pools, tokens, positions,
+                                    q_valid, tables, slots,
+                                    embed_seeds=embed_seeds)
+    else:
+        def paged_step(params, pools, tokens, positions, q_valid, tables,
+                       slots):
+            return model.paged_step(params, cfg, pools, tokens, positions,
+                                    q_valid, tables, slots)
 
     if mesh is None:
         return paged_step
@@ -167,13 +182,24 @@ def make_paged_step(cfg, mesh=None, paged=None, params_sds=None):
     poolspecs = mesh_shard.pool_specs(cfg, mesh, paged)
     rep = P()
 
-    def body(params, pools, tokens, positions, q_valid, tables, slots):
-        return model.paged_step(params, cfg_local, pools, tokens, positions,
-                                q_valid, tables, slots, tp_axis="model")
+    if seeded_srf:
+        def body(params, pools, tokens, positions, q_valid, tables, slots,
+                 embed_seeds):
+            return model.paged_step(params, cfg_local, pools, tokens,
+                                    positions, q_valid, tables, slots,
+                                    tp_axis="model",
+                                    embed_seeds=embed_seeds)
+        in_specs = (pspecs, poolspecs, rep, rep, rep, rep, rep, rep)
+    else:
+        def body(params, pools, tokens, positions, q_valid, tables, slots):
+            return model.paged_step(params, cfg_local, pools, tokens,
+                                    positions, q_valid, tables, slots,
+                                    tp_axis="model")
+        in_specs = (pspecs, poolspecs, rep, rep, rep, rep, rep)
 
     return collectives.axis_shard_map(
         body, mesh,
-        in_specs=(pspecs, poolspecs, rep, rep, rep, rep, rep),
+        in_specs=in_specs,
         out_specs=(rep, poolspecs),
         axes=set(mesh.axis_names))
 

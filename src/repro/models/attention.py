@@ -35,7 +35,8 @@ def srf_cfg(cfg) -> SRFConfig:
     dim = cfg.mla_qk_dim if cfg.is_mla else cfg.head_dim
     return SRFConfig(kind=cfg.srf.kind, n_features=cfg.srf.n_features,
                      head_dim=dim, feature=cfg.srf.feature, r=cfg.srf.r,
-                     use_hd=is_pow2(dim), chunk=cfg.srf.chunk)
+                     use_hd=is_pow2(dim), chunk=cfg.srf.chunk,
+                     seeded=cfg.srf.seeded)
 
 
 # ---------------------------------------------------------------------------
@@ -394,11 +395,14 @@ def attention(p, cfg, x: jax.Array, positions: jax.Array, mode: str,
             sc = srf_cfg(cfg)
             g = cfg.n_heads // cfg.n_kv_heads
             b_, hq_, l_, hd_ = q.shape
+            es = cache.get("embed_seeds")        # (B,) per-request seeds
             qg = q.reshape(b_, cfg.n_kv_heads, g * l_, hd_)
-            phi_q = srf.feature_map(sc, p["srf"], qg, is_query=True)
+            phi_q = srf.feature_map(sc, p["srf"], qg, is_query=True,
+                                    embed_seeds=es)
             phi_q = phi_q.reshape(b_, hq_, l_, -1)
             phi_k = _repeat_kv(srf.feature_map(sc, p["srf"], k,
-                                               is_query=False), g)
+                                               is_query=False,
+                                               embed_seeds=es), g)
             out, new_pool = _paged_srf(sc, cache["pool"], cache["slots"],
                                        phi_q, phi_k, _repeat_kv(v, g),
                                        cache["q_valid"])
@@ -538,8 +542,11 @@ def _mla_attention(p, cfg, x, positions, mode, cache):
             q, k, v = _mla_qkv(p, cfg, x, c_new, kpe_new, positions,
                                kpos=positions)
             sc = srf_cfg(cfg)
-            phi_q = srf.feature_map(sc, p["srf"], q, is_query=True)
-            phi_k = srf.feature_map(sc, p["srf"], k, is_query=False)
+            es = cache.get("embed_seeds")
+            phi_q = srf.feature_map(sc, p["srf"], q, is_query=True,
+                                    embed_seeds=es)
+            phi_k = srf.feature_map(sc, p["srf"], k, is_query=False,
+                                    embed_seeds=es)
             out, new_pool = _paged_srf(sc, pool, cache["slots"], phi_q,
                                        phi_k, v, q_valid)
             if cache.get("tp_axis"):

@@ -377,7 +377,9 @@ def prefill(params, cfg, batch: Dict, cache: Dict) -> Tuple[jax.Array, Dict]:
 def paged_step(params, cfg, pools: Dict, tokens: jax.Array,
                positions: jax.Array, q_valid: jax.Array,
                tables: jax.Array, slots: jax.Array,
-               tp_axis: Optional[str] = None) -> Tuple[jax.Array, Dict]:
+               tp_axis: Optional[str] = None,
+               embed_seeds: Optional[jax.Array] = None
+               ) -> Tuple[jax.Array, Dict]:
     """One batched step against pooled paged caches (serving hot path).
 
     tokens: (B, C) int32 — C = 1 for batched decode, C = prefill chunk
@@ -406,6 +408,10 @@ def paged_step(params, cfg, pools: Dict, tokens: jax.Array,
     before the replicated-wo contraction. Everything outside (self and
     cross) attention — including the ssd half of hybrid layers — is
     replicated: each shard repeats the identical constant-state update.
+
+    ``embed_seeds``: optional (B,) uint32 per-request projection seeds
+    for seeded-SRF configs (0 = base projection); forwarded into every
+    SRF attention layer's feature maps (zero-storage personalization).
     """
     dt = _dtype(cfg)
     x = layers.embed(params["embed"], tokens).astype(dt)
@@ -421,7 +427,7 @@ def paged_step(params, cfg, pools: Dict, tokens: jax.Array,
             lp, lpp, lsp = inp
             y, npp, nsp = _paged_layer(lp, cfg, kind, x, positions, q_valid,
                                        lpp, lsp, tables, slots, memory,
-                                       tp_axis)
+                                       tp_axis, embed_seeds)
             return y, (npp, nsp)
         x, (np_, ns_) = jax.lax.scan(body, x, (seg_params, pseg, sseg))
         new_paged.append(np_)
@@ -433,7 +439,8 @@ def paged_step(params, cfg, pools: Dict, tokens: jax.Array,
 
 
 def _paged_layer(p, cfg, kind: str, x, positions, q_valid, lpaged, lslot,
-                 tables, slots, memory=None, tp_axis: Optional[str] = None
+                 tables, slots, memory=None, tp_axis: Optional[str] = None,
+                 embed_seeds: Optional[jax.Array] = None
                  ) -> Tuple[jax.Array, Optional[Dict], Optional[Dict]]:
     """Single-layer paged step (mirrors ``layer_apply`` for serving).
     -> (x, new_paged_pools, new_slot_pools), each keyed by component."""
@@ -448,6 +455,8 @@ def _paged_layer(p, cfg, kind: str, x, positions, q_valid, lpaged, lslot,
     ctx = {"pool": (lslot if attn_in_slot else lpaged)["attn"],
            "tables": tables, "slots": slots, "q_valid": q_valid,
            "tp_axis": tp_axis}
+    if embed_seeds is not None:
+        ctx["embed_seeds"] = embed_seeds
     a, new_attn = attention.attention(p["attn"], cfg, h, positions, "paged",
                                       ctx)
     if kind == "hybrid":

@@ -42,7 +42,7 @@ from repro.obs import trace as obs_trace
 
 from . import paged_cache
 from .prefix import ChunkPolicy, PrefixCache, PrefixConfig, cow
-from .sampler import sample as _sample
+from .sampler import sample_stateless as _sample_stateless
 from .scheduler import SchedConfig, Scheduler, Sequence, tenant_of
 
 
@@ -56,6 +56,10 @@ class Request:
     temperature: float = 0.0         # 0 = greedy (deterministic)
     top_k: int = 0                   # 0 = disabled
     top_p: float = 1.0
+    embed_seed: int = 0              # seeded-SRF configs: personalized
+    #                                  zero-storage projection seed (0 =
+    #                                  the model's base projection); costs
+    #                                  no pool pages and no weight bytes
     enc_emb: Optional[np.ndarray] = None  # (enc_len, feat) enc-dec input
     deadline: Optional[float] = None # seconds after submit; overdue WAITING
     #                                  requests finish as 'timeout' instead
@@ -104,17 +108,28 @@ def _enc_namespace(enc_emb) -> int:
     return int.from_bytes(h.digest(), "big")
 
 
-def _cache_namespace(req) -> int:
+def _cache_namespace(req, seeded_srf: bool = False) -> int:
     """Prefix-cache trie namespace for a request: partitioned by tenant
     (requests from different namespaces must never share cache state —
     isolation beats reuse across trust boundaries) and, for enc-dec, by
     encoder-content hash. A default-tenant text-only request keeps
-    ``ns=0``, bit-identical to the pre-tenant trie layout."""
+    ``ns=0``, bit-identical to the pre-tenant trie layout.
+
+    ``seeded_srf`` engines additionally partition by ``embed_seed``:
+    personalized projections produce different attention states for the
+    same token prefix, so sharing across seeds would be unsound. Non-
+    seeded engines ignore the field (no needless sharing reduction)."""
     ns = _enc_namespace(req.enc_emb) if req.enc_emb is not None else 0
     tenant = getattr(req, "namespace", "")
     if tenant:
         h = hashlib.blake2b(tenant.encode("utf-8"), digest_size=8)
         ns ^= int.from_bytes(h.digest(), "big")
+    if seeded_srf:
+        es = getattr(req, "embed_seed", 0)
+        if es:
+            h = hashlib.blake2b(int(es).to_bytes(8, "big", signed=False),
+                                digest_size=8)
+            ns ^= int.from_bytes(h.digest(), "big")
     return ns
 
 
@@ -189,7 +204,14 @@ class Engine:
             donate_argnums=(1,))
         self._encode = (jax.jit(step_lib.make_encode_step(cfg))
                         if cfg.is_encdec else None)
-        self._rng = jax.random.PRNGKey(seed)
+        # stateless sampling: the base key never advances — per-token
+        # noise is derived as fold_in(fold_in(base, uid), position), so a
+        # request's sampled stream is independent of batch composition,
+        # admission order and replica (FT replay of sampled requests is
+        # bit-identical)
+        self._base_key = jax.random.PRNGKey(seed)
+        self._seeded_srf = (getattr(cfg, "attn_impl", None) == "srf"
+                            and getattr(cfg.srf, "seeded", False))
         # injectable step-time clock, read exactly twice per step() — the
         # replica watchdog consumes the recorded engine_step_seconds, and
         # the chaos harness simulates stalls by swapping this clock
@@ -349,8 +371,9 @@ class Engine:
         if self.prefix is not None:
             # decoder KV depends on the encoder memory, and tenants must
             # not share cache state: token-equal prompts under different
-            # encoder inputs or namespaces never cross-match
-            seq.ns = _cache_namespace(req)
+            # encoder inputs or namespaces (or, when projections are
+            # personalized, embed seeds) never cross-match
+            seq.ns = _cache_namespace(req, self._seeded_srf)
 
     def prefix_peek(self, req: Request) -> int:
         """Tokens of ``req``'s prompt this engine could serve from its
@@ -358,7 +381,8 @@ class Engine:
         router's affinity probe)."""
         if self.prefix is None:
             return 0
-        return self.prefix.peek(_cache_namespace(req), req.prompt,
+        return self.prefix.peek(_cache_namespace(req, self._seeded_srf),
+                                req.prompt,
                                 want_state=bool(self.plan.slot_families))
 
     def run(self, on_step=None) -> List[Request]:
@@ -540,27 +564,50 @@ class Engine:
                 snap.fence()
             self._pending_snaps.clear()
 
-    def _run_step(self, tokens, pos, qv, tables, slots):
+    def _run_step(self, tokens, pos, qv, tables, slots, embed_seeds=None):
         self._fence_snapshots()
+        if self._seeded_srf:
+            return self._step(self.params, self.pools, jnp.asarray(tokens),
+                              jnp.asarray(pos), jnp.asarray(qv),
+                              jnp.asarray(tables), jnp.asarray(slots),
+                              jnp.asarray(embed_seeds))
         return self._step(self.params, self.pools, jnp.asarray(tokens),
                           jnp.asarray(pos), jnp.asarray(qv),
                           jnp.asarray(tables), jnp.asarray(slots))
+
+    def _embed_seeds(self, seqs: List[Sequence], n_pad: int) -> np.ndarray:
+        """(B,) uint32 per-row projection seeds for seeded-SRF steps
+        (0 = base projection; padded rows are base)."""
+        es = np.zeros((n_pad,), np.uint32)
+        for i, s in enumerate(seqs):
+            es[i] = getattr(s.req, "embed_seed", 0) & 0xFFFFFFFF
+        return es
 
     # -- sampling -----------------------------------------------------------
 
     def _sample_rows(self, rows: jax.Array, seqs: List[Sequence],
                      n_pad: int) -> np.ndarray:
+        """Stateless per-request sampling: row i's noise is keyed by
+        (base_key, uid, emitted-token index), never by engine RNG state —
+        the token a request samples at position p is the same whatever
+        batch it lands in (and on whatever replica; FT replay re-derives
+        the identical keys from the forced-prefix high-water mark)."""
         temps = np.zeros((n_pad,), np.float32)
         ks = np.zeros((n_pad,), np.int32)
         ps = np.ones((n_pad,), np.float32)
+        uids = np.zeros((n_pad,), np.uint32)
+        poss = np.zeros((n_pad,), np.int32)
         for i, s in enumerate(seqs):
             temps[i] = s.req.temperature
             ks[i] = s.req.top_k
             ps[i] = s.req.top_p
+            uids[i] = s.req.uid & 0xFFFFFFFF    # negative uids (probes) wrap
+            poss[i] = len(s.req.out_tokens)     # index of the token drawn
         stok = self.spans.begin("sample")
-        self._rng, sub = jax.random.split(self._rng)
-        toks = _sample(sub, rows, jnp.asarray(temps), jnp.asarray(ks),
-                       jnp.asarray(ps))
+        toks = _sample_stateless(self._base_key, jnp.asarray(uids),
+                                 jnp.asarray(poss), rows,
+                                 jnp.asarray(temps), jnp.asarray(ks),
+                                 jnp.asarray(ps))
         out = np.asarray(toks)
         self.spans.end(stok)
         return out
@@ -617,7 +664,10 @@ class Engine:
             if seq.prefill_done:
                 finishing[i] = seq
                 last_row[i] = n - 1
-        logits, self.pools = self._run_step(tokens, pos, qv, tables, slots)
+        es = (self._embed_seeds([s for s, _ in planned], b)
+              if self._seeded_srf else None)
+        logits, self.pools = self._run_step(tokens, pos, qv, tables, slots,
+                                            es)
         rows = jnp.take_along_axis(
             logits[:, :, : self.cfg.vocab],
             jnp.asarray(last_row)[:, None, None], axis=1)[:, 0]
@@ -795,7 +845,9 @@ class Engine:
             qv[i, 0] = True
             tables[i] = seq.table.padded(m)
             slots[i] = seq.slot or 0
-        logits, self.pools = self._run_step(tokens, pos, qv, tables, slots)
+        es = self._embed_seeds(batch, b) if self._seeded_srf else None
+        logits, self.pools = self._run_step(tokens, pos, qv, tables, slots,
+                                            es)
         toks = self._sample_rows(logits[:, 0, : self.cfg.vocab], batch, b)
         now = time.perf_counter()
         for i, seq in enumerate(batch):

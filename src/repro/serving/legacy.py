@@ -17,7 +17,11 @@ SRF state (the paper's O(m d) cache), SSD state, hybrid, enc-dec (each
 :class:`Request` may carry its own ``enc_emb`` frontend features).
 
 For simplicity slots share a common max_len; prefill runs per-request
-(batch-1) and writes into the slot. Greedy decoding; EOS or max_new stops.
+(batch-1) and writes into the slot. Sampling uses the SAME stateless
+per-request keys as the paged engine (``sampler.sample_stateless``:
+noise from ``(base_key, uid, token index)``, never from engine state) —
+that is what lets the parity matrix pin sampled decode bit-exactly
+paged-vs-legacy, not just greedy. EOS or max_new stops.
 """
 from __future__ import annotations
 
@@ -32,6 +36,7 @@ import numpy as np
 from repro.launch import steps as step_lib
 from repro.models import transformer as model_lib
 from .engine import Request
+from .sampler import sample_stateless as _sample_stateless
 
 warnings.warn(
     "repro.serving.legacy is deprecated; use the paged engine "
@@ -43,7 +48,7 @@ warnings.warn(
 
 class Engine:
     def __init__(self, cfg, params, batch_slots: int = 4,
-                 max_len: int = 512):
+                 max_len: int = 512, seed: int = 0):
         self.cfg = cfg
         self.params = params
         self.slots = batch_slots
@@ -56,10 +61,28 @@ class Engine:
         self.active: List[Optional[Request]] = [None] * batch_slots
         self.queue: List[Request] = []
         self.stats: Dict[str, float] = {"tokens": 0, "requests": 0}
+        # stateless sampling keys: identical derivation to the paged
+        # engine (fold_in(fold_in(base, uid), position)), so a request
+        # sampled here and there draws the same noise at every token
+        self._base_key = jax.random.PRNGKey(seed)
 
     def submit(self, req: Request):
         req.t_submit = time.perf_counter()
         self.queue.append(req)
+
+    def _pick(self, req: Request, logits: jax.Array) -> int:
+        """Sample one token for ``req`` from (V,) logits; batch-1 call of
+        the shared stateless sampler (bit-identical to any batched call
+        with the same (uid, position) — that is the whole point)."""
+        toks = _sample_stateless(
+            self._base_key,
+            jnp.asarray([req.uid & 0xFFFFFFFF], jnp.uint32),
+            jnp.asarray([len(req.out_tokens)], jnp.int32),
+            logits[None, :],
+            jnp.asarray([req.temperature], jnp.float32),
+            jnp.asarray([req.top_k], jnp.int32),
+            jnp.asarray([req.top_p], jnp.float32))
+        return int(np.asarray(toks)[0])
 
     def _fill_slots(self, extra_batch: Optional[Dict] = None):
         for i in range(self.slots):
@@ -76,7 +99,7 @@ class Engine:
                     batch.update(extra_batch)
                 cache = model_lib.init_serve_cache(self.cfg, 1, self.max_len)
                 logits, cache = self._prefill(self.params, batch, cache)
-                nxt = int(jnp.argmax(logits[0, -1, : self.cfg.vocab]))
+                nxt = self._pick(req, logits[0, -1, : self.cfg.vocab])
                 req.out_tokens.append(nxt)
                 now = time.perf_counter()
                 req.t_first = now
@@ -94,9 +117,9 @@ class Engine:
             if req is None:
                 continue
             tok = jnp.asarray([[req.out_tokens[-1]]], jnp.int32)
-            nxt, _, cache = self._step(self.params, self.caches[i], tok)
+            _, logits, cache = self._step(self.params, self.caches[i], tok)
             self.caches[i] = cache
-            t = int(nxt[0, 0])
+            t = self._pick(req, logits[0])
             req.out_tokens.append(t)
             self.stats["tokens"] += 1
             if t == req.eos_id or len(req.out_tokens) >= req.max_new:

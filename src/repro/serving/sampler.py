@@ -5,6 +5,14 @@ One jit'd, fully batched sampler: every request carries its own
 in a single call with no per-request branching. ``temperature <= 0``
 selects greedy argmax for that row (the engine's default, which keeps
 decoding deterministic for tests).
+
+Engines draw through :func:`sample_stateless`: the noise for row ``i``
+is a pure function of ``(base_key, uid[i], position[i])`` — NOT of any
+engine-side RNG state, batch composition, admission order, or replica.
+That is the sampling-key contract fault-tolerant replay relies on: a
+rescued request replays the exact keys its killed replica would have
+used, so temperature-sampled streams are bit-identical across rescue
+(``serving/README.md`` §sampling determinism).
 """
 from __future__ import annotations
 
@@ -46,6 +54,52 @@ def sample(rng: jax.Array, logits: jax.Array, temperature: jax.Array,
 
     masked = jnp.where(keep, sorted_logits, -jnp.inf)
     g = jax.random.gumbel(rng, (b, v), jnp.float32)
+    pick_sorted = jnp.argmax(masked + g, axis=-1)          # (B,)
+    sampled = jnp.take_along_axis(order, pick_sorted[:, None], axis=-1)[:, 0]
+    argmax = jnp.argmax(lf, axis=-1)
+    return jnp.where(greedy, argmax, sampled).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def sample_stateless(base_key: jax.Array, uids: jax.Array,
+                     positions: jax.Array, logits: jax.Array,
+                     temperature: jax.Array, top_k: jax.Array,
+                     top_p: jax.Array) -> jax.Array:
+    """Per-request stateless sampling: same masking math as
+    :func:`sample`, but row ``i``'s Gumbel noise comes from the derived
+    key ``fold_in(fold_in(base_key, uids[i]), positions[i])`` instead of
+    one batch-wide key. uids/positions: (B,) int32 (padded rows may carry
+    anything — their key is drawn but their token is discarded).
+
+    Because each row's draw depends only on its own (uid, position), the
+    sampled stream of a request is invariant to batch composition and
+    batch slot — a batch-1 replay (e.g. the legacy engine, or a rescue
+    replica re-running a lone request) reproduces it bit for bit.
+    """
+    b, v = logits.shape
+    lf = logits.astype(jnp.float32)
+    greedy = temperature <= 0.0
+    temp = jnp.where(greedy, 1.0, jnp.maximum(temperature, 1e-6))
+    scaled = lf / temp[:, None]
+
+    order = jnp.argsort(-scaled, axis=-1)                  # (B, V) desc
+    sorted_logits = jnp.take_along_axis(scaled, order, axis=-1)
+    ranks = jnp.arange(v)[None, :]
+    k_eff = jnp.where(top_k <= 0, v, top_k)[:, None]
+    keep = ranks < k_eff
+
+    probs = jax.nn.softmax(sorted_logits, axis=-1)
+    cum = jnp.cumsum(probs, axis=-1)
+    keep &= (cum - probs) < top_p[:, None]
+    keep |= ranks == 0
+
+    masked = jnp.where(keep, sorted_logits, -jnp.inf)
+
+    def row_gumbel(uid, position):
+        k = jax.random.fold_in(jax.random.fold_in(base_key, uid), position)
+        return jax.random.gumbel(k, (v,), jnp.float32)
+
+    g = jax.vmap(row_gumbel)(uids, positions)              # (B, V)
     pick_sorted = jnp.argmax(masked + g, axis=-1)          # (B,)
     sampled = jnp.take_along_axis(order, pick_sorted[:, None], axis=-1)[:, 0]
     argmax = jnp.argmax(lf, axis=-1)

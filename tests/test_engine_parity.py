@@ -5,10 +5,15 @@ Greedy cells must BIT-MATCH the legacy engine for >= 8 concurrent
 mixed-length requests — continuous batching, chunked prefill, paged
 gathers, per-request encoder memories and hybrid attn+SSM fusion may
 change how the work is scheduled, never what tokens come out.
-Temperature cells pin seeded-sampling determinism: the legacy oracle is
-greedy-only, so they assert that two identically-seeded paged runs are
-bit-identical (and that a different seed actually changes something
-somewhere — the sampler is not a disguised argmax).
+Temperature cells pin sampling determinism twice over: two
+identically-seeded paged runs are bit-identical (and a different seed
+actually changes something somewhere — the sampler is not a disguised
+argmax), AND the paged engine bit-matches the legacy oracle at
+temperature > 0. The latter only holds because both engines derive
+per-token noise statelessly from ``(base_key, uid, position)``
+(``sampler.sample_stateless``) — an engine-side RNG would make sampled
+tokens depend on batch composition and admission order, which differ
+between the two engines by construction.
 
 MoE archs run with a generous ``moe_capacity_factor``: capacity drops
 are batch-composition-dependent BY DESIGN (tokens compete per group for
@@ -114,6 +119,27 @@ def test_seeded_sampling_deterministic(arch):
     assert a == b                                # same seed: bit-identical
     assert all(0 <= t < cfg.vocab for toks in a.values() for t in toks)
     assert c != a or cfg.vocab <= 2              # the seed is actually live
+
+
+@pytest.mark.parametrize("arch", CELLS)
+def test_sampled_bitmatch_legacy(arch):
+    """temperature > 0 cells: stateless per-request sampling keys make the
+    sampled stream a pure function of (base_key, uid, token index), so
+    the paged engine must BIT-MATCH the legacy per-slot oracle even
+    though the two engines batch, schedule and pad completely
+    differently. This is the regression test for the engine-wide
+    ``split(self._rng)`` bug, where sampled tokens depended on batch
+    composition and admission order."""
+    cfg = _cfg(arch)
+    params = T.init(jax.random.PRNGKey(0), cfg)
+    n = 8
+    paged = _drive(Engine(cfg, params, batch_slots=4, max_len=64, seed=5),
+                   _requests(cfg, n, temperature=0.8))
+    legacy = _drive(_legacy().Engine(cfg, params, batch_slots=4, max_len=64,
+                                     seed=5),
+                    _requests(cfg, n, temperature=0.8))
+    assert len(paged) == n
+    assert paged == legacy
 
 
 @pytest.mark.parametrize("arch", ["hymba-1.5b", "seamless-m4t-large-v2"])

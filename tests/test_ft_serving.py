@@ -180,6 +180,53 @@ def test_chaos_matrix(arch, kind):
     _check_conservation(reg, engines)
 
 
+def test_chaos_sampled_decode_bitmatch():
+    """Sampled decode (temperature > 0) survives a mid-decode replica
+    kill bit-exactly. Sampling noise is stateless per
+    ``(base_key, uid, token index)`` — never engine RNG state — so when
+    replicas share a base sampling seed, the rescue replica replays
+    exactly the noise the killed replica would have drawn and the
+    rescued streams bit-match an undisturbed single-engine run. (The
+    old engine-wide ``split(self._rng)`` keying made this impossible:
+    replayed tokens depended on how the rescue batch happened to be
+    composed.)"""
+    cfg, params, blue, _ = _setup("qwen3-4b")
+
+    def sampled_requests():
+        return [Request(uid=i, prompt=p.copy(), max_new=MAX_NEW, enc_emb=e,
+                        temperature=0.9, top_k=50, top_p=0.95)
+                for i, (p, e) in enumerate(blue)]
+
+    ref = sampled_requests()
+    eng = Engine(cfg, params, batch_slots=2, max_len=64, seed=0)
+    for r in ref:
+        eng.submit(r)
+    eng.run()
+    want = {r.uid: list(r.out_tokens) for r in ref}
+    assert any(want[i] != _setup("qwen3-4b")[3][i] for i in want), \
+        "sampling produced pure argmax streams; cell is vacuous"
+
+    reg = MetricsRegistry()
+    engines = [Engine(cfg, params, batch_slots=2, max_len=64, seed=0,
+                      metrics=reg) for _ in range(2)]
+    engines[1] = ChaosEngine(engines[1], ChaosPlan("raise", at_step=4))
+    router = Router(engines, cfg=RouterConfig(migrate=False), metrics=reg,
+                    ft=FTConfig(grace_steps=2, stuck_rounds=3))
+    reqs = sampled_requests()
+    for r in reqs:
+        router.submit(r)
+    router.run()
+
+    assert all(r.done for r in reqs)
+    assert all(r.finish_reason in ("eos", "length") for r in reqs)
+    assert {r.uid: list(r.out_tokens) for r in reqs} == want
+    # the kill actually happened and rescue actually ran
+    assert reg.value_sum("router_quarantined_total") == 1
+    assert reg.value_sum("router_rescued_total") + \
+        reg.value_sum("router_replayed_total") >= 1
+    assert reg.value_sum("router_failed_total") == 0
+
+
 # ---------------------------------------------------------------------------
 # chaos harness
 # ---------------------------------------------------------------------------

@@ -313,3 +313,67 @@ def test_engine_sampled_run_completes():
     assert len(done) == 4
     assert all(len(r.out_tokens) == 6 for r in done)
     assert all(0 <= t < cfg.vocab for r in done for t in r.out_tokens)
+
+
+# ---------------------------------------------------------------------------
+# seeded SRF: per-request zero-storage personalized projections
+# ---------------------------------------------------------------------------
+
+def _seeded_srf_cfg():
+    import dataclasses
+    cfg = registry.reduced("qwen3-4b", n_layers=2, attn_impl="srf")
+    return dataclasses.replace(
+        cfg, srf=dataclasses.replace(cfg.srf, seeded=True))
+
+
+def test_seeded_srf_engine_personalizes_per_request():
+    """Requests carry ``embed_seed``: same prompt, different seeds →
+    different (personalized) greedy streams; same seed → bit-identical
+    regardless of which other requests share the batch. embed_seed=0 is
+    the shared base projection. No per-request projection weights exist
+    anywhere — the kernel regenerates them from the folded seed."""
+    cfg = _seeded_srf_cfg()
+    params = T.init(jax.random.PRNGKey(0), cfg)
+    # the SRF projection params really are seeds — one uint32 per
+    # (layer, head), no float matrices (zero storage in n_features)
+    seeds = [l for l in jax.tree_util.tree_leaves(params)
+             if l.dtype == jnp.uint32]
+    assert seeds and all(l.size <= cfg.n_layers * cfg.n_heads
+                         for l in seeds)
+    prompt = np.arange(9, dtype=np.int32)
+
+    def run(seeds):
+        eng = Engine(cfg, params, batch_slots=4, max_len=64)
+        for i, es in enumerate(seeds):
+            eng.submit(Request(uid=i, prompt=prompt.copy(), max_new=6,
+                               embed_seed=es))
+        return {r.uid: list(r.out_tokens) for r in eng.run()}
+
+    mixed = run([0, 123, 777])
+    assert mixed[1] != mixed[0], "embed_seed=123 did not personalize"
+    assert mixed[2] != mixed[1]
+    # batch-composition invariance: each stream reproduces solo
+    assert run([123])[0] == mixed[1]
+    assert run([0])[0] == mixed[0]
+    # determinism: rerun bit-identical
+    assert run([0, 123, 777]) == mixed
+
+
+def test_seeded_srf_zero_embed_matches_unseeded_semantics():
+    """The base (embed_seed=0) projection is one fixed per-head seed set:
+    an all-base batch equals a batch submitted without touching
+    embed_seed at all (the default)."""
+    cfg = _seeded_srf_cfg()
+    params = T.init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab, int(rng.integers(3, 14)))
+               .astype(np.int32) for _ in range(5)]
+
+    def run(with_field):
+        eng = Engine(cfg, params, batch_slots=4, max_len=64)
+        for i, p in enumerate(prompts):
+            kw = {"embed_seed": 0} if with_field else {}
+            eng.submit(Request(uid=i, prompt=p.copy(), max_new=5, **kw))
+        return {r.uid: list(r.out_tokens) for r in eng.run()}
+
+    assert run(True) == run(False)

@@ -415,3 +415,80 @@ def test_spinner_plan_dtype_separates_cache_entries():
                                           min(b16[1], m), True,
                                           "identity", 4)
     assert b16_as_f32 > kops._VMEM_BUDGET    # the shared-plan bug this fixes
+
+
+# ---------------------------------------------------------------------------
+# seeded (zero-storage) pipelines
+# ---------------------------------------------------------------------------
+
+def test_seeded_pipeline_matches_dense_oracle():
+    """seeded=True: params are one uint32 per block, yet the pipeline's
+    output matches the dense product of the regenerated matrices (the
+    oracle materializes through the same generator)."""
+    pipe = spinner.hd_chain("circulant", n=16, m=24, depth=2, seeded=True)
+    params = pipe.init(jax.random.PRNGKey(0))
+    assert all(set(p) == {"seed"} for p in params)
+    x = jax.random.normal(jax.random.PRNGKey(1), (5, 16)) * 0.05
+    y = pipe.apply(params, x, y_scale=0.7, out_scale=1.3)
+    yo = _oracle(pipe, params, x, y_scale=0.7, out_scale=1.3)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yo),
+                               rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_seeded_single_bitmatches_materialized_twin(kind):
+    """A seeded block applied == the SAME pipeline with the generator-
+    oracle params materialized up front, bit for bit, for every kind."""
+    from repro.kernels import seedgen
+    pipe_s = spinner.single(kind, m=96, n=64, seeded=True)
+    pipe_m = spinner.single(kind, m=96, n=64)
+    params_s = pipe_s.init(jax.random.PRNGKey(0))
+    oracle = (seedgen.seeded_params(kind, 64, 96, params_s[0]["seed"]),)
+    x = jax.random.normal(jax.random.PRNGKey(1), (7, 64)) * 0.1
+    np.testing.assert_array_equal(np.asarray(pipe_s.apply(params_s, x)),
+                                  np.asarray(pipe_m.apply(oracle, x)))
+
+
+def test_seeded_storage_is_o1():
+    """Acceptance: seeded storage is O(1) in (n, m) — one scalar per
+    block — while the dense twin grows with the matrix."""
+    big = spinner.hd_chain("circulant", n=512, m=2048, depth=2, seeded=True)
+    small = spinner.hd_chain("circulant", n=16, m=32, depth=2, seeded=True)
+    assert big.storage == small.storage == 2
+    assert spinner.hd_chain("circulant", n=512, m=2048, depth=2).storage \
+        > 1000
+    params = big.init(jax.random.PRNGKey(0))
+    for p in params:
+        assert p["seed"].shape == () and p["seed"].dtype == jnp.uint32
+
+
+def test_seeded_config_roundtrip_and_apply_identical():
+    pipe = spinner.hd_chain("toeplitz", n=16, m=24, depth=2, seeded=True)
+    pipe2 = spinner.loads(spinner.dumps(pipe))
+    assert pipe2 == pipe and all(b.seeded for b in pipe2.blocks)
+    params = pipe.init(jax.random.PRNGKey(2))
+    x = jax.random.normal(jax.random.PRNGKey(3), (3, 16)) * 0.1
+    np.testing.assert_array_equal(np.asarray(pipe.apply(params, x)),
+                                  np.asarray(pipe2.apply(params, x)))
+
+
+def test_seeded_rejects_unregenerable_kind():
+    """Custom registered kinds have no positional generator; seeded mode
+    must refuse them at construction, not fail at dispatch."""
+    _ensure_test_registrations()
+    with pytest.raises(ValueError, match="seeded"):
+        SpinnerBlock("diag_test", 8, 8, seeded=True)
+
+
+def test_seeded_row_moments_regenerate():
+    """Gaussianity diagnostics work on seeded blocks by regenerating the
+    oracle params — moments match the materialized twin exactly."""
+    from repro.kernels import seedgen
+    blk = SpinnerBlock("circulant", 48, 32, seeded=True)
+    params = blk.init(jax.random.PRNGKey(4))
+    mean_s, var_s = blk.row_gaussianity_moments(params)
+    twin = SpinnerBlock("circulant", 48, 32)
+    oracle = seedgen.seeded_params("circulant", 32, 48, params["seed"])
+    mean_m, var_m = twin.row_gaussianity_moments(oracle)
+    np.testing.assert_array_equal(np.asarray(mean_s), np.asarray(mean_m))
+    np.testing.assert_array_equal(np.asarray(var_s), np.asarray(var_m))

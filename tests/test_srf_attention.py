@@ -120,3 +120,71 @@ def test_phi_softmax_pos_stabilized_large_norm_finite():
     ref = jnp.exp(z) / jnp.sqrt(jnp.asarray(spec.m, jnp.float32))
     np.testing.assert_allclose(np.asarray(phi), np.asarray(ref),
                                rtol=1e-5, atol=1e-7)
+
+
+# ---------------------------------------------------------------------------
+# seeded mode: zero-storage projections + per-request embed seeds
+# ---------------------------------------------------------------------------
+
+def test_seeded_srf_approximates_softmax():
+    """Zero-storage projections are the same random features — the
+    softmax-approximation quality bar holds unchanged."""
+    cfg = A.SRFConfig(kind="circulant", n_features=512, head_dim=32,
+                      chunk=16, seeded=True)
+    params = A.init(jax.random.PRNGKey(0), cfg, n_kv_heads=2)
+    assert all(set(p) == {"seed"} for p in params)
+    q, k, v = _qkv(jax.random.PRNGKey(1))
+    pq = A.feature_map(cfg, params, q, True)
+    pk = A.feature_map(cfg, params, k, False)
+    out = A.attention_causal(cfg, pq, pk, v)
+    refo = A.reference_softmax(q, k, v, causal=True)
+    corr = float(jnp.corrcoef(out.ravel(), refo.ravel())[0, 1])
+    assert corr > 0.9, corr
+
+
+def test_embed_seed_zero_is_base_projection():
+    """embed_seed 0 is the sentinel for 'base projection': a batch of
+    zeros must be BIT-identical to calling without embed_seeds (that is
+    what lets mixed personalized/base batches share one jit program)."""
+    cfg = A.SRFConfig(kind="circulant", n_features=128, head_dim=32,
+                      chunk=16, seeded=True)
+    params = A.init(jax.random.PRNGKey(0), cfg, n_kv_heads=2)
+    q, _, _ = _qkv(jax.random.PRNGKey(1))
+    base = A.feature_map(cfg, params, q, True)
+    zeros = A.feature_map(cfg, params, q, True,
+                          embed_seeds=jnp.zeros((q.shape[0],), jnp.uint32))
+    np.testing.assert_array_equal(np.asarray(base), np.asarray(zeros))
+
+
+def test_embed_seed_personalizes_per_request_batch_invariant():
+    """Row i's features depend ONLY on its own embed seed: changing a
+    neighbor's seed (or the batch composition) never changes row i, and a
+    nonzero seed actually produces a different projection."""
+    cfg = A.SRFConfig(kind="circulant", n_features=128, head_dim=32,
+                      chunk=16, seeded=True)
+    params = A.init(jax.random.PRNGKey(0), cfg, n_kv_heads=2)
+    q, _, _ = _qkv(jax.random.PRNGKey(1))           # (2, 2, 64, 32)
+    base = A.feature_map(cfg, params, q, True)
+    e1 = jnp.asarray([5, 0], jnp.uint32)
+    e2 = jnp.asarray([5, 9], jnp.uint32)
+    p1 = A.feature_map(cfg, params, q, True, embed_seeds=e1)
+    p2 = A.feature_map(cfg, params, q, True, embed_seeds=e2)
+    # row 0 identical across batches; row 1 flips base -> personalized
+    np.testing.assert_array_equal(np.asarray(p1[0]), np.asarray(p2[0]))
+    np.testing.assert_array_equal(np.asarray(p1[1]), np.asarray(base[1]))
+    assert not np.allclose(np.asarray(p1[0]), np.asarray(base[0]))
+    assert not np.allclose(np.asarray(p2[1]), np.asarray(base[1]))
+    # batch-1 call reproduces the same personalized row bit-for-bit
+    solo = A.feature_map(cfg, params, q[:1], True,
+                         embed_seeds=jnp.asarray([5], jnp.uint32))
+    np.testing.assert_array_equal(np.asarray(solo[0]), np.asarray(p1[0]))
+
+
+def test_embed_seeds_require_seeded_cfg():
+    cfg = A.SRFConfig(kind="circulant", n_features=128, head_dim=32,
+                      chunk=16)
+    params = A.init(jax.random.PRNGKey(0), cfg, n_kv_heads=2)
+    q, _, _ = _qkv(jax.random.PRNGKey(1))
+    with pytest.raises(ValueError, match="seeded"):
+        A.feature_map(cfg, params, q, True,
+                      embed_seeds=jnp.zeros((2,), jnp.uint32))
